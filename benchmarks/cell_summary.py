@@ -1,0 +1,37 @@
+"""Print a one-line roofline summary for dry-run cells."""
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def line(arch, shape, mesh="pod1"):
+    path = os.path.join(RESULTS, mesh, f"{arch}__{shape}.json")
+    if not os.path.exists(path):
+        return f"{arch} {shape}: MISSING"
+    d = json.load(open(path))
+    if d.get("status") != "OK":
+        return f"{arch} {shape}: {d.get('status')}"
+    r = d["roofline"]
+    peak = d.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30
+    return (f"{arch:18s} {shape:12s} comp={r['compute_s']:.4g} mem={r['memory_s']:.4g} "
+            f"coll={r['collective_s']:.4g} (raw {r.get('collective_s_raw', 0):.4g}) "
+            f"dom={r['dominant'].replace('_s','')} useful={r['useful_flops_ratio']:.2f} "
+            f"peak={peak:.1f}GiB")
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not args:
+        for m in ("pod1", "pod2"):
+            d = os.path.join(RESULTS, m)
+            if not os.path.isdir(d):
+                continue
+            for name in sorted(os.listdir(d)):
+                a, s = name[:-5].split("__")
+                print(m, line(a, s, m))
+    else:
+        for spec in args:
+            a, s = spec.split(":")
+            print(line(a, s))

@@ -1,0 +1,84 @@
+"""Shared benchmark scaffolding: the paper's protocol at reduced scale.
+
+Every Table-1 benchmark runs the same three-way comparison the paper runs:
+  float baseline  vs  SYMOG N-bit (train→post-quantize)  vs  naive post-quant
+on a deterministic synthetic stand-in for the dataset (offline container).
+Numbers are RELATIVE reproductions — the ordering/gap pattern is the claim
+under test, not absolute CIFAR error rates (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import core, optim
+from repro.data import SyntheticImages, SyntheticImagesConfig
+from repro.models.cnn import CNNConfig, cnn_init
+from repro.train import CNNTrainState, make_cnn_eval, make_cnn_train_step
+
+
+def run_symog_protocol(
+    cnn_cfg: CNNConfig,
+    *,
+    data_cfg: SyntheticImagesConfig,
+    pretrain_steps: int,
+    symog_steps: int,
+    n_bits: int = 2,
+    lr0: float = 0.02,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Returns error rates: float / symog_quantized / naive_quantized, plus
+    the relative quantization errors and wall time."""
+    t0 = time.time()
+    data = SyntheticImages(data_cfg)
+    key = jax.random.PRNGKey(seed)
+    params, bn = cnn_init(key, cnn_cfg)
+    tx = optim.sgd(momentum=0.9, nesterov=True)
+    lr = core.linear_lr(lr0, lr0 / 10, pretrain_steps + symog_steps)
+
+    # 1) float pretrain (paper: "initialize with an accurate fp model")
+    step_f = jax.jit(make_cnn_train_step(cnn_cfg, tx, lr))
+    st = CNNTrainState(params, bn, tx.init(params), None, jnp.zeros((), jnp.int32))
+    for _ in range(pretrain_steps):
+        st, _ = step_f(st, next(data))
+
+    # 2) SYMOG finetune (Alg. 1)
+    scfg = core.SymogConfig(n_bits=n_bits, total_steps=symog_steps)
+    sst = core.symog_init(st.params, scfg)
+    step_s = jax.jit(make_cnn_train_step(cnn_cfg, tx, lr, symog_cfg=scfg))
+    st2 = CNNTrainState(st.params, st.bn_state, tx.init(st.params), sst,
+                        jnp.zeros((), jnp.int32))
+    for _ in range(symog_steps):
+        st2, _ = step_s(st2, next(data))
+
+    # 3) evaluate: float vs SYMOG-post-quant vs naive-post-quant
+    ev = make_cnn_eval(cnn_cfg)
+    test = [data.peek(100_000 + i) for i in range(16)]
+
+    def err(p, b):
+        return 1.0 - float(np.mean([ev(p, b, t) for t in test]))
+
+    q_symog = core.quantize_tree(st2.params, sst, scfg)
+    naive_sst = core.symog_init(st.params, scfg)
+    q_naive = core.quantize_tree(st.params, naive_sst, scfg)
+
+    qm_symog = core.quant_error_metrics(st2.params, sst, scfg)
+    qm_naive = core.quant_error_metrics(st.params, naive_sst, scfg)
+    return {
+        "err_float": err(st.params, st.bn_state),
+        "err_symog_q": err(q_symog, st2.bn_state),
+        "err_naive_q": err(q_naive, st.bn_state),
+        "rel_qerr_symog": float(qm_symog["rel_quant_error"]),
+        "rel_qerr_naive": float(qm_naive["rel_quant_error"]),
+        "seconds": time.time() - t0,
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,91 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+loop — timing them is meaningless), so we report:
+  * us/call of the jitted *semantic equivalents* (fused single-expression
+    vs unfused multi-pass) on CPU — the fusion structure XLA sees;
+  * the DERIVED traffic model for TPU (bytes in/out per element), which is
+    what the kernel actually buys on hardware (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro import core
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    n = 1 << 20  # 1M params
+    w = jax.random.normal(key, (n,)) * 0.3
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 0.05
+    v = jnp.zeros_like(w)
+    delta, lam, lr, mu = 0.25, 2.0, 0.01, 0.9
+
+    @jax.jit
+    def unfused(w, g, v):
+        # Alg.1 l.15-17 as separate passes (materialized intermediates)
+        q = core.quantize(w, delta, 2)
+        rg = (2.0 / w.size) * (w - q)
+        g_tot = g + lam * rg
+        v2 = mu * v + g_tot
+        w2 = w - lr * (g_tot + mu * v2)
+        return core.clip_to_range(w2, delta, 2), v2
+
+    @jax.jit
+    def fused(w, g, v):
+        # single expression — what kernels/symog_update implements on TPU
+        q = jnp.clip(jnp.round(w / delta), -1, 1) * delta
+        g_tot = g + (lam * 2.0 / w.size) * (w - q)
+        v2 = mu * v + g_tot
+        return jnp.clip(w - lr * (g_tot + mu * v2), -delta, delta), v2
+
+    t_unfused = _time(unfused, w, g, v)
+    t_fused = _time(fused, w, g, v)
+    emit("symog_update_unfused_1M", t_unfused, "jnp multi-pass (CPU)")
+    emit("symog_update_fused_1M", t_fused,
+         f"speedup_vs_unfused={t_unfused / t_fused:.2f}x")
+    # TPU traffic model: unfused ~10 streams (r/w per pass) vs fused 5
+    emit("symog_update_traffic_model", 0.0,
+         "fused=5 streams (r:w,g,v; w:w',v') vs naive>=10 -> >=2x HBM saving")
+
+    # fixed-point matmul: bytes per weight
+    K, N = 2048, 2048
+    wkn = jax.random.normal(key, (K, N)) * 0.2
+    x = jax.random.normal(jax.random.fold_in(key, 2), (8, K))
+
+    @jax.jit
+    def dense(x, w):
+        return x @ w
+
+    t_dense = _time(dense, x, wkn)
+    emit("matmul_dense_f32_8x2048x2048", t_dense, "baseline x@W (CPU)")
+    emit("fixedpoint_matmul_traffic_model", 0.0,
+         f"weight_bytes: f32={K * N * 4}, bf16={K * N * 2}, packed2bit={K * N // 4}"
+         " -> 8x less HBM than bf16 (decode is weight-bandwidth-bound)")
+
+    # correctness cross-check vs kernel oracle (tiny, interpret mode)
+    from repro.kernels import fixedpoint_matmul, pack_weight
+
+    pw = pack_weight(wkn[:256, :256], 2, 2)
+    y = fixedpoint_matmul(x[:, :256], pw, 2, n_bits=2, n_out=256)
+    qw = core.quantize(wkn[:256, :256], core.delta_from_f(2), 2)
+    err = float(jnp.max(jnp.abs(y - x[:, :256] @ qw)))
+    emit("fixedpoint_matmul_exactness", 0.0, f"max_abs_err_vs_quantized_float={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

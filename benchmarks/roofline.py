@@ -1,0 +1,101 @@
+"""Roofline report: aggregates the dry-run JSONs into the §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh pod1|pod2] [--md]
+
+Per (arch × shape): the three roofline terms (compute / memory / collective,
+seconds per step per device), the dominant term, MODEL_FLOPS = 6·N·D (or
+2·N·D per serve token; N = active params), the useful-FLOPs ratio, and the
+achievable roofline fraction  model_time_at_peak / max(term)  — the §Perf
+score for that cell.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+PEAK = 197e12  # bf16 FLOP/s per v5e chip
+
+
+def load(mesh: str) -> List[Dict]:
+    d = os.path.join(RESULTS, mesh)
+    recs = []
+    if not os.path.isdir(d):
+        return recs
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fraction(rec: Dict) -> Optional[float]:
+    """Roofline fraction: ideal model-FLOPs time / dominant-term time."""
+    if rec.get("status") != "OK":
+        return None
+    r = rec["roofline"]
+    ideal = r["model_flops_per_chip"] / PEAK
+    worst = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return ideal / worst if worst > 0 else None
+
+
+def table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_flops | roofline_frac | peak_mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh):
+        shape = rec["shape"] + (" (q2)" if rec.get("quantized") else "")
+        if rec.get("status") == "SKIP":
+            if not rec.get("quantized"):
+                rows.append(f"| {rec['arch']} | {shape} | — | — | — | SKIP | — | — | — |")
+            continue
+        if rec.get("status") != "OK":
+            rows.append(f"| {rec['arch']} | {shape} | ERROR | | | | | | |")
+            continue
+        r = rec["roofline"]
+        frac = fraction(rec)
+        peak_gb = rec.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30
+        mem = r["memory_s_resident"] if "memory_s_resident" in r else r["memory_s"]
+        rows.append(
+            f"| {rec['arch']} | {shape} | {r['compute_s']:.3g} | "
+            f"{mem:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant'].replace('_s', '')} | {r['useful_flops_ratio']:.2f} | "
+            f"{frac:.3f} | {peak_gb:.2f} GiB |"
+        )
+    return "\n".join(rows)
+
+
+def run() -> None:
+    """CSV hook for benchmarks.run — one line per cell."""
+    from benchmarks.common import emit
+
+    for mesh in ("pod1", "pod2"):
+        for rec in load(mesh):
+            if rec.get("status") != "OK":
+                emit(f"roofline_{mesh}_{rec['arch']}_{rec['shape']}", 0.0,
+                     f"status={rec.get('status')}")
+                continue
+            frac = fraction(rec)
+            r = rec["roofline"]
+            emit(
+                f"roofline_{mesh}_{rec['arch']}_{rec['shape']}",
+                max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                f"dominant={r['dominant']};frac={frac:.3f}",
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1", choices=("pod1", "pod2"))
+    args = ap.parse_args()
+    print(f"## Roofline — mesh {args.mesh} "
+          f"({'16x16 (256 chips)' if args.mesh == 'pod1' else '2x16x16 (512 chips)'})\n")
+    print(table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

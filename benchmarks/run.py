@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+Sections: Table 1 (MNIST / CIFAR-10 / CIFAR-100 protocol at reduced
+synthetic scale), Figure 3 (mode formation), Figure 4 (clipping vs
+adaptation), kernel microbenches, and the roofline summary from the
+dry-run artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter of sections")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig3_distributions,
+        fig4_adaptation,
+        kernel_bench,
+        roofline,
+        table1_cifar10,
+        table1_cifar100,
+        table1_mnist,
+    )
+
+    sections = [
+        ("table1_mnist", table1_mnist.run),
+        ("table1_cifar10", table1_cifar10.run),
+        ("table1_cifar100", table1_cifar100.run),
+        ("fig3_distributions", fig3_distributions.run),
+        ("fig4_adaptation", fig4_adaptation.run),
+        ("kernel_bench", kernel_bench.run),
+        ("roofline", roofline.run),
+    ]
+    failed = []
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED sections: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

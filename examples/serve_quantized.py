@@ -1,0 +1,92 @@
+"""Batched serving with SYMOG fixed-point weights — the deployment story.
+
+    PYTHONPATH=src python examples/serve_quantized.py [--arch internlm2-1.8b]
+
+1. Builds a reduced LM and SYMOG-fine-tunes it briefly (so the weights sit
+   ON the fixed-point grid — post-quantization is then exact-by-training).
+2. Serves a batch of prompts with float weights vs hard-quantized weights
+   and reports the generated-token agreement (paper claim: ≈ lossless).
+3. Runs one layer through the 2-bit *packed* Pallas serving kernel
+   (kernels/fixedpoint_matmul) and checks it against the dense float path —
+   the 8×-less-weight-bandwidth decode path used on TPU.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, core, optim
+from repro.data import SyntheticLM, SyntheticLMConfig
+from repro.kernels import fixedpoint_matmul, pack_weight
+from repro.models import init_lm
+from repro.serve import ServeEngine
+from repro.train import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=configs.ARCHS)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch)
+    data = SyntheticLM(SyntheticLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, noise=0.05))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+
+    # brief SYMOG QAT so the weights converge onto the fixed-point modes
+    tx = optim.chain(optim.clip_by_global_norm(1.0), optim.sgd(momentum=0.9))
+    scfg = core.SymogConfig(n_bits=2, total_steps=args.steps)  # λ0=10 (paper)
+    step = jax.jit(make_train_step(cfg, tx, core.constant(0.05),
+                                   symog_cfg=scfg, compute_dtype=jnp.float32))
+    state = init_train_state(params, tx, scfg)
+    for _ in range(args.steps):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in next(data).items()})
+    qm = core.quant_error_metrics(state.params, state.symog, scfg)
+    print(f"QAT done: loss {float(m['loss']):.3f}, "
+          f"rel quant error {float(qm['rel_quant_error']):.2e}")
+
+    # teacher-forced next-token agreement (the paper's accuracy-style claim)
+    from repro.models import forward_lm
+
+    test = {"tokens": jnp.asarray(data.peek(9999)["tokens"])}
+    qparams = core.quantize_tree(state.params, state.symog, scfg)
+    lf = forward_lm(state.params, test, cfg, compute_dtype=jnp.float32).logits
+    lq = forward_lm(qparams, test, cfg, compute_dtype=jnp.float32).logits
+    tf_agree = float(np.mean(np.argmax(lf, -1) == np.argmax(lq, -1)))
+    print(f"teacher-forced next-token agreement (2-bit vs float): {tf_agree:.2%}; "
+          f"mean |Δlogit| {float(jnp.mean(jnp.abs(lf - lq))):.4f}")
+
+    # batched greedy serving (autoregressive — one flipped tie diverges the
+    # suffix, so token-exact agreement is the stricter demo)
+    prompts = {"tokens": jnp.asarray(next(data)["tokens"][: args.batch, :16])}
+    max_len = 16 + args.gen
+    eng_f = ServeEngine(cfg, state.params, max_len=max_len, compute_dtype=jnp.float32)
+    out_f = eng_f.generate(prompts, args.gen)
+    eng_q = ServeEngine(cfg, qparams, max_len=max_len, compute_dtype=jnp.float32)
+    out_q = eng_q.generate(prompts, args.gen)
+    agree = float(np.mean(np.asarray(out_f) == np.asarray(out_q)))
+    print(f"greedy generation {args.batch}×{args.gen}: token-exact agreement {agree:.2%}")
+
+    # packed-kernel serving path on one MLP weight (interpret mode on CPU)
+    from repro.nn.tree import flatten_with_paths
+
+    flat = dict(flatten_with_paths(state.params))
+    fs = dict(flatten_with_paths(state.symog.f))
+    path = next(p for p in flat if p.endswith("gate_proj/kernel") and state.symog.mask[p])
+    w, f = flat[path], fs[path]
+    w2d = np.asarray(w).reshape(w.shape[0], -1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, w2d.shape[0]))
+    pw = pack_weight(jnp.asarray(w2d), f, 2)
+    y_kernel = fixedpoint_matmul(x, pw, f, n_bits=2, n_out=w2d.shape[1])
+    y_exact = x @ np.asarray(core.quantize(jnp.asarray(w2d), core.delta_from_f(f), 2))
+    err = float(np.max(np.abs(y_kernel - y_exact)))
+    print(f"packed 2-bit kernel on {path}: {pw.nbytes} bytes vs "
+          f"{np.asarray(w2d, np.float32).nbytes} (fp32) — max err vs exact {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end LM training driver with SYMOG QAT as a first-class feature.
+
+    PYTHONPATH=src python examples/train_lm_symog.py            # ~10M params (CPU-sized)
+    PYTHONPATH=src python examples/train_lm_symog.py --params100m --steps 300
+
+Wraps the production launcher pieces: config → synthetic host-sharded data
+→ pjit train step (SYMOG on) → async checkpoints → resume.  The 100M
+variant is the assignment's "train ~100M model for a few hundred steps"
+driver — on this 1-core CPU container it is slow; the default exercises the
+identical code path at CPU-friendly width.  On a real cluster pass
+``--mesh 16x16`` (see repro.launch.train for the full CLI).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import core, optim
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLM, SyntheticLMConfig
+from repro.distributed import StepTimeMonitor
+from repro.models import init_lm
+from repro.models.config import ModelConfig
+from repro.train import init_train_state, make_train_step
+
+
+def small_lm(params100m: bool) -> ModelConfig:
+    if params100m:  # ~100M params
+        return ModelConfig(name="lm100m", family="decoder", n_layers=8,
+                           d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+                           d_ff=2048, vocab_size=32000, remat=False)
+    return ModelConfig(name="lm10m", family="decoder", n_layers=4,
+                       d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+                       d_ff=1024, vocab_size=4096, remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params100m", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/symog_lm_run")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = small_lm(args.params100m)
+    n = cfg.param_count()
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params)")
+
+    data = SyntheticLM(SyntheticLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        noise=0.05))
+    tx = optim.chain(optim.clip_by_global_norm(1.0), optim.sgd(momentum=0.9))
+    scfg = core.SymogConfig(n_bits=2, total_steps=args.steps)  # λ0=10 (paper)
+    step = jax.jit(make_train_step(cfg, tx, core.constant(0.05),
+                                   symog_cfg=scfg, compute_dtype=jnp.float32))
+
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params, tx, scfg)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        state, meta, start = ckpt.restore(jax.eval_shape(lambda: state))
+        data.load_state_dict(meta["data"])
+        print(f"resumed from step {start}")
+
+    mon = StepTimeMonitor()
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        mon.start()
+        state, metrics = step(state, batch)
+        mon.stop()
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
+                  f"λ {float(metrics['symog_lambda']):.1f}", flush=True)
+        if (i + 1) % 100 == 0:
+            ckpt.save(i + 1, state, metadata={"data": data.state_dict()})
+    ckpt.save(args.steps, state, metadata={"data": data.state_dict()}, blocking=True)
+
+    qm = core.quant_error_metrics(state.params, state.symog, scfg)
+    print(f"done in {time.time()-t0:.0f}s — rel quant error "
+          f"{float(qm['rel_quant_error']):.2e} (stream CE floor {data.ce_floor():.3f}); "
+          f"stragglers {mon.straggler_fraction():.2%}")
+
+
+if __name__ == "__main__":
+    main()

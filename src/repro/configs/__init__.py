@@ -1,0 +1,105 @@
+"""Architecture registry + assigned input-shape cells.
+
+``get_config(arch)`` / ``get_reduced(arch)`` return the exact published
+config and a same-family smoke-test reduction.  ``input_specs(cfg, shape)``
+builds ShapeDtypeStruct stand-ins for every model input of a cell — weak-
+type-correct, shardable, no device allocation (dry-run pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "whisper-large-v3": "whisper_large_v3",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "granite-34b": "granite_34b",
+    "gemma3-4b": "gemma3_4b",
+    "gemma2-27b": "gemma2_27b",
+    "paligemma-3b": "paligemma_3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mamba2-2.7b": "mamba2_2_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; options: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).REDUCED
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(supported, reason-if-not) per the assignment's skip rules."""
+    cell = SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.supports_long:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} has unbounded full-attention KV (see DESIGN.md §5)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the cell's step function inputs.
+
+    train:   {'tokens': (B,S) i32 [, 'frames'/'patches']}
+    prefill: same as train (no labels needed — loss-free path)
+    decode:  {'tokens': (B,1) i32, 'pos': () i32, 'caches': <tree>}
+    """
+    cell = SHAPES[shape]
+    B, S = cell.batch, cell.seq
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def frontend(specs, batch):
+        if cfg.family == "encdec":
+            specs["frames"] = sds((batch, cfg.encoder_len, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            specs["patches"] = sds((batch, cfg.prefix_len, cfg.d_model), f32)
+        return specs
+
+    if cell.kind in ("train", "prefill"):
+        return frontend({"tokens": sds((B, S), i32)}, B)
+
+    # decode: one new token against a seq-long cache
+    from repro.models.lm import init_caches
+
+    caches = jax.eval_shape(lambda: init_caches(cfg, B, S))
+    specs = frontend({"tokens": sds((B, 1), i32), "pos": sds((), i32)}, B)
+    specs["caches"] = caches
+    return specs

@@ -1,0 +1,52 @@
+"""whisper-large-v3 [audio, enc-dec] — arXiv:2212.04356.
+
+32 enc + 32 dec layers, d=1280, 20 MHA heads, d_ff=5120, vocab=51866.
+The conv/mel frontend is a stub per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, 1500, 1280).  Deviations: sinusoidal
+decoder positions (whisper uses learned, sized 448 — incompatible with the
+assigned 4k/32k shapes); see DESIGN.md §8.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,
+    n_encoder_layers=32,
+    encoder_len=1500,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    mlp_gated=False,
+    act="gelu",
+    attn_bias=True,
+    use_rope=False,
+    norm="layernorm",
+    tie_lm_head=True,
+    remat_policy="block_outputs",
+    sharding_profile="dp_tp",
+    supports_long=False,
+)
+
+REDUCED = ModelConfig(
+    name="whisper-large-v3-reduced",
+    family="encdec",
+    n_layers=2,
+    n_encoder_layers=2,
+    encoder_len=12,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=8,
+    d_ff=64,
+    vocab_size=256,
+    mlp_gated=False,
+    act="gelu",
+    attn_bias=True,
+    use_rope=False,
+    norm="layernorm",
+    remat=False,
+)

@@ -1,0 +1,59 @@
+"""SYMOG training diagnostics (paper §4.4, Figures 3 & 4).
+
+- mode assignment: the integer mantissa each weight currently rounds to;
+- switch rate: fraction of weights whose mode changed since the last
+  snapshot (Figure 4's y-axis, per layer);
+- mode stats: per-mode count / mean / std (Figure 3's mixture shape);
+- relative quantization error: ||w - Q(w)|| / ||w|| (convergence of the
+  mixture variances toward 0).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import quantize_int, quantize
+
+
+def mode_assignment(w: jax.Array, delta, n_bits: int) -> jax.Array:
+    """int8 mantissa per weight — the weight's current fixed-point mode."""
+    return quantize_int(w, delta, n_bits).astype(jnp.int8)
+
+
+def switch_rate(prev_modes: jax.Array, modes: jax.Array) -> jax.Array:
+    """Fraction of weights in a layer that changed mode (Figure 4)."""
+    return jnp.mean((prev_modes != modes).astype(jnp.float32))
+
+
+def mode_stats(w: jax.Array, delta, n_bits: int) -> Dict[str, jax.Array]:
+    """Per-mode count, centre and std of the mixture (Figure 3).
+
+    Returns arrays of length 2^{N-1}·2-1 indexed by mode m + qmax.
+    """
+    q = 2 ** (n_bits - 1) - 1
+    n_modes = 2 * q + 1
+    m = quantize_int(w, delta, n_bits).astype(jnp.int32).reshape(-1) + q
+    wf = w.astype(jnp.float32).reshape(-1)
+    counts = jnp.zeros((n_modes,), jnp.float32).at[m].add(1.0)
+    sums = jnp.zeros((n_modes,), jnp.float32).at[m].add(wf)
+    sqs = jnp.zeros((n_modes,), jnp.float32).at[m].add(wf * wf)
+    mean = sums / jnp.maximum(counts, 1.0)
+    var = jnp.maximum(sqs / jnp.maximum(counts, 1.0) - mean**2, 0.0)
+    return {
+        "count": counts,
+        "mean": mean,
+        "std": jnp.sqrt(var),
+        "centers": (jnp.arange(n_modes, dtype=jnp.float32) - q) * jnp.asarray(delta, jnp.float32).reshape(-1)[0],
+    }
+
+
+def relative_quant_error(w: jax.Array, delta, n_bits: int) -> jax.Array:
+    wf = w.astype(jnp.float32)
+    err = wf - quantize(wf, delta, n_bits)
+    return jnp.linalg.norm(err.reshape(-1)) / (jnp.linalg.norm(wf.reshape(-1)) + 1e-12)
+
+
+def tree_switch_rates(prev: Any, cur: Any) -> Any:
+    return jax.tree_util.tree_map(switch_rate, prev, cur)

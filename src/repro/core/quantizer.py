@@ -1,0 +1,71 @@
+"""The symmetric uniform fixed-point quantizer Q_N (paper Eq. 1).
+
+    Q_N(x; Δ) = Clip(round(x/Δ), -(2^{N-1}-1), 2^{N-1}-1) · Δ
+
+with the *fixed-point constraint* Δ = 2^{-f}, f ∈ ℤ (paper §3.1): the
+dequantization scale is then a pure exponent shift — exact in any binary
+float format and a bit-shift on integer hardware.
+
+The quantizer is symmetric: the representable set is {-(2^{N-1}-1)Δ, …, 0,
+…, +(2^{N-1}-1)Δ} (one code point of the two's-complement range sacrificed
+for symmetry, paper §3.1).  N=2 gives ternary weights {-Δ, 0, +Δ}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax_int(n_bits: int) -> int:
+    """Largest mantissa magnitude: 2^{N-1} - 1."""
+    return 2 ** (n_bits - 1) - 1
+
+
+def delta_from_f(f) -> jax.Array:
+    """Δ = 2^{-f}. Exact for integer f (exponent-only float)."""
+    return jnp.exp2(-jnp.asarray(f, jnp.float32))
+
+
+def quantize_int(x: jax.Array, delta, n_bits: int) -> jax.Array:
+    """Signed integer mantissa m = Clip(round(x/Δ)) in [-qmax, qmax].
+
+    ``jnp.round`` is round-half-to-even; the paper's ⌊·⌉ is round-to-nearest
+    and ties are measure-zero for real-valued weights — equivalent in
+    practice and bit-stable across platforms.
+    """
+    q = qmax_int(n_bits)
+    m = jnp.round(x / delta)
+    return jnp.clip(m, -q, q)
+
+
+def quantize(x: jax.Array, delta, n_bits: int) -> jax.Array:
+    """Q_N(x; Δ): dequantized fixed-point value (same dtype as x)."""
+    delta = jnp.asarray(delta, x.dtype)
+    return (quantize_int(x, delta, n_bits) * delta).astype(x.dtype)
+
+
+def quantize_ste(x: jax.Array, delta, n_bits: int) -> jax.Array:
+    """Straight-through variant: forward Q_N, gradient identity.
+
+    Not used by SYMOG training itself (the paper's gradient flows through
+    the *real-valued* weights; ∂Q/∂w ≡ 0 in Eq. 4) but provided for the
+    hard-quantization baselines (BinaryConnect-style) we compare against.
+    """
+    return x + jax.lax.stop_gradient(quantize(x, delta, n_bits) - x)
+
+
+def quant_error(x: jax.Array, delta, n_bits: int) -> jax.Array:
+    """w - Q_N(w; Δ): the elementwise quantization error (Eq. 4 core)."""
+    return x - quantize(x, delta, n_bits)
+
+
+def clip_range(delta, n_bits: int):
+    """The fixed-point solution interval [-Δ(2^{N-1}-1), +Δ(2^{N-1}-1)]."""
+    lim = jnp.asarray(delta, jnp.float32) * qmax_int(n_bits)
+    return -lim, lim
+
+
+def clip_to_range(x: jax.Array, delta, n_bits: int) -> jax.Array:
+    """Paper §3.4 weight clipping: keep weights inside the solution set hull."""
+    lo, hi = clip_range(delta, n_bits)
+    return jnp.clip(x, lo.astype(x.dtype), hi.astype(x.dtype))

@@ -1,0 +1,52 @@
+"""The SYMOG multimodal Gaussian prior (paper §3.2).
+
+    R(Θ) = Σ_l (1/M_l) Σ_i (w_{l,i} - Q_N(w_{l,i}; Δ_l))²
+
+    ∂R/∂w_{l,i} = (2/M_l)(w_{l,i} - Q_N(w_{l,i}; Δ_l))        (Eq. 4)
+
+Each weight gets an individual Gaussian prior centred on its *current
+nearest* fixed-point mode; the centre moves with the weight every step, so
+weights hop between modes freely (self-reliant adaptation, §4.4).
+
+The quantizer's derivative is taken as identically zero (piecewise
+constant), so the gradient is just the scaled quantization error — no
+smoothness requirement on Q_N (paper §3.2, "This property is beneficial").
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import quant_error
+
+
+def layer_reg_value(w: jax.Array, delta, n_bits: int) -> jax.Array:
+    """(1/M_l)·Σ (w - Q(w))² for one layer."""
+    m_l = float(np.prod(w.shape))
+    err = quant_error(w.astype(jnp.float32), delta, n_bits)
+    return jnp.sum(jnp.square(err)) / m_l
+
+
+def layer_reg_grad(w: jax.Array, delta, n_bits: int) -> jax.Array:
+    """(2/M_l)·(w - Q(w)) for one layer (Eq. 4)."""
+    m_l = float(np.prod(w.shape))
+    return (2.0 / m_l) * quant_error(w, delta, n_bits)
+
+
+def tree_reg_value(quantizable: Any, deltas: Any, n_bits: int) -> jax.Array:
+    """R(Θ) summed over all quantizable leaves (mask handled upstream)."""
+    vals = jax.tree_util.tree_map(
+        lambda w, d: layer_reg_value(w, d, n_bits), quantizable, deltas
+    )
+    leaves = jax.tree_util.tree_leaves(vals)
+    return sum(leaves) if leaves else jnp.zeros(())
+
+
+def tree_reg_grad(quantizable: Any, deltas: Any, n_bits: int) -> Any:
+    """∂R/∂Θ per leaf (Eq. 4), same structure as ``quantizable``."""
+    return jax.tree_util.tree_map(
+        lambda w, d: layer_reg_grad(w, d, n_bits), quantizable, deltas
+    )

@@ -1,0 +1,63 @@
+"""Schedules (paper §3.3 + Alg. 1 lines 7–8).
+
+λ grows exponentially:  λ(e) = λ_0 · exp(α_E · e)    — weak prior early
+(model capacity), overwhelming prior late (quantization error → 0).
+Recommended λ_0 = 10, α_E = 9/E  ⇒  λ(E) = λ_0·e^9 ≈ 8.1e4·λ_0.
+
+η decays linearly:      η(e) = η_0 - (η_0 - η_E)·e/E  (recommended 0.01→0.001).
+
+All schedules are step-based callables (step → value) so they compose with
+any trainer; epoch-based paper semantics are recovered with
+``steps_per_epoch``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[..., "jnp.ndarray"]
+
+
+def exponential_lambda(lambda0: float = 10.0, alpha: float = 9.0, total_steps: int = 1000) -> Schedule:
+    """λ(s) = λ_0 · exp(α · s / total_steps);  α = α_E·E with the paper's
+    recommendation α_E = 9/E, i.e. α = 9 over the whole run."""
+
+    def fn(step):
+        frac = jnp.asarray(step, jnp.float32) / max(total_steps, 1)
+        return lambda0 * jnp.exp(alpha * frac)
+
+    return fn
+
+
+def linear_lr(eta0: float = 0.01, eta_end: float = 0.001, total_steps: int = 1000) -> Schedule:
+    def fn(step):
+        frac = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return eta0 - (eta0 - eta_end) * frac
+
+    return fn
+
+
+def constant(value: float) -> Schedule:
+    def fn(step):
+        del step
+        return jnp.asarray(value, jnp.float32)
+
+    return fn
+
+
+def cosine_lr(eta0: float, eta_end: float, total_steps: int, warmup_steps: int = 0) -> Schedule:
+    """Cosine decay with linear warmup — used by the transformer examples
+    (beyond-paper; the paper's CNNs use linear decay)."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = eta0 * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = eta_end + 0.5 * (eta0 - eta_end) * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

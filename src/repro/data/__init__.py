@@ -1,0 +1,13 @@
+from repro.data.synthetic import (
+    SyntheticLMConfig,
+    SyntheticLM,
+    SyntheticImagesConfig,
+    SyntheticImages,
+)
+
+__all__ = [
+    "SyntheticLMConfig",
+    "SyntheticLM",
+    "SyntheticImagesConfig",
+    "SyntheticImages",
+]

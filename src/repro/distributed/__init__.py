@@ -1,0 +1,11 @@
+from repro.distributed.collectives import compressed_psum_int8, CompressionState
+from repro.distributed.fault import StepTimeMonitor, retry_transient
+from repro.distributed.elastic import reshard_plan
+
+__all__ = [
+    "compressed_psum_int8",
+    "CompressionState",
+    "StepTimeMonitor",
+    "retry_transient",
+    "reshard_plan",
+]

@@ -1,0 +1,26 @@
+"""Elastic scaling: re-mesh a checkpoint onto a different device count.
+
+The checkpoint format is mesh-independent (full logical arrays per leaf).
+``reshard_plan`` computes, for a new mesh, the shardings every TrainState
+leaf should restore into; ``CheckpointManager.restore(shardings=...)``
+executes it.  Growing 256→512 chips (or shrinking after a pod loss) is
+therefore: re-run the launcher with the new mesh — nothing else changes.
+Data-order continuity: the iterator step rides in checkpoint metadata, and
+per-host streams are keyed by host_id, so 2× hosts each take half the old
+global batch deterministically (global batch is host-count-invariant).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from jax.sharding import Mesh
+
+from repro.nn.sharding import ShardingRules, make_rules, shardings_for_tree
+
+
+def reshard_plan(train_state_like: Any, mesh: Mesh, profile: str) -> Any:
+    """Pytree of NamedSharding (matching ``train_state_like``) for the new
+    mesh — params/opt-state leaves shard by the profile rules, everything
+    else (scalars, schedules) replicates."""
+    rules = make_rules(mesh, profile)
+    return shardings_for_tree(rules, train_state_like)

@@ -1,0 +1,60 @@
+"""Public wrapper: packed fixed-point matmul for arbitrary (M, K, N).
+
+``pack_weight`` quantizes a SYMOG-converged weight to packed mantissas;
+``fixedpoint_matmul`` pads to the kernel's block grid and dispatches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_int, values_per_byte
+from repro.core.quantizer import delta_from_f, quantize_int
+from repro.kernels.fixedpoint_matmul.kernel import fixedpoint_matmul_padded
+
+
+def pack_weight(w: jax.Array, f, n_bits: int = 2) -> jax.Array:
+    """(K, N) float weight -> (K, N·n_bits/8) int8 packed mantissas."""
+    delta = delta_from_f(f)
+    m = quantize_int(w, delta, n_bits)
+    return pack_int(m, n_bits)
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "n_out", "bm", "bn", "bk", "interpret")
+)
+def fixedpoint_matmul(x, packed_w, f, *, n_bits: int = 2, n_out: int,
+                      bm: int = 128, bn: int = 128, bk: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """y = x @ (unpack(packed_w)·2^{-f}).  x: (..., K) float."""
+    per = values_per_byte(n_bits)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K).astype(jnp.float32)
+    M = x2.shape[0]
+
+    bm_ = min(bm, max(8, M))
+    bn_ = min(bn, n_out)
+    bk_ = min(bk, K)
+    x2 = _pad_to(_pad_to(x2, 0, bm_), 1, bk_)
+    w2 = _pad_to(_pad_to(packed_w, 0, bk_), 1, bn_ // per)
+    n_pad = w2.shape[1] * per
+
+    scale = delta_from_f(f).reshape(1, 1)
+    y = fixedpoint_matmul_padded(
+        x2, w2, scale, n_bits=n_bits, n_out=n_pad, bm=bm_, bn=bn_, bk=bk_,
+        interpret=interpret,
+    )
+    return y[:M, :n_out].reshape(*lead, n_out)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: y = x @ (m · 2^{-f}) from the 2-bit packed weight."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_int
+
+
+def fixedpoint_matmul_ref(x, packed_w, f, *, n_bits: int, n_out: int):
+    """x (M, K) float; packed_w (K, n_out·n_bits/8) int8; f int scalar."""
+    m = unpack_int(packed_w, n_bits, n_out).astype(jnp.float32)  # (K, N)
+    scale = jnp.exp2(-jnp.asarray(f, jnp.float32))
+    return (x.astype(jnp.float32) @ m) * scale

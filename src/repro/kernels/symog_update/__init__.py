@@ -1,0 +1,3 @@
+from repro.kernels.symog_update.ops import symog_update
+
+__all__ = ["symog_update"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused SYMOG update (paper Alg. 1, lines 15–17).
+
+Semantics (per layer l, SGD + Nesterov momentum μ):
+
+    q     = Clip(round(w/Δ), ±(2^{N-1}-1))·Δ
+    g_tot = g + λ_eff·(w − q)            # λ_eff = λ·2/M_l folded outside
+    v'    = μ·v + g_tot
+    w'    = Clip(w − η·(g_tot + μ·v'), ±Δ(2^{N-1}-1))
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def symog_update_ref(w, g, v, *, delta, lam_eff, lr, mu, n_bits: int):
+    qmax = 2 ** (n_bits - 1) - 1
+    wf = w.astype(jnp.float32)
+    q = jnp.clip(jnp.round(wf / delta), -qmax, qmax) * delta
+    g_tot = g.astype(jnp.float32) + lam_eff * (wf - q)
+    v_new = mu * v.astype(jnp.float32) + g_tot
+    upd = g_tot + mu * v_new
+    lim = delta * qmax
+    w_new = jnp.clip(wf - lr * upd, -lim, lim)
+    return w_new.astype(w.dtype), v_new.astype(v.dtype)

@@ -1,0 +1,240 @@
+"""Post-SPMD HLO analysis: collective byte counting for the roofline.
+
+``compiled.cost_analysis()`` has no collective traffic, so we parse the
+per-device HLO and, for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, estimate the per-device wire bytes from
+the RESULT shape and the replica group size g (ring algorithm model):
+
+    all-reduce       2·s·(g-1)/g        (reduce-scatter + all-gather phases)
+    all-gather         s·(g-1)/g        (s = gathered result size)
+    reduce-scatter     s·(g-1)          (input = s·g, each device ships (g-1)/g)
+    all-to-all         s·(g-1)/g
+    collective-permute s
+
+``-start`` ops are counted once; their ``-done`` halves are skipped.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*(?:e\d+m\d+(?:fn)?)?)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_REF_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count..:..n.:.(\d+)')
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)"
+                       r"|while\(.*?\).*?body=%?([\w.\-]+).*?condition=%?([\w.\-]+)")
+_S32_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * size
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit groups: {{0,1,2,...},{...}} — size of the first group
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _split_computations(hlo_text: str):
+    """{comp_name: [lines]} plus the entry computation name."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _line_cost(line: str):
+    m = _OP_RE.search(line)
+    if not m:
+        return None
+    result_type, kind, phase = m.group(1), m.group(2), m.group(3)
+    if phase == "-done":
+        return None
+    shapes = _SHAPE_RE.findall(result_type)
+    if not shapes:
+        return None
+    s = _shape_bytes(*shapes[-1])  # result shape (last element of tuples)
+    g = _group_size(line)
+    if kind == "all-reduce":
+        wire = 2.0 * s * (g - 1) / g
+    elif kind in ("all-gather", "all-to-all"):
+        wire = s * (g - 1) / g
+    elif kind == "reduce-scatter":
+        wire = float(s) * (g - 1)
+    else:  # collective-permute
+        wire = float(s)
+    # XLA CPU promotes bf16 reductions to f32 ("..._promoted" reducers) —
+    # on TPU the wire stays bf16, so the target-hardware bytes are half.
+    # (verified with a bf16 matmul psum micro-test; see EXPERIMENTS.md)
+    promoted = "_promoted" in line and kind in ("all-reduce", "reduce-scatter")
+    return kind, wire, (wire / 2.0 if promoted else wire)
+
+
+_OPERAND_RE = re.compile(
+    r"(?:" + "|".join(_COLLECTIVES) + r")(?:-start)?\((%[\w.\-]+)"
+)
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+
+def _build_defs(comps) -> Dict[str, str]:
+    defs: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            st = line.strip()
+            if st.startswith("%"):
+                name = st.split(" ", 1)[0]
+                defs[name] = st
+    return defs
+
+
+def _from_bf16(line: str, operand: str, defs: Dict[str, str], comps) -> bool:
+    """True if the collective's operand is a local f32 view of bf16 data
+    (XLA CPU emulates bf16 dots in f32, upcasting operands before the
+    collective; on TPU the wire stays bf16)."""
+    d = defs.get(operand, "")
+    if "bf16" in d:
+        return False  # already counted at bf16 width
+    if "convert" in d or "fusion" in d:
+        m = _CALLS_RE.search(d)
+        if m:
+            body = comps.get(m.group(1), ())
+            return any("bf16" in l and "convert" in l for l in body)
+        return "convert" in d and "bf16" in d
+    return False
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Estimated per-device wire bytes per collective kind, weighting each
+    computation by the product of enclosing while-loop trip counts
+    (scan-over-layers / grad-accumulation bodies count × their length)."""
+    comps, entry = _split_computations(hlo_text)
+    defs = _build_defs(comps)
+
+    # trip count of a loop = the s32[] constant in its condition computation
+    # (scan lowering: induction var init 0, step 1, compare-lt bound)
+    def cond_trip(cond_name: str) -> int:
+        consts = []
+        for line in comps.get(cond_name, ()):
+            consts += [int(x) for x in _S32_CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    # per-computation local cost + outgoing references with weights
+    local: Dict[str, Dict[str, float]] = {}
+    edges: Dict[str, list] = {}
+    for name, lines in comps.items():
+        cost: Dict[str, float] = {}
+        refs = []
+        for line in lines:
+            lc = _line_cost(line)
+            if lc:
+                kind, raw, tpu = lc
+                if tpu == raw:  # not caught by the _promoted rule
+                    mo = _OPERAND_RE.search(line)
+                    if mo and _from_bf16(line, mo.group(1), defs, comps):
+                        tpu = raw / 2.0
+                cost[kind] = cost.get(kind, 0.0) + raw
+                cost[f"{kind}@tpu"] = cost.get(f"{kind}@tpu", 0.0) + tpu
+                cost[f"{kind}#"] = cost.get(f"{kind}#", 0) + 1
+            if "while(" in line:
+                t = _TRIP_RE.search(line)
+                mcond = re.search(r"condition=%?([\w.\-]+)", line)
+                mbody = re.search(r"body=%?([\w.\-]+)", line)
+                trip = int(t.group(1)) if t else (cond_trip(mcond.group(1)) if mcond else 1)
+                if mbody:
+                    refs.append((mbody.group(1), trip))
+                if mcond:
+                    refs.append((mcond.group(1), trip))
+            else:
+                for ref in _REF_RE.findall(line):
+                    refs.append((ref, 1))
+        local[name] = cost
+        edges[name] = refs
+
+    mult: Dict[str, float] = {n: 0.0 for n in comps}
+    if entry is None and comps:
+        entry = next(iter(comps))
+    if entry is not None:
+        mult[entry] = 1.0
+        # propagate multiplicities (call graph is a DAG in HLO)
+        order = list(comps)
+        changed = True
+        it = 0
+        while changed and it < len(comps) + 2:
+            changed = False
+            it += 1
+            new = {n: 0.0 for n in comps}
+            new[entry] = 1.0
+            for n in order:
+                for ref, w in edges[n]:
+                    if ref in new:
+                        new[ref] += mult.get(n, 0.0) * w
+            for n in order:
+                nm = max(new[n], 1.0 if n == entry else 0.0)
+                if abs(nm - mult[n]) > 1e-9:
+                    changed = True
+                mult[n] = nm
+
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out_tpu: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for name, cost in local.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for k in _COLLECTIVES:
+            out[k] += cost.get(k, 0.0) * m
+            out_tpu[k] += cost.get(f"{k}@tpu", 0.0) * m
+            counts[k] += cost.get(f"{k}#", 0) * m
+    rec: Dict[str, int] = {f"{k}_bytes": int(v) for k, v in out.items()}
+    rec.update({f"{k}_count": int(counts[k]) for k in _COLLECTIVES})
+    rec["total_bytes"] = int(sum(out.values()))
+    # target-hardware bytes: CPU-promoted bf16 reduces counted at bf16 width
+    rec["total_bytes_tpu"] = int(sum(out_tpu.values()))
+    return rec

@@ -1,0 +1,122 @@
+"""Exact logical cost of a jaxpr: FLOPs + matmul memory traffic.
+
+``compiled.cost_analysis()`` counts while/scan bodies ONCE (verified in
+EXPERIMENTS.md §Dry-run notes), so scanned-layer models are undercounted by
+the trip count.  This walker traverses the jaxpr instead — scan lengths are
+explicit — and counts:
+
+  * ``flops``      — dot_general / conv_general_dilated MACs ×2, × enclosing
+                     scan lengths.  This is the *compiled compute including
+                     redundancy* (remat recompute and MoE dispatch einsums
+                     appear in the backward/forward jaxpr explicitly).
+  * ``dot_bytes``  — operand + output bytes of every dot/conv (× trips): the
+                     dominant HBM traffic term for matmul-heavy models.
+                     Elementwise traffic is excluded (fusion makes it
+                     locality-dependent); documented in EXPERIMENTS.md.
+
+Costs are GLOBAL (pre-partitioning); divide by chip count for per-device
+roofline terms (balanced-shard assumption).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import numpy as np
+
+import jax
+from jax import core as jcore
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(math.prod(aval.shape)) * np.dtype(aval.dtype).itemsize
+    except Exception:
+        return 0.0
+
+
+def _dot_cost(eqn) -> Dict[str, float]:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    out = eqn.outvars[0].aval
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = math.prod(lhs.shape[d] for d in lb) if lb else 1
+    contract = math.prod(lhs.shape[d] for d in lc) if lc else 1
+    m = math.prod(
+        lhs.shape[d] for d in range(len(lhs.shape)) if d not in set(lb) | set(lc)
+    )
+    n = math.prod(
+        rhs.shape[d] for d in range(len(rhs.shape)) if d not in set(rb) | set(rc)
+    )
+    flops = 2.0 * batch * m * n * contract
+    return {
+        "flops": flops,
+        "dot_bytes": _aval_bytes(lhs) + _aval_bytes(rhs) + _aval_bytes(out),
+    }
+
+
+def _conv_cost(eqn) -> Dict[str, float]:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    out = eqn.outvars[0].aval
+    dn = eqn.params["dimension_numbers"]
+    groups = eqn.params.get("feature_group_count", 1)
+    k_spatial = math.prod(rhs.shape[d] for d in dn.rhs_spec[2:])
+    cin = rhs.shape[dn.rhs_spec[1]]
+    flops = 2.0 * math.prod(out.shape) * k_spatial * cin  # cin already /groups
+    return {
+        "flops": flops,
+        "dot_bytes": _aval_bytes(lhs) + _aval_bytes(rhs) + _aval_bytes(out),
+    }
+
+
+_SUBJAXPR_PRIMS = (
+    "pjit", "closed_call", "core_call", "remat_call", "checkpoint", "remat",
+    "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
+    "custom_jvp_call_jaxpr",
+)
+
+
+def _add(tot, inc, mult=1.0):
+    for k, v in inc.items():
+        tot[k] = tot.get(k, 0.0) + v * mult
+    return tot
+
+
+def _walk(jaxpr, mult: float, tot: Dict[str, float]) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            _add(tot, _dot_cost(eqn), mult)
+        elif name == "conv_general_dilated":
+            _add(tot, _conv_cost(eqn), mult)
+        elif name == "scan":
+            inner = eqn.params["jaxpr"].jaxpr
+            _walk(inner, mult * eqn.params["length"], tot)
+        elif name == "while":
+            # not used by this codebase's models; count body once, flag it
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, tot)
+            tot["while_unweighted"] = tot.get("while_unweighted", 0) + 1
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            sub = {}
+            for br in branches:
+                cand: Dict[str, float] = {}
+                _walk(br.jaxpr, 1.0, cand)
+                if cand.get("flops", 0) > sub.get("flops", 0):
+                    sub = cand
+            _add(tot, sub, mult)
+        else:
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                if key in eqn.params:
+                    inner = eqn.params[key]
+                    inner = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                    _walk(inner, mult, tot)
+                    break
+
+
+def jaxpr_cost(fn, *args) -> Dict[str, float]:
+    """Trace ``fn`` abstractly with ``args`` (arrays or ShapeDtypeStructs)
+    and return {'flops', 'dot_bytes'} — global logical cost."""
+    closed = jax.make_jaxpr(fn)(*args)
+    tot: Dict[str, float] = {"flops": 0.0, "dot_bytes": 0.0}
+    _walk(closed.jaxpr, 1.0, tot)
+    return tot

@@ -1,0 +1,92 @@
+"""Sharding assembly for the dry-run / launcher: batch specs, cache specs,
+and full-TrainState sharding trees built from the profile rules.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.nn.sharding import ShardingRules, make_rules, shardings_for_tree
+from repro.nn.tree import tree_map_with_path
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return size > 1 and dim % size == 0
+
+
+def data_shardings(specs: Any, mesh: Mesh) -> Any:
+    """Batch leaves: dim0 over (pod, data) when divisible, rest replicated."""
+    axes = _batch_axes(mesh)
+
+    def one(path, s):
+        if s.ndim >= 1 and _div(s.shape[0], mesh, axes):
+            return NamedSharding(mesh, P(axes, *([None] * (s.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return tree_map_with_path(one, specs)
+
+
+def cache_shardings(caches: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """KV/state caches: batch over (pod,data); the head/channel dim over
+    ``model`` when divisible — MQA/MLA caches (kv_heads=1 / rank dims) fall
+    back to sharding the *sequence* dim over ``model`` (sequence parallel
+    cache; XLA realizes the distributed softmax reductions).  Handles the
+    stacked (L, B, ...) leading dim of scanned layer groups."""
+    baxes = _batch_axes(mesh)
+    msize = mesh.shape.get("model", 1)
+
+    def try_model(spec, shape, dims):
+        if "model" not in mesh.axis_names or msize <= 1:
+            return
+        for d in dims:
+            if d < len(shape) and spec[d] is None and shape[d] % msize == 0:
+                spec[d] = "model"
+                return
+
+    def one(path, s):
+        shape = s.shape
+        stacked = bool(re.search(r"(^|/)(layers|units|blocks)\d*/", path)) and len(shape) >= 2
+        off = 1 if stacked else 0
+        spec = [None] * len(shape)
+        bdim = off
+        if len(shape) > bdim and _div(shape[bdim], mesh, baxes):
+            spec[bdim] = baxes
+        leaf = path.rsplit("/", 1)[-1]
+        if leaf in ("k", "v", "cross_k", "cross_v"):
+            try_model(spec, shape, (off + 2, off + 1))  # kv-heads, else seq
+        elif leaf in ("c_kv", "k_rope"):
+            try_model(spec, shape, (off + 1,))  # seq (rank dim is contracted)
+        elif leaf == "h":
+            try_model(spec, shape, (off + 1,))  # ssd heads / rglru channels
+        elif leaf == "conv":
+            try_model(spec, shape, (off + 2,))  # channels
+        return NamedSharding(mesh, P(*spec))
+
+    return tree_map_with_path(one, caches)
+
+
+def state_shardings(state_struct: Any, mesh: Mesh, profile: str) -> Any:
+    """NamedSharding tree for a whole TrainState (params + opt + symog)."""
+    rules = make_rules(mesh, profile)
+    return shardings_for_tree(rules, state_struct)
+
+
+def param_shardings(params_struct: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    rules = make_rules(mesh, cfg.sharding_profile)
+    return shardings_for_tree(rules, params_struct)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

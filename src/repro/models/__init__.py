@@ -1,0 +1,27 @@
+"""Model zoo: composable layers + the 10 assigned architectures + paper CNNs."""
+from repro.models.config import ModelConfig, GLOBAL_WINDOW
+from repro.models.lm import (
+    ForwardOut,
+    init_lm,
+    forward_lm,
+    prefill_lm,
+    decode_lm,
+    init_caches,
+    lm_train_loss,
+    cross_entropy,
+    scan_groups,
+)
+
+__all__ = [
+    "ModelConfig",
+    "GLOBAL_WINDOW",
+    "ForwardOut",
+    "init_lm",
+    "forward_lm",
+    "prefill_lm",
+    "decode_lm",
+    "init_caches",
+    "lm_train_loss",
+    "cross_entropy",
+    "scan_groups",
+]

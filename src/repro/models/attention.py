@@ -1,0 +1,345 @@
+"""Attention blocks: GQA/MQA self-attention (RoPE, sliding windows, logit
+softcap, qk-norm), cross-attention (whisper), and MLA (deepseek-v3) with
+compressed-KV decode (matmul absorption).
+
+Shapes: x (B, T, D); q (B, T, H, hd); k/v (B, S, K, hd) with H = K·G.
+
+Long sequences never materialize the full (T, S) score matrix: queries are
+processed in chunks of ``q_chunk`` via lax.scan (exact — softmax is
+per-query over the full S), which bounds transient memory at
+O(B·H·q_chunk·S) per layer.  Masks are built from positions inside the
+chunk loop; ``window`` may be a *traced* per-layer scalar (gemma2/3
+local/global alternation inside one scan body).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    apply_rope,
+    dense_apply,
+    dense_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    softcap as softcap_fn,
+)
+
+Q_CHUNK_DEFAULT = 1024  # chunk queries when T exceeds this
+
+# ---------------------------------------------------------------------------
+# fixed-point KV cache (beyond-paper: the paper's §3.1 quantizer applied to
+# the decode-dominant resident bytes).  Power-of-two scale Δ=2^-KV_F — the
+# dequantize is an exponent add, exact, no calibration state.
+# ---------------------------------------------------------------------------
+KV_F = 5  # Δ = 2^-5: int8 range ±3.97, resolution 1/32 (post-norm k/v ~O(1))
+
+
+def cache_write(x, like_dtype):
+    """Quantize a new cache entry when the cache is int8 fixed-point."""
+    if like_dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * (2.0 ** KV_F)), -127, 127).astype(jnp.int8)
+    return x.astype(like_dtype)
+
+
+def cache_read(c, dtype):
+    """Dequantize cache contents (exponent-shift scale)."""
+    if c.dtype == jnp.int8:
+        return (c.astype(dtype) * jnp.asarray(2.0 ** -KV_F, dtype))
+    return c.astype(dtype)
+
+
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope: bool = True
+    qk_norm: bool = False
+    softcap: float = 0.0
+    bias: bool = False
+    query_scale: Optional[float] = None  # default hd^-0.5
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(cfg.d_model)
+    p = {
+        "q_proj": dense_init(ks[0], (cfg.d_model,), (cfg.n_heads, cfg.head_dim), bias=cfg.bias, stddev=std, dtype=dtype),
+        "k_proj": dense_init(ks[1], (cfg.d_model,), (cfg.n_kv_heads, cfg.head_dim), bias=cfg.bias, stddev=std, dtype=dtype),
+        "v_proj": dense_init(ks[2], (cfg.d_model,), (cfg.n_kv_heads, cfg.head_dim), bias=cfg.bias, stddev=std, dtype=dtype),
+        "o_proj": dense_init(ks[3], (cfg.n_heads, cfg.head_dim), (cfg.d_model,), bias=cfg.bias,
+                             stddev=1.0 / math.sqrt(cfg.n_heads * cfg.head_dim), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, dtype)
+    return p
+
+
+def make_mask(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool = True,
+              window=None, prefix_len: int = 0,
+              kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Boolean mask (..., T, S) from query/key positions (traced window ok)."""
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    if causal:
+        m = k <= q
+    else:
+        m = jnp.broadcast_to(jnp.asarray(True), jnp.broadcast_shapes(q.shape, k.shape))
+    if window is not None:
+        m = m & (q - k < window)
+    if prefix_len:
+        m = m | (k < prefix_len)
+    if kv_valid is not None:
+        m = m & kv_valid[..., None, :]
+    return m
+
+
+def _qk_attn(q, k, v, mask, *, scale: float, cap: float) -> jax.Array:
+    """q (B,T,K,G,hd), k/v (B,S,K,hd), mask (B,T,S) -> out (B,T,K,G,hd)."""
+    logits = jnp.einsum("BTKGh,BSKh->BKGTS", q, k).astype(jnp.float32) * scale
+    if cap > 0:
+        logits = softcap_fn(logits, cap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("BKGTS,BSKh->BTKGh", probs.astype(v.dtype), v)
+    return out
+
+
+def attend(q, k, v, q_pos, kv_pos, *, causal=True, window=None, prefix_len=0,
+           kv_valid=None, scale: float, cap: float, q_chunk: int = Q_CHUNK_DEFAULT):
+    """Exact attention, query-chunked when T > q_chunk.
+
+    q (B,T,K,G,hd); k/v (B,S,K,hd); q_pos (B,T); kv_pos (B,S) or (S,).
+    """
+    B, T = q.shape[0], q.shape[1]
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None, :], (B, kv_pos.shape[0]))
+    if q_chunk <= 0 or T <= q_chunk or T % q_chunk != 0:
+        mask = make_mask(q_pos, kv_pos, causal=causal, window=window,
+                         prefix_len=prefix_len, kv_valid=kv_valid)
+        return _qk_attn(q, k, v, mask, scale=scale, cap=cap)
+
+    nc = T // q_chunk
+    qc = jnp.moveaxis(q.reshape(B, nc, q_chunk, *q.shape[2:]), 1, 0)
+    pc = jnp.moveaxis(q_pos.reshape(B, nc, q_chunk), 1, 0)
+
+    def body(carry, inp):
+        q_i, p_i = inp
+        mask = make_mask(p_i, kv_pos, causal=causal, window=window,
+                         prefix_len=prefix_len, kv_valid=kv_valid)
+        return carry, _qk_attn(q_i, k, v, mask, scale=scale, cap=cap)
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    out = jnp.moveaxis(out, 0, 1)  # (B, nc, q_chunk, K, G, hd_v)
+    return out.reshape(B, T, *out.shape[3:])
+
+
+def attn_apply(p, x, *, cfg: AttnConfig, positions, kv_positions=None,
+               causal=True, window=None, prefix_len: int = 0,
+               rope_base=10000.0, compute_dtype=jnp.bfloat16,
+               kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+               q_chunk: int = Q_CHUNK_DEFAULT):
+    """Full-sequence attention.  ``kv``: precomputed (k, v) for cross-attn."""
+    B, T, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    q = dense_apply(p["q_proj"], x, compute_dtype=compute_dtype)  # (B,T,H,hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+    if kv is None:
+        k = dense_apply(p["k_proj"], x, compute_dtype=compute_dtype)
+        v = dense_apply(p["v_proj"], x, compute_dtype=compute_dtype)
+        if cfg.qk_norm:
+            k = rmsnorm_apply(p["k_norm"], k)
+        if cfg.rope:
+            q = apply_rope(q, positions, rope_base)
+            k = apply_rope(k, positions, rope_base)
+        kv_pos = positions
+    else:
+        k, v = kv
+        if cfg.rope:
+            q = apply_rope(q, positions, rope_base)
+        S = k.shape[1]
+        kv_pos = kv_positions if kv_positions is not None else jnp.arange(S, dtype=jnp.int32)
+    q = q.reshape(B, T, K, G, hd)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    out = attend(q, k.astype(compute_dtype), v.astype(compute_dtype),
+                 positions, kv_pos, causal=causal and kv is None, window=window,
+                 prefix_len=prefix_len, scale=scale, cap=cfg.softcap, q_chunk=q_chunk)
+    out = out.reshape(B, T, H, hd)
+    return dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+
+
+def attn_init_cache(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=10000.0,
+                compute_dtype=jnp.bfloat16,
+                kv: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Single-token decode.  x (B,1,D); ``pos`` scalar int32 (uniform batch).
+
+    Self-attn: writes new k/v at ``pos`` and attends to cache[0..pos].
+    Cross-attn (``kv`` given): attends to the fixed encoder context.
+    """
+    B, T, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    q = dense_apply(p["q_proj"], x, compute_dtype=compute_dtype)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if kv is None:
+        k_new = dense_apply(p["k_proj"], x, compute_dtype=compute_dtype)
+        v_new = dense_apply(p["v_proj"], x, compute_dtype=compute_dtype)
+        if cfg.qk_norm:
+            k_new = rmsnorm_apply(p["k_norm"], k_new)
+        if cfg.rope:
+            q = apply_rope(q, positions, rope_base)
+            k_new = apply_rope(k_new, positions, rope_base)
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], cache_write(k_new, cache["k"].dtype), pos, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], cache_write(v_new, cache["v"].dtype), pos, 1),
+        }
+        k, v = cache_read(cache["k"], compute_dtype), cache_read(cache["v"], compute_dtype)
+        S = k.shape[1]
+        kv_pos = jnp.arange(S, dtype=jnp.int32)
+        mask = make_mask(jnp.full((B, 1), pos, jnp.int32), kv_pos[None, :], causal=True, window=window)
+        mask = jnp.broadcast_to(mask, (B, 1, S))
+    else:
+        if cfg.rope:
+            q = apply_rope(q, positions, rope_base)
+        k, v = kv
+        S = k.shape[1]
+        mask = jnp.ones((B, 1, S), bool)
+    q = q.reshape(B, 1, K, G, hd)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    out = _qk_attn(q, k.astype(compute_dtype), v.astype(compute_dtype), mask, scale=scale, cap=cfg.softcap)
+    out = out.reshape(B, 1, H, hd)
+    y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    D, H = cfg.d_model, cfg.n_heads
+    r = cfg
+    sd = lambda fan: 1.0 / math.sqrt(fan)
+    return {
+        "q_a_proj": dense_init(ks[0], (D,), (r.q_lora_rank,), stddev=sd(D), dtype=dtype),
+        "q_a_norm": rmsnorm_init(r.q_lora_rank, dtype),
+        "q_b_proj": dense_init(ks[1], (r.q_lora_rank,), (H, r.qk_nope_dim + r.qk_rope_dim), stddev=sd(r.q_lora_rank), dtype=dtype),
+        "kv_a_proj": dense_init(ks[2], (D,), (r.kv_lora_rank,), stddev=sd(D), dtype=dtype),
+        "kv_a_norm": rmsnorm_init(r.kv_lora_rank, dtype),
+        "k_rope_proj": dense_init(ks[3], (D,), (r.qk_rope_dim,), stddev=sd(D), dtype=dtype),
+        "kv_b_k_proj": dense_init(ks[4], (r.kv_lora_rank,), (H, r.qk_nope_dim), stddev=sd(r.kv_lora_rank), dtype=dtype),
+        "kv_b_v_proj": dense_init(ks[5], (r.kv_lora_rank,), (H, r.v_head_dim), stddev=sd(r.kv_lora_rank), dtype=dtype),
+        "o_proj": dense_init(ks[6], (H, r.v_head_dim), (D,), stddev=sd(H * r.v_head_dim), dtype=dtype),
+    }
+
+
+def _mla_scale(cfg: MLAConfig) -> float:
+    return (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+
+def mla_apply(p, x, *, cfg: MLAConfig, positions, causal=True, window=None,
+              prefix_len: int = 0, rope_base=10000.0,
+              compute_dtype=jnp.bfloat16, q_chunk: int = Q_CHUNK_DEFAULT):
+    """Full-sequence MLA (train / prefill): expanded-KV form, query-chunked."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    cq = rmsnorm_apply(p["q_a_norm"], dense_apply(p["q_a_proj"], x, compute_dtype=compute_dtype))
+    q = dense_apply(p["q_b_proj"], cq, compute_dtype=compute_dtype)  # (B,T,H,nope+rope)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, rope_base)
+
+    c_kv = rmsnorm_apply(p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype))  # (B,T,r)
+    k_rope = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]  # (B,T,1,rope)
+    k_rope = apply_rope(k_rope, positions, rope_base)[..., 0, :]
+    k_nope = dense_apply(p["kv_b_k_proj"], c_kv, compute_dtype=compute_dtype)  # (B,T,H,nope)
+    v = dense_apply(p["kv_b_v_proj"], c_kv, compute_dtype=compute_dtype)  # (B,T,H,v)
+
+    # fold rope-part into a (H, nope+rope) layout: concat k_rope per head
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, cfg.qk_rope_dim))], axis=-1
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q_full = q_full.reshape(B, T, H, 1, q_full.shape[-1])  # K==H, G=1
+    out = attend(q_full, k_full, v, positions, positions, causal=causal, window=window,
+                 prefix_len=prefix_len, scale=_mla_scale(cfg), cap=0.0, q_chunk=q_chunk)
+    out = out.reshape(B, T, H, cfg.v_head_dim)
+    return dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+
+
+def mla_init_cache(batch: int, max_len: int, cfg: MLAConfig, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
+               compute_dtype=jnp.bfloat16):
+    """Absorbed decode: attention runs in the compressed kv_lora space.
+
+    q_eff = q_nope @ kv_b_k   (per-head, rank-space query)
+    logits = q_eff·c_kv + q_rope·k_rope ;  out = (probs·c_kv) @ kv_b_v
+    Per-step FLOPs O(H·r·S) instead of O(H·(n+v)·r·S) re-expansion.
+    """
+    B, T, D = x.shape
+    H, r = cfg.n_heads, cfg.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    cq = rmsnorm_apply(p["q_a_norm"], dense_apply(p["q_a_proj"], x, compute_dtype=compute_dtype))
+    q = dense_apply(p["q_b_proj"], cq, compute_dtype=compute_dtype)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, rope_base)
+    # absorb kv_b_k:  (B,1,H,n) x (r,H,n) -> (B,1,H,r)
+    q_eff = jnp.einsum("BTHn,rHn->BTHr", q_nope, p["kv_b_k_proj"]["kernel"].astype(compute_dtype))
+
+    c_new = rmsnorm_apply(p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype))
+    kr_new = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]
+    kr_new = apply_rope(kr_new, positions, rope_base)[..., 0, :]
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], cache_write(c_new, cache["c_kv"].dtype), pos, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], cache_write(kr_new, cache["k_rope"].dtype), pos, 1),
+    }
+    c_kv, k_rope = cache_read(cache["c_kv"], compute_dtype), cache_read(cache["k_rope"], compute_dtype)
+    S = c_kv.shape[1]
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    mask = (kv_pos <= pos)[None, None, None, :]  # (1,1,1,S)
+
+    logits = (
+        jnp.einsum("BTHr,BSr->BHTS", q_eff, c_kv)
+        + jnp.einsum("BTHr,BSr->BHTS", q_rope, k_rope)
+    ).astype(jnp.float32) * _mla_scale(cfg)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+    out_c = jnp.einsum("BHTS,BSr->BTHr", probs, c_kv)  # compressed values
+    out = jnp.einsum("BTHr,rHv->BTHv", out_c, p["kv_b_v_proj"]["kernel"].astype(compute_dtype))
+    y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+    return y, cache

@@ -1,0 +1,236 @@
+"""The paper's evaluation architectures: LeNet-5, VGG-7/11/16, DenseNet-76.
+
+These carry the faithful SYMOG reproduction (Table 1, Figures 3–4) on
+synthetic MNIST/CIFAR-like data.  Conv kernels are rank-4 → quantizable by
+the default SYMOG filter; BN params stay float (paper §5 leaves BN to
+future work).
+
+BatchNorm keeps running stats in a separate ``bn_state`` tree (params stay
+a pure weight pytree for SYMOG/optimizers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    arch: str  # 'lenet5' | 'vgg7' | 'vgg11' | 'vgg16' | 'densenet'
+    in_channels: int = 3
+    n_classes: int = 10
+    input_hw: int = 32
+    width_mult: float = 1.0  # reduced-scale knob for CPU benchmarks
+    densenet_depth: int = 76
+    densenet_growth: int = 12
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    std = math.sqrt(2.0 / fan_in)
+    return {"kernel": (jax.random.normal(key, (kh, kw, cin, cout)) * std).astype(dtype)}
+
+
+def _conv(p, x, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, p["kernel"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _fc_init(key, cin, cout, dtype=jnp.float32):
+    std = math.sqrt(2.0 / cin)
+    return {
+        "kernel": (jax.random.normal(key, (cin, cout)) * std).astype(dtype),
+        "bias": jnp.zeros((cout,), dtype),
+    }
+
+
+def _fc(p, x):
+    return x @ p["kernel"].astype(x.dtype) + p["bias"].astype(x.dtype)
+
+
+def _bn_init(c, dtype=jnp.float32):
+    return (
+        {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)},
+        {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)},
+    )
+
+
+def _bn(p, state, x, train: bool, momentum=0.9, eps=1e-5):
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x.astype(jnp.float32), axis=axes)
+        var = jnp.var(x.astype(jnp.float32), axis=axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["bias"], new_state
+
+
+def _maxpool(x, w=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, w, w, 1), (1, w, w, 1), "VALID"
+    )
+
+
+def _avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# architectures
+# ---------------------------------------------------------------------------
+_VGG_PLANS = {
+    # (paper's VGG7 for CIFAR-10: Simonyan-style small net used by BC/TWN)
+    "vgg7": [128, 128, "M", 256, 256, "M", 512, 512, "M"],
+    "vgg11": [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+    "vgg16": [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M", 512, 512, 512, "M"],
+}
+_VGG_FC = {"vgg7": [1024], "vgg11": [4096, 4096], "vgg16": [4096, 4096]}
+
+
+def _w(cfg: CNNConfig, c: int) -> int:
+    return max(8, int(round(c * cfg.width_mult)))
+
+
+def cnn_init(key, cfg: CNNConfig, dtype=jnp.float32) -> Tuple[Dict, Dict]:
+    ks = iter(jax.random.split(key, 256))
+    params: Dict[str, Any] = {}
+    bn: Dict[str, Any] = {}
+
+    if cfg.arch == "lenet5":
+        params["conv1"] = _conv_init(next(ks), 5, 5, cfg.in_channels, 6, dtype)
+        params["conv2"] = _conv_init(next(ks), 5, 5, 6, 16, dtype)
+        hw = cfg.input_hw + 4  # classic LeNet pads 28x28 MNIST to 32x32
+        flat = ((hw - 4) // 2 - 4) // 2  # two valid 5x5 convs + 2x2 pools
+        params["fc1"] = _fc_init(next(ks), flat * flat * 16, 120, dtype)
+        params["fc2"] = _fc_init(next(ks), 120, 84, dtype)
+        params["fc3"] = _fc_init(next(ks), 84, cfg.n_classes, dtype)
+        return params, bn
+
+    if cfg.arch in _VGG_PLANS:
+        cin, hw = cfg.in_channels, cfg.input_hw
+        for i, item in enumerate(_VGG_PLANS[cfg.arch]):
+            if item == "M":
+                hw //= 2
+                continue
+            cout = _w(cfg, item)
+            params[f"conv{i}"] = _conv_init(next(ks), 3, 3, cin, cout, dtype)
+            params[f"bn{i}"], bn[f"bn{i}"] = _bn_init(cout, dtype)
+            cin = cout
+        flat = hw * hw * cin
+        dims = [flat] + [_w(cfg, d) for d in _VGG_FC[cfg.arch]] + [cfg.n_classes]
+        for j in range(len(dims) - 1):
+            params[f"fc{j}"] = _fc_init(next(ks), dims[j], dims[j + 1], dtype)
+        return params, bn
+
+    if cfg.arch == "densenet":
+        # DenseNet-BC: depth 76 -> 12 bottleneck pairs per block, 3 blocks
+        n = (cfg.densenet_depth - 4) // 6
+        g = max(4, int(round(cfg.densenet_growth * cfg.width_mult)))
+        c = 2 * g
+        params["conv_in"] = _conv_init(next(ks), 3, 3, cfg.in_channels, c, dtype)
+        for b in range(3):
+            for i in range(n):
+                pre = f"block{b}/layer{i}"
+                params[f"{pre}/bn1"], bn[f"{pre}/bn1"] = _bn_init(c, dtype)
+                params[f"{pre}/conv1"] = _conv_init(next(ks), 1, 1, c, 4 * g, dtype)
+                params[f"{pre}/bn2"], bn[f"{pre}/bn2"] = _bn_init(4 * g, dtype)
+                params[f"{pre}/conv2"] = _conv_init(next(ks), 3, 3, 4 * g, g, dtype)
+                c += g
+            if b < 2:
+                params[f"trans{b}/bn"], bn[f"trans{b}/bn"] = _bn_init(c, dtype)
+                c2 = c // 2
+                params[f"trans{b}/conv"] = _conv_init(next(ks), 1, 1, c, c2, dtype)
+                c = c2
+        params["bn_out"], bn["bn_out"] = _bn_init(c, dtype)
+        params["fc"] = _fc_init(next(ks), c, cfg.n_classes, dtype)
+        return params, bn
+
+    raise ValueError(f"unknown cnn arch {cfg.arch}")
+
+
+def cnn_apply(params, bn_state, x, cfg: CNNConfig, *, train: bool) -> Tuple[jax.Array, Dict]:
+    new_bn = dict(bn_state)
+
+    def bnorm(name, h):
+        y, s = _bn(params[name], bn_state[name], h, train)
+        new_bn[name] = s
+        return y
+
+    if cfg.arch == "lenet5":
+        x = jnp.pad(x, ((0, 0), (2, 2), (2, 2), (0, 0)))  # 28→32 (classic)
+        h = _maxpool(jax.nn.relu(_conv(params["conv1"], x, padding="VALID")))
+        h = _maxpool(jax.nn.relu(_conv(params["conv2"], h, padding="VALID")))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(_fc(params["fc1"], h))
+        h = jax.nn.relu(_fc(params["fc2"], h))
+        return _fc(params["fc3"], h), new_bn
+
+    if cfg.arch in _VGG_PLANS:
+        h = x
+        for i, item in enumerate(_VGG_PLANS[cfg.arch]):
+            if item == "M":
+                h = _maxpool(h)
+                continue
+            h = jax.nn.relu(bnorm(f"bn{i}", _conv(params[f"conv{i}"], h)))
+        h = h.reshape(h.shape[0], -1)
+        n_fc = len(_VGG_FC[cfg.arch]) + 1
+        for j in range(n_fc):
+            h = _fc(params[f"fc{j}"], h)
+            if j < n_fc - 1:
+                h = jax.nn.relu(h)
+        return h, new_bn
+
+    if cfg.arch == "densenet":
+        n = (cfg.densenet_depth - 4) // 6
+        h = _conv(params["conv_in"], x)
+        for b in range(3):
+            for i in range(n):
+                pre = f"block{b}/layer{i}"
+                y = jax.nn.relu(bnorm(f"{pre}/bn1", h))
+                y = _conv(params[f"{pre}/conv1"], y)
+                y = jax.nn.relu(bnorm(f"{pre}/bn2", y))
+                y = _conv(params[f"{pre}/conv2"], y)
+                h = jnp.concatenate([h, y], axis=-1)
+            if b < 2:
+                h = jax.nn.relu(bnorm(f"trans{b}/bn", h))
+                h = _conv(params[f"trans{b}/conv"], h)
+                h = _maxpool(h)  # avg in the paper; max keeps it simple+fast
+        h = jax.nn.relu(bnorm("bn_out", h))
+        h = _avgpool_global(h)
+        return _fc(params["fc"], h), new_bn
+
+    raise ValueError(cfg.arch)
+
+
+PAPER_CNNS = {
+    "lenet5": CNNConfig("lenet5", "lenet5", in_channels=1, n_classes=10, input_hw=28),
+    "vgg7": CNNConfig("vgg7", "vgg7", n_classes=10),
+    "vgg11": CNNConfig("vgg11", "vgg11", n_classes=100),
+    "vgg16": CNNConfig("vgg16", "vgg16", n_classes=100),
+    "densenet": CNNConfig("densenet", "densenet", n_classes=10),
+}
+
+
+def reduced_cnn(name: str, width_mult: float = 0.25,
+                densenet_depth: int = 22) -> CNNConfig:
+    base = PAPER_CNNS[name]
+    return dataclasses.replace(
+        base, width_mult=width_mult, name=f"{name}-reduced",
+        densenet_depth=(densenet_depth if name == "densenet" else base.densenet_depth),
+    )

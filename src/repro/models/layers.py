@@ -1,0 +1,135 @@
+"""Primitive layers: projections, norms, embeddings, RoPE, activations.
+
+All layers are (init, apply) pairs over plain dicts.  Param names follow the
+conventions consumed by ``repro.nn.sharding.LOGICAL_RULES`` — renaming a
+param here changes how it shards.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.initializers import normal_init, scaled_normal
+
+
+# ---------------------------------------------------------------------------
+# dense / projections
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dims: Sequence[int], out_dims: Sequence[int], *, bias: bool = False,
+               stddev: Optional[float] = None, dtype=jnp.float32):
+    """General projection: kernel shape (*in_dims, *out_dims)."""
+    in_dims = tuple(in_dims)
+    out_dims = tuple(out_dims)
+    fan_in = int(math.prod(in_dims))
+    std = stddev if stddev is not None else 1.0 / math.sqrt(fan_in)
+    p = {"kernel": (jax.random.normal(key, in_dims + out_dims) * std).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros(out_dims, dtype)
+    return p
+
+
+def dense_apply(p, x, *, n_in: int = 1, compute_dtype=None):
+    """Contract the last ``n_in`` dims of x with the first n_in of kernel."""
+    k = p["kernel"]
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        k = k.astype(compute_dtype)
+    lhs = tuple(range(x.ndim - n_in, x.ndim))
+    rhs = tuple(range(n_in))
+    y = jax.lax.dot_general(x, k, (( lhs, rhs), ((), ())))
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((dim,), dtype)}  # gemma-style (1+scale)
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, dim: int, *, stddev: float = 0.02, dtype=jnp.float32):
+    return {"embedding": (jax.random.normal(key, (vocab, dim)) * stddev).astype(dtype)}
+
+
+def embed_apply(p, ids, *, compute_dtype=None):
+    e = p["embedding"]
+    if compute_dtype is not None:
+        e = e.astype(compute_dtype)
+    return jnp.take(e, ids, axis=0)
+
+
+def embed_logits(p, x):
+    """Tied read-out: x @ E^T in fp32 (vocab logits)."""
+    e = p["embedding"].astype(jnp.float32)
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), e)
+
+
+def sinusoidal_pos(seq_len: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(seq_len)[:, None].astype(jnp.float32)
+    i = jnp.arange(dim // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE — supports a traced per-layer base (gemma3 local/global bases)
+# ---------------------------------------------------------------------------
+def apply_rope(x: jax.Array, positions: jax.Array, base) -> jax.Array:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(
+        -jnp.log(jnp.asarray(base, jnp.float32)) * (jnp.arange(half, dtype=jnp.float32) / half)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., T, half)
+    ang = ang[..., None, :]  # broadcast over heads: (..., T, 1, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / misc
+# ---------------------------------------------------------------------------
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "gelu_exact": lambda x: jax.nn.gelu(x, approximate=False),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    """Gemma2-style logit soft capping: cap·tanh(x/cap)."""
+    return (cap * jnp.tanh(logits.astype(jnp.float32) / cap)).astype(logits.dtype)

@@ -1,0 +1,462 @@
+"""LM assembly: embeddings → scan-grouped block stacks → head, plus the
+prefill/decode serving paths, for all five assigned families.
+
+Scan grouping: consecutive layers of identical kind become one
+``lax.scan`` over stacked params (deepseek: a 3-layer dense scan then a
+58-layer MoE scan).  Cyclic patterns (recurrentgemma's R,R,A) scan over
+*units* — one scan step applies the whole unit; the remainder layers are
+unrolled.  Local/global attention (gemma2/3) is NOT heterogeneity: the
+window and rope base ride along the scan as per-layer arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (
+    block_apply,
+    block_cache_init,
+    block_decode,
+    block_init,
+    zero_aux,
+)
+from repro.models.config import GLOBAL_WINDOW, ModelConfig
+from repro.models.layers import (
+    dense_apply,
+    dense_init,
+    embed_apply,
+    embed_init,
+    embed_logits,
+    layernorm_apply,
+    layernorm_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    sinusoidal_pos,
+    softcap as softcap_fn,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    name: str
+    unit: Tuple[str, ...]  # kinds applied per scan step
+    count: int  # scan length (1 => unrolled)
+    offset: int  # first layer index
+
+    @property
+    def stacked(self) -> bool:
+        return self.count > 1
+
+
+def scan_groups(cfg: ModelConfig) -> List[GroupSpec]:
+    kinds = cfg.layer_kinds()
+    runs: List[Tuple[str, int]] = []
+    for k in kinds:
+        if runs and runs[-1][0] == k:
+            runs[-1] = (k, runs[-1][1] + 1)
+        else:
+            runs.append((k, 1))
+    if len(runs) <= 2:
+        groups, off = [], 0
+        for i, (k, c) in enumerate(runs):
+            groups.append(GroupSpec(f"layers{i}", (k,), c, off))
+            off += c
+        return groups
+    # cyclic pattern (hybrid): scan whole units, unroll the remainder
+    u = len(cfg.layer_pattern)
+    unit = tuple(kinds[:u])
+    full, rem = divmod(cfg.n_layers, u)
+    groups = [GroupSpec("units", unit, full, 0)]
+    if rem:
+        groups.append(GroupSpec("tail", tuple(kinds[full * u :]), 1, full * u))
+    return groups
+
+
+class ForwardOut(NamedTuple):
+    logits: jax.Array
+    aux: Dict[str, jax.Array]
+    caches: Any  # None unless prefill
+    hidden: Optional[jax.Array]  # pre-head hidden (for MTP)
+
+
+def _norm_init(cfg, dtype):
+    return rmsnorm_init(cfg.d_model, dtype) if cfg.norm == "rmsnorm" else layernorm_init(cfg.d_model, dtype)
+
+
+def _norm_apply(cfg, p, x):
+    return rmsnorm_apply(p, x) if cfg.norm == "rmsnorm" else layernorm_apply(p, x)
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Whisper encoder: same width, bidirectional, no cross-attn."""
+    return dataclasses.replace(cfg, n_layers=cfg.n_encoder_layers, layer_pattern="G")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 16)
+    params: Dict[str, Any] = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype=dtype)}
+    cross = cfg.family == "encdec"
+
+    def group_params(gkey, spec: GroupSpec, gcfg: ModelConfig, with_cross: bool):
+        sub = {}
+        for j, kind in enumerate(spec.unit):
+            kj = jax.random.fold_in(gkey, j)
+            if spec.stacked:
+                keys = jax.random.split(kj, spec.count)
+                sub[f"sub{j}"] = jax.vmap(
+                    lambda k: block_init(k, gcfg, kind, dtype, cross=with_cross)
+                )(keys)
+            else:
+                sub[f"sub{j}"] = block_init(kj, gcfg, kind, dtype, cross=with_cross)
+        return sub
+
+    if cross:
+        ecfg = _enc_cfg(cfg)
+        enc_groups = scan_groups(ecfg)
+        params["encoder"] = {
+            g.name: group_params(jax.random.fold_in(ks[1], i), g, ecfg, False)
+            for i, g in enumerate(enc_groups)
+        }
+        params["enc_final_norm"] = _norm_init(cfg, dtype)
+
+    for i, g in enumerate(scan_groups(cfg)):
+        params[g.name] = group_params(jax.random.fold_in(ks[2], i), g, cfg, cross)
+
+    params["final_norm"] = _norm_init(cfg, dtype)
+    if not cfg.tie_lm_head:
+        params["lm_head"] = dense_init(ks[3], (cfg.d_model,), (cfg.vocab_size,),
+                                       stddev=1.0 / math.sqrt(cfg.d_model), dtype=dtype)
+    if cfg.use_mtp:
+        mtp_kind = "E" if cfg.moe else "A"
+        params["mtp"] = {
+            "norm_h": _norm_init(cfg, dtype),
+            "norm_e": _norm_init(cfg, dtype),
+            "proj": dense_init(ks[4], (2 * cfg.d_model,), (cfg.d_model,),
+                               stddev=1.0 / math.sqrt(2 * cfg.d_model), dtype=dtype),
+            "block": block_init(ks[5], cfg, mtp_kind, dtype),
+            "final_norm": _norm_init(cfg, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# group application (full / prefill)
+# ---------------------------------------------------------------------------
+def _per_layer_arrays(cfg: ModelConfig, spec: GroupSpec):
+    wins = cfg.layer_windows()[spec.offset : spec.offset + spec.count * len(spec.unit)]
+    rbs = cfg.layer_rope_bases()[spec.offset : spec.offset + spec.count * len(spec.unit)]
+    u = len(spec.unit)
+    win = jnp.asarray(wins, jnp.int32).reshape(spec.count, u)
+    rb = jnp.asarray(rbs, jnp.float32).reshape(spec.count, u)
+    return win, rb
+
+
+def _constrain(x, pspec):
+    """Pin activation sharding (no-op when pspec is None).  Without this
+    GSPMD's solver may migrate the residual stream to a d-sharded /
+    batch-replicated layout inside scan bodies — found via the dry-run
+    collective profile (gemma2 train: 3.6 TB/step of misplaced all-reduces)."""
+    if pspec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, pspec)
+
+
+def _apply_group(gp, x, spec: GroupSpec, cfg: ModelConfig, *, positions, causal,
+                 prefix_len, compute_dtype, enc_out=None, cache_len=0,
+                 act_pspec=None):
+    win, rb = _per_layer_arrays(cfg, spec)
+
+    def unit_apply(p_u, x, win_u, rb_u):
+        aux_tot = zero_aux()
+        caches = {}
+        for j, kind in enumerate(spec.unit):
+            x, aux, cache = block_apply(
+                p_u[f"sub{j}"], x, cfg=cfg, kind=kind, positions=positions,
+                window=win_u[j], rope_base=rb_u[j], prefix_len=prefix_len,
+                causal=causal, compute_dtype=compute_dtype, enc_out=enc_out,
+                cache_len=cache_len,
+            )
+            x = _constrain(x, act_pspec)
+            aux_tot = jax.tree_util.tree_map(jnp.add, aux_tot, aux)
+            if cache_len:
+                caches[f"sub{j}"] = cache
+        return x, aux_tot, caches
+
+    if not spec.stacked:
+        x, aux, caches = unit_apply(gp, x, win[0], rb[0])
+        return x, aux, (caches if cache_len else None)
+
+    def body(x, inp):
+        p_u, win_u, rb_u = inp
+        x, aux, caches = unit_apply(p_u, x, win_u, rb_u)
+        return x, (aux, caches)
+
+    if not cfg.remat:
+        body_fn = body
+    elif cfg.remat_policy == "block_outputs":
+        # save the all-reduced sublayer outputs: the rematted forward skips
+        # every TP collective (§Perf it.2) at ~2·B·T·D/layer extra memory
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names("block_out")
+        )
+    else:
+        body_fn = jax.checkpoint(body)
+    x, (auxs, caches) = jax.lax.scan(body_fn, x, (gp, win, rb))
+    aux = jax.tree_util.tree_map(lambda a: jnp.sum(a, axis=0), auxs)
+    return x, aux, (caches if cache_len else None)
+
+
+def _head(params, cfg: ModelConfig, x):
+    h = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_lm_head:
+        logits = embed_logits(params["embed"], h)
+    else:
+        logits = dense_apply(params["lm_head"], h.astype(jnp.float32))
+    if cfg.final_softcap > 0:
+        logits = softcap_fn(logits, cfg.final_softcap)
+    return logits, h
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, compute_dtype):
+    x = embed_apply(params["embed"], tokens, compute_dtype=compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    return x
+
+
+def _run_encoder(params, cfg: ModelConfig, frames, compute_dtype):
+    B, S, D = frames.shape
+    x = frames.astype(compute_dtype) + sinusoidal_pos(S, D, compute_dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ecfg = _enc_cfg(cfg)
+    for g in scan_groups(ecfg):
+        x, _, _ = _apply_group(params["encoder"][g.name], x, g, ecfg, positions=pos,
+                               causal=False, prefix_len=0, compute_dtype=compute_dtype)
+    return _norm_apply(cfg, params["enc_final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward_lm(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+               compute_dtype=jnp.bfloat16, prefill_len: int = 0,
+               last_only: bool = False, act_pspec=None) -> ForwardOut:
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    enc_out = None
+    prefix_len = 0
+
+    x = _embed_tokens(params, cfg, tokens, compute_dtype)
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(params, cfg, batch["frames"], compute_dtype)
+        x = x + sinusoidal_pos(T, cfg.d_model, compute_dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    elif cfg.family == "vlm":
+        patches = batch["patches"].astype(compute_dtype)  # (B, P, D) stub embeds
+        prefix_len = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+        Tt = T + prefix_len
+        positions = jnp.broadcast_to(jnp.arange(Tt, dtype=jnp.int32)[None], (B, Tt))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    aux = zero_aux()
+    caches: Dict[str, Any] = {}
+    for g in scan_groups(cfg):
+        x = _constrain(x, act_pspec)
+        x, a, c = _apply_group(params[g.name], x, g, cfg, positions=positions,
+                               causal=True, prefix_len=prefix_len,
+                               compute_dtype=compute_dtype, enc_out=enc_out,
+                               cache_len=prefill_len, act_pspec=act_pspec)
+        aux = jax.tree_util.tree_map(jnp.add, aux, a)
+        if prefill_len:
+            caches[g.name] = c
+
+    if cfg.family == "vlm":
+        x = x[:, prefix_len:]
+    if last_only:
+        x = x[:, -1:]  # serving prefill: never materialize (B,T,V) logits
+    logits, hidden = _head(params, cfg, x)
+    return ForwardOut(logits=logits, aux=aux, caches=(caches if prefill_len else None), hidden=hidden)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init + decode
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Zero caches for every layer (fresh decode / dry-run decode cells).
+    Hybrid local-attention layers get ring buffers (window-bounded)."""
+    if dtype is None:
+        dtype = jnp.int8 if cfg.kv_cache_dtype == "int8_fp" else jnp.bfloat16
+    ring = cfg.family == "hybrid"
+    caches: Dict[str, Any] = {}
+    for g in scan_groups(cfg):
+        sub = {}
+        for j, kind in enumerate(g.unit):
+            kd = dtype if kind in ("A", "D", "E") else jnp.bfloat16
+            one = block_cache_init(batch, max_len, cfg, kind, ring=ring, dtype=kd)
+            if g.stacked:
+                one = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a[None], (g.count,) + a.shape), one
+                )
+            sub[f"sub{j}"] = one
+        caches[g.name] = sub
+    if cfg.family == "encdec":
+        # cross k/v per decoder layer, filled by prefill (zeros until then)
+        kshape = (batch, cfg.encoder_len, cfg.n_kv_heads, cfg.head_dim)
+        for g in scan_groups(cfg):
+            for j in range(len(g.unit)):
+                cross = {
+                    "cross_k": jnp.zeros(kshape, dtype),
+                    "cross_v": jnp.zeros(kshape, dtype),
+                }
+                if g.stacked:
+                    cross = jax.tree_util.tree_map(
+                        lambda a: jnp.broadcast_to(a[None], (g.count,) + a.shape), cross
+                    )
+                caches[g.name][f"sub{j}"].update(cross)
+    return caches
+
+
+def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
+              compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Any]:
+    """One decode step.  tokens (B,1); pos scalar int32 (uniform batch).
+    Returns (logits (B,1,V), updated caches)."""
+    B = tokens.shape[0]
+    x = _embed_tokens(params, cfg, tokens, compute_dtype)
+    if cfg.family == "encdec":
+        D = cfg.d_model
+        # absolute sinusoidal position of the current step
+        half = D // 2
+        i = jnp.arange(half, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / D)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :].astype(compute_dtype)
+        x = x + pe
+
+    new_caches: Dict[str, Any] = {}
+    for g in scan_groups(cfg):
+        gp = params[g.name]
+        gc = caches[g.name]
+        win, rb = _per_layer_arrays(cfg, g)
+
+        def unit_decode(p_u, c_u, x, win_u, rb_u):
+            new_c = {}
+            for j, kind in enumerate(g.unit):
+                cache_j = dict(c_u[f"sub{j}"])
+                enc_kv = None
+                if "cross_k" in cache_j:
+                    enc_kv = (cache_j.pop("cross_k"), cache_j.pop("cross_v"))
+                x, cache_j = block_decode(
+                    p_u[f"sub{j}"], x, cache_j, pos, cfg=cfg, kind=kind,
+                    window=win_u[j], rope_base=rb_u[j], compute_dtype=compute_dtype,
+                    enc_kv=enc_kv,
+                )
+                if enc_kv is not None:
+                    cache_j = dict(cache_j)
+                    cache_j["cross_k"], cache_j["cross_v"] = enc_kv
+                new_c[f"sub{j}"] = cache_j
+            return x, new_c
+
+        if not g.stacked:
+            x, nc = unit_decode(gp, gc, x, win[0], rb[0])
+        else:
+            def body(x, inp):
+                p_u, c_u, win_u, rb_u = inp
+                x, nc = unit_decode(p_u, c_u, x, win_u, rb_u)
+                return x, nc
+
+            x, nc = jax.lax.scan(body, x, (gp, gc, win, rb))
+        new_caches[g.name] = nc
+
+    logits, _ = _head(params, cfg, x)
+    return logits, new_caches
+
+
+def prefill_lm(params, batch, cfg: ModelConfig, *, max_len: int,
+               compute_dtype=jnp.bfloat16, act_pspec=None) -> Tuple[jax.Array, Any]:
+    """Process the prompt; returns (last-position logits, caches to max_len)."""
+    out = forward_lm(params, batch, cfg, compute_dtype=compute_dtype,
+                     prefill_len=max_len, last_only=True, act_pspec=act_pspec)
+    caches = out.caches
+    if cfg.family == "encdec":
+        # compute cross k/v per decoder layer from the encoder output
+        enc_out = _run_encoder(params, cfg, batch["frames"], compute_dtype)
+
+        def add_cross(gp, gc, spec: GroupSpec):
+            for j, kind in enumerate(spec.unit):
+                p_sub = gp[f"sub{j}"]
+
+                def cross_kv(p_l):
+                    k = dense_apply(p_l["cross_attn"]["k_proj"], enc_out, compute_dtype=compute_dtype)
+                    v = dense_apply(p_l["cross_attn"]["v_proj"], enc_out, compute_dtype=compute_dtype)
+                    return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+                if spec.stacked:
+                    k, v = jax.vmap(cross_kv)(p_sub)
+                else:
+                    k, v = cross_kv(p_sub)
+                gc[f"sub{j}"]["cross_k"] = k
+                gc[f"sub{j}"]["cross_v"] = v
+
+        for g in scan_groups(cfg):
+            add_cross(params[g.name], caches[g.name], g)
+    return out.logits, caches
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _mtp_loss(params, cfg: ModelConfig, hidden, tokens, compute_dtype):
+    """DeepSeek-V3 multi-token prediction: one extra block predicts t+2."""
+    mtp = params["mtp"]
+    B, T = tokens.shape
+    h = _norm_apply(cfg, mtp["norm_h"], hidden[:, : T - 1])
+    e = _embed_tokens(params, cfg, tokens[:, 1:], compute_dtype)
+    e = _norm_apply(cfg, mtp["norm_e"], e)
+    x = dense_apply(mtp["proj"], jnp.concatenate([h, e], axis=-1).astype(compute_dtype))
+    pos = jnp.broadcast_to(jnp.arange(T - 1, dtype=jnp.int32)[None], (B, T - 1))
+    kind = "E" if cfg.moe else "A"
+    x, _, _ = block_apply(mtp["block"], x, cfg=cfg, kind=kind, positions=pos,
+                          window=None, rope_base=cfg.rope_base, compute_dtype=compute_dtype)
+    hN = _norm_apply(cfg, mtp["final_norm"], x)
+    logits = embed_logits(params["embed"], hN) if cfg.tie_lm_head else dense_apply(params["lm_head"], hN.astype(jnp.float32))
+    # logits[:, i] (built from token i & h_i) predicts token i+2
+    return cross_entropy(logits[:, : T - 2], tokens[:, 2:])
+
+
+def lm_train_loss(params, batch, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+                  moe_aux_coef: float = 0.01, moe_z_coef: float = 1e-3,
+                  act_pspec=None):
+    out = forward_lm(params, batch, cfg, compute_dtype=compute_dtype,
+                     act_pspec=act_pspec)
+    tokens = batch["tokens"]
+    mask = batch.get("loss_mask")
+    ce = cross_entropy(out.logits[:, :-1], tokens[:, 1:],
+                       None if mask is None else mask[:, 1:])
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.moe:
+        loss = loss + moe_aux_coef * out.aux["moe_aux_loss"] + moe_z_coef * out.aux["moe_z_loss"]
+        metrics.update({k: v for k, v in out.aux.items()})
+    if cfg.use_mtp:
+        mtp = _mtp_loss(params, cfg, out.hidden, tokens, compute_dtype)
+        loss = loss + cfg.mtp_weight * mtp
+        metrics["mtp_ce"] = mtp
+    metrics["loss"] = loss
+    return loss, metrics

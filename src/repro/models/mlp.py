@@ -1,0 +1,45 @@
+"""Feed-forward blocks: gated (llama/gemma) and plain (whisper) MLPs."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn, dense_apply, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    gated: bool = True
+    act: str = "silu"
+    bias: bool = False
+
+
+def mlp_init(key, cfg: MLPConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    sd_in = 1.0 / math.sqrt(cfg.d_model)
+    sd_out = 1.0 / math.sqrt(cfg.d_ff)
+    if cfg.gated:
+        return {
+            "gate_proj": dense_init(ks[0], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype),
+            "up_proj": dense_init(ks[1], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype),
+            "down_proj": dense_init(ks[2], (cfg.d_ff,), (cfg.d_model,), bias=cfg.bias, stddev=sd_out, dtype=dtype),
+        }
+    return {
+        "fc1": dense_init(ks[0], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype),
+        "fc2": dense_init(ks[1], (cfg.d_ff,), (cfg.d_model,), bias=cfg.bias, stddev=sd_out, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, *, cfg: MLPConfig, compute_dtype=jnp.bfloat16):
+    f = act_fn(cfg.act)
+    if cfg.gated:
+        g = dense_apply(p["gate_proj"], x, compute_dtype=compute_dtype)
+        u = dense_apply(p["up_proj"], x, compute_dtype=compute_dtype)
+        return dense_apply(p["down_proj"], f(g) * u, compute_dtype=compute_dtype)
+    h = f(dense_apply(p["fc1"], x, compute_dtype=compute_dtype))
+    return dense_apply(p["fc2"], h, compute_dtype=compute_dtype)

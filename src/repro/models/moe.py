@@ -1,0 +1,154 @@
+"""Mixture-of-Experts with top-k routing and capacity-bounded dispatch.
+
+Dispatch is scatter/gather based (GShard capacity semantics, but without the
+(tokens × experts × capacity) one-hot einsum — memory O(N·k·E) transient for
+the position cumsum only).  Tokens over capacity are dropped (contribute
+zero), standard for capacity-factor routing; tests verify exact agreement
+with a dense per-token reference when capacity is ample.
+
+Expert weights are stacked with a leading expert dim (logical axis
+``expert`` → mesh ``model``): expert parallelism falls out of the sharding
+rules, XLA materializes the token all-to-all from the scatter/einsum chain.
+
+Routers: ``softmax`` (olmoe) and ``sigmoid`` (deepseek-v3, gates normalized
+over the selected k).  Router math is fp32; router weights stay unquantized
+(see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    router: str = "softmax"  # or "sigmoid"
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    normalize_topk: bool = True
+    ep_axes: tuple = ("model",)  # mesh axes the expert dim shards over
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    sd_in, sd_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    p = {
+        "router": dense_init(ks[0], (D,), (E,), stddev=sd_in, dtype=jnp.float32),
+        "experts": {
+            "gate_proj": {"kernel": (jax.random.normal(ks[1], (E, D, F)) * sd_in).astype(dtype)},
+            "up_proj": {"kernel": (jax.random.normal(ks[2], (E, D, F)) * sd_in).astype(dtype)},
+            "down_proj": {"kernel": (jax.random.normal(ks[3], (E, F, D)) * sd_out).astype(dtype)},
+        },
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate_proj": dense_init(kss[0], (D,), (Fs,), stddev=sd_in, dtype=dtype),
+            "up_proj": dense_init(kss[1], (D,), (Fs,), stddev=sd_in, dtype=dtype),
+            "down_proj": dense_init(kss[2], (Fs,), (D,), stddev=1.0 / math.sqrt(Fs), dtype=dtype),
+        }
+    return p
+
+
+def _route(p, x_flat, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array, jax.Array, Dict]:
+    """Returns (gates (N,k), expert_idx (N,k), logits fp32, aux metrics)."""
+    logits = jnp.einsum("ND,DE->NE", x_flat.astype(jnp.float32), p["router"]["kernel"])
+    if cfg.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(scores, cfg.top_k)
+    if cfg.normalize_topk:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    # Switch-style load-balancing aux loss over all k assignments + z-loss.
+    E = cfg.n_experts
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0
+    ) / cfg.top_k
+    aux = {
+        "moe_aux_loss": E * jnp.sum(me * ce),
+        "moe_z_loss": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+    return gates, idx, logits, aux
+
+
+def moe_apply(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
+              capacity: int = 0) -> Tuple[jax.Array, Dict]:
+    """x (B,T,D) -> (B,T,D).  ``capacity`` overrides the computed per-expert
+    buffer (decode paths pass a fixed small capacity for shape stability)."""
+    B, T, D = x.shape
+    N, k, E = B * T, cfg.top_k, cfg.n_experts
+    x_flat = x.reshape(N, D)
+    gates, idx, _, aux = _route(p, x_flat, cfg)
+
+    C = capacity or max(1, int(math.ceil(cfg.capacity_factor * N * k / E)))
+
+    # --- dispatch: slot-major priority (all top-1 before top-2, GShard) ----
+    e_ids = idx.T.reshape(-1)  # (kN,) expert of each assignment
+    token_ids = jnp.tile(jnp.arange(N, dtype=jnp.int32), (k,))
+    g_flat = gates.T.reshape(-1).astype(jnp.float32)
+    onehot = jax.nn.one_hot(e_ids, E, dtype=jnp.int32)  # (kN, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos_all, e_ids[:, None], axis=1)[:, 0]  # (kN,)
+    keep = (pos < C).astype(compute_dtype)
+    pos_c = jnp.minimum(pos, C - 1)
+
+    xb = x_flat.astype(compute_dtype)
+    buf = jnp.zeros((E, C, D), compute_dtype)
+    buf = buf.at[e_ids, pos_c].add(xb[token_ids] * keep[:, None])
+
+    # --- expert FFN (gated) -----------------------------------------------
+    we = p["experts"]
+    f = act_fn(cfg.act)
+    h = jnp.einsum("ECD,EDF->ECF", buf, we["gate_proj"]["kernel"].astype(compute_dtype))
+    u = jnp.einsum("ECD,EDF->ECF", buf, we["up_proj"]["kernel"].astype(compute_dtype))
+    out_buf = jnp.einsum("ECF,EFD->ECD", f(h) * u, we["down_proj"]["kernel"].astype(compute_dtype))
+
+    # --- combine ------------------------------------------------------------
+    y_assign = out_buf[e_ids, pos_c] * (g_flat.astype(compute_dtype) * keep)[:, None]
+    y = jnp.zeros((N, D), compute_dtype).at[token_ids].add(y_assign)
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        g = jnp.einsum("ND,DF->NF", xb, sh["gate_proj"]["kernel"].astype(compute_dtype))
+        u2 = jnp.einsum("ND,DF->NF", xb, sh["up_proj"]["kernel"].astype(compute_dtype))
+        y = y + jnp.einsum("NF,FD->ND", f(g) * u2, sh["down_proj"]["kernel"].astype(compute_dtype))
+
+    return y.reshape(B, T, D), aux
+
+
+def moe_apply_dense_ref(p, x, *, cfg: MoEConfig) -> jax.Array:
+    """O(E·N) reference: every expert computes every token, gated combine.
+    Used by tests as the no-drop oracle (fp32)."""
+    B, T, D = x.shape
+    N = B * T
+    x_flat = x.reshape(N, D).astype(jnp.float32)
+    gates, idx, _, _ = _route(p, x_flat, cfg)
+    we = p["experts"]
+    f = act_fn(cfg.act)
+    h = jnp.einsum("ND,EDF->ENF", x_flat, we["gate_proj"]["kernel"].astype(jnp.float32))
+    u = jnp.einsum("ND,EDF->ENF", x_flat, we["up_proj"]["kernel"].astype(jnp.float32))
+    all_out = jnp.einsum("ENF,EFD->END", f(h) * u, we["down_proj"]["kernel"].astype(jnp.float32))
+    dense_gates = jnp.zeros((N, cfg.n_experts), jnp.float32)
+    dense_gates = jax.vmap(lambda g, i, row: row.at[i].add(g))(gates, idx, dense_gates)
+    y = jnp.einsum("NE,END->ND", dense_gates, all_out)
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        g = x_flat @ sh["gate_proj"]["kernel"].astype(jnp.float32)
+        u2 = x_flat @ sh["up_proj"]["kernel"].astype(jnp.float32)
+        y = y + (f(g) * u2) @ sh["down_proj"]["kernel"].astype(jnp.float32)
+    return y.reshape(B, T, D)

@@ -1,0 +1,149 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    r_t = σ(W_a·x_t + b_a)              (recurrence gate, block-diag per head)
+    i_t = σ(W_x·x_t + b_x)              (input gate,      block-diag per head)
+    a_t = exp(-c·softplus(Λ)·r_t)       (c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over time (log₂T depth);
+decode is the single-step recurrence.  The recurrence is fp32 (the decay
+products underflow bf16); Λ ("a_param") stays unquantized (DESIGN.md
+§Arch-applicability).
+
+The full recurrent *block* is: in_proj_x → temporal conv (width 4, causal,
+depthwise) → RG-LRU, gated by gelu(in_proj_y), then out_proj.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init
+
+C_FACTOR = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    n_heads: int
+    conv_width: int = 4
+
+
+def rglru_init(key, cfg: RGLRUConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    D, R, H = cfg.d_model, cfg.d_rnn, cfg.n_heads
+    dh = R // H
+    sd = 1.0 / math.sqrt(D)
+    sdh = 1.0 / math.sqrt(dh)
+    # Λ init so that a ∈ (0.9, 0.999) roughly (Griffin init).
+    u = jax.random.uniform(ks[0], (R,), minval=0.9, maxval=0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / C_FACTOR))  # softplus^-1(-log u / c)
+    return {
+        "in_proj_x": dense_init(ks[1], (D,), (R,), stddev=sd, dtype=dtype),
+        "in_proj_y": dense_init(ks[2], (D,), (R,), stddev=sd, dtype=dtype),
+        "conv1d": {"kernel": (jax.random.normal(ks[3], (cfg.conv_width, R)) * sdh).astype(dtype)},
+        "rg_lru": {
+            "a_param": a_param.astype(jnp.float32),
+            "input_gate": {
+                "kernel": (jax.random.normal(ks[4], (H, dh, dh)) * sdh).astype(dtype),
+                "bias": jnp.zeros((H, dh), dtype),
+            },
+            "a_gate": {
+                "kernel": (jax.random.normal(ks[5], (H, dh, dh)) * sdh).astype(dtype),
+                "bias": jnp.zeros((H, dh), dtype),
+            },
+        },
+        "out_proj": dense_init(jax.random.fold_in(key, 7), (R,), (D,), stddev=1.0 / math.sqrt(R), dtype=dtype),
+    }
+
+
+def _block_diag_gate(gp, x, H: int, compute_dtype):
+    """x (B,T,R) -> σ(blockdiag(W)·x + b): einsum over per-head blocks."""
+    B, T, R = x.shape
+    dh = R // H
+    xh = x.reshape(B, T, H, dh)
+    y = jnp.einsum("BTHi,Hij->BTHj", xh.astype(compute_dtype), gp["kernel"].astype(compute_dtype))
+    y = y + gp["bias"].astype(compute_dtype)
+    return jax.nn.sigmoid(y.astype(jnp.float32)).reshape(B, T, R)
+
+
+def _conv_causal(kernel, x, state=None):
+    """Depthwise causal conv, width W. x (B,T,R); state (B,W-1,R) or None.
+    Returns (y, new_state)."""
+    W = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+W-1, R)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * kernel[W - 1 - i].astype(x.dtype)
+        for i in range(W)
+    )
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else pad
+    return y, new_state
+
+
+def _gates(p, xc, H, compute_dtype):
+    lru = p["rg_lru"]
+    r = _block_diag_gate(lru["a_gate"], xc, H, compute_dtype)  # (B,T,R) fp32
+    i = _block_diag_gate(lru["input_gate"], xc, H, compute_dtype)
+    log_a = -C_FACTOR * jax.nn.softplus(lru["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_block_apply(p, x, *, cfg: RGLRUConfig, compute_dtype=jnp.bfloat16,
+                      h0=None, conv_state=None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence recurrent block.  Returns (y, final_cache)."""
+    B, T, D = x.shape
+    xb = dense_apply(p["in_proj_x"], x, compute_dtype=compute_dtype)
+    yb = jax.nn.gelu(dense_apply(p["in_proj_y"], x, compute_dtype=compute_dtype))
+    xc, new_conv = _conv_causal(p["conv1d"]["kernel"], xb, conv_state)
+    a, gated_x = _gates(p, xc, cfg.n_heads, compute_dtype)
+
+    if h0 is not None:
+        # fold the carried state in as a virtual step: b_0 = h0, a_0 = 1
+        a_ext = jnp.concatenate([jnp.ones((B, 1, a.shape[-1]), a.dtype), a], axis=1)
+        b_ext = jnp.concatenate([h0.astype(jnp.float32)[:, None, :], gated_x], axis=1)
+    else:
+        a_ext, b_ext = a, gated_x
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    if h0 is not None:
+        h = h[:, 1:, :]
+    y = (h.astype(compute_dtype) * yb)
+    out = dense_apply(p["out_proj"], y, compute_dtype=compute_dtype)
+    cache = {"h": h[:, -1, :], "conv": new_conv}
+    return out, cache
+
+
+def rglru_init_cache(batch: int, cfg: RGLRUConfig, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+    }
+
+
+def rglru_block_decode(p, x, cache, *, cfg: RGLRUConfig, compute_dtype=jnp.bfloat16):
+    """Single-step decode: x (B,1,D) -> (y (B,1,D), cache)."""
+    xb = dense_apply(p["in_proj_x"], x, compute_dtype=compute_dtype)
+    yb = jax.nn.gelu(dense_apply(p["in_proj_y"], x, compute_dtype=compute_dtype))
+    xc, new_conv = _conv_causal(p["conv1d"]["kernel"], xb, cache["conv"])
+    a, gated_x = _gates(p, xc, cfg.n_heads, compute_dtype)
+    h = a[:, 0] * cache["h"] + gated_x[:, 0]  # (B,R) fp32
+    y = (h[:, None, :].astype(compute_dtype) * yb)
+    out = dense_apply(p["out_proj"], y, compute_dtype=compute_dtype)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,175 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060), chunked form.
+
+Per step (head h, state dim N, head dim P):
+    h_t = exp(dt_t·A_h)·h_{t-1} + dt_t·(B_t ⊗ x_t)        (B_t ∈ ℝ^N shared)
+    y_t = C_t·h_t + D_h·x_t
+
+The chunked algorithm (TPU-friendly: all matmuls, one tiny scan over chunks):
+  within-chunk "attention"  y_diag[i] = Σ_{j≤i} (C_i·B_j)·exp(cum_i-cum_j)·dt_j·x_j
+  chunk states              S_c       = Σ_j exp(end-cum_j)·dt_j·(B_j ⊗ x_j)
+  inter-chunk recurrence    H_c       = exp(Σ log a)·H_{c-1} + S_c      (lax.scan)
+  cross term                y_off[i]  = exp(cum_i)·(C_i·H_{c-1})
+
+Recurrence/decay math is fp32 (bf16 underflows the decay products).
+The (Q×Q) within-chunk block is the natural Pallas-kernel target — the
+pure-jnp version here doubles as its oracle (kernels/ssd/ref.py imports it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+from repro.models.rglru import _conv_causal
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int  # P = d_inner / n_heads
+    d_state: int = 128
+    conv_width: int = 4
+    chunk: int = 128
+
+
+def ssd_init(key, cfg: SSDConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    D, R, H, N = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.d_state
+    sd = 1.0 / math.sqrt(D)
+    conv_dim = R + 2 * N  # x ++ B ++ C
+    dt = jnp.exp(
+        jax.random.uniform(ks[5], (H,)) * (math.log(0.1) - math.log(0.001)) + math.log(0.001)
+    )
+    return {
+        "in_proj_z": dense_init(ks[0], (D,), (R,), stddev=sd, dtype=dtype),
+        "in_proj_x": dense_init(ks[1], (D,), (R,), stddev=sd, dtype=dtype),
+        "in_proj_B": dense_init(ks[2], (D,), (N,), stddev=sd, dtype=dtype),
+        "in_proj_C": dense_init(ks[3], (D,), (N,), stddev=sd, dtype=dtype),
+        "in_proj_dt": dense_init(ks[4], (D,), (H,), stddev=sd, dtype=dtype),
+        "conv1d": {"kernel": (jax.random.normal(ks[6], (cfg.conv_width, conv_dim)) * 0.1).astype(dtype)},
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "ssm_D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),  # softplus^-1
+        "norm": rmsnorm_init(R, dtype),
+        "out_proj": dense_init(ks[7], (R,), (D,), stddev=1.0 / math.sqrt(R), dtype=dtype),
+    }
+
+
+def _in_projections(p, u, cfg: SSDConfig, compute_dtype, conv_state=None):
+    """Shared by full/decode: projections + causal conv over (x,B,C)."""
+    z = dense_apply(p["in_proj_z"], u, compute_dtype=compute_dtype)
+    x = dense_apply(p["in_proj_x"], u, compute_dtype=compute_dtype)
+    Bm = dense_apply(p["in_proj_B"], u, compute_dtype=compute_dtype)
+    Cm = dense_apply(p["in_proj_C"], u, compute_dtype=compute_dtype)
+    dt_raw = dense_apply(p["in_proj_dt"], u, compute_dtype=compute_dtype)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc, new_conv = _conv_causal(p["conv1d"]["kernel"], jax.nn.silu(xbc), conv_state)
+    R, N = cfg.d_inner, cfg.d_state
+    x, Bm, Cm = xbc[..., :R], xbc[..., R : R + N], xbc[..., R + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    return z, x, Bm, Cm, dt, new_conv
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk: int):
+    """Chunked SSD scan (pure jnp, fp32).  x (B,T,H,P); dt (B,T,H);
+    A (H,) negative; Bm/Cm (B,T,N).  Returns y (B,T,H,P), final state
+    (B,H,P,N)."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    nc = T // Q
+    assert T % Q == 0, (T, Q)
+    xf = x.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    dtc = dt.astype(jnp.float32).reshape(B, nc, Q, H)
+    Bc = Bm.astype(jnp.float32).reshape(B, nc, Q, N)
+    Cc = Cm.astype(jnp.float32).reshape(B, nc, Q, N)
+
+    la = dtc * A  # (B,nc,Q,H) log-decay per step (negative)
+    cum = jnp.cumsum(la, axis=2)
+    total = cum[:, :, -1, :]  # (B,nc,H)
+
+    bx = dtc[..., None] * xf  # dt_j·x_j  (B,nc,Q,H,P)
+
+    # within-chunk: decay (B,nc,Q,Q,H) lower-triangular
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("bciN,bcjN->bcij", Cc, Bc)  # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, bx)
+
+    # chunk states
+    decay_out = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    S = jnp.einsum("bcjh,bcjN,bcjhp->bchNp", decay_out, Bc, bx)  # (B,nc,H,N,P)
+
+    # inter-chunk scan
+    Ac = jnp.exp(total)  # (B,nc,H)
+
+    def step(h, inp):
+        a_c, s_c = inp  # (B,H), (B,H,N,P)
+        h_new = a_c[:, :, None, None] * h + s_c
+        return h_new, h  # emit state BEFORE the chunk
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_last, h_prev = jax.lax.scan(step, h0, (jnp.moveaxis(Ac, 1, 0), jnp.moveaxis(S, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,N,P)
+
+    y_off = jnp.einsum("bciN,bchNp,bcih->bcihp", Cc, h_prev, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(B, T, H, P)
+    return y, jnp.swapaxes(h_last, -1, -2)  # final state (B,H,P,N)
+
+
+def ssd_block_apply(p, u, *, cfg: SSDConfig, compute_dtype=jnp.bfloat16,
+                    conv_state=None, h0=None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence mamba2 block. u (B,T,D) -> (y (B,T,D), cache)."""
+    del h0  # full pass always starts from zero state (no context carry-over)
+    B, T, D = u.shape
+    H, P = cfg.n_heads, cfg.head_dim
+    z, x, Bm, Cm, dt, new_conv = _in_projections(p, u, cfg, compute_dtype, conv_state)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    # pad T to a chunk multiple: dt=0 ⇒ decay 1 and zero input — state exact
+    Q = min(cfg.chunk, T)
+    pad = (-T) % Q
+    xh = x.reshape(B, T, H, P)
+    if pad:
+        pt = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        xh, dt, Bm, Cm = pt(xh), pt(dt), pt(Bm), pt(Cm)
+    y, h_last = ssd_scan_ref(xh, dt, A, Bm, Cm, chunk=Q)
+    if pad:
+        y = y[:, :T]
+    y = y + p["ssm_D"][None, None, :, None] * x.reshape(B, T, H, P).astype(jnp.float32)
+    y = y.reshape(B, T, cfg.d_inner).astype(compute_dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y, compute_dtype=compute_dtype)
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def ssd_init_cache(batch: int, cfg: SSDConfig, dtype=jnp.bfloat16):
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssd_block_decode(p, u, cache, *, cfg: SSDConfig, compute_dtype=jnp.bfloat16):
+    """Single-step decode. u (B,1,D)."""
+    B, T, D = u.shape
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.d_state
+    z, x, Bm, Cm, dt, new_conv = _in_projections(p, u, cfg, compute_dtype, cache["conv"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :] * A)  # (B,H)
+    xh = x.reshape(B, H, P).astype(jnp.float32)
+    dB = dt[:, 0, :, None, None] * (xh[..., None] * Bm[:, 0, None, None, :].astype(jnp.float32))
+    h = a[:, :, None, None] * cache["h"] + dB  # (B,H,P,N)
+    y = jnp.einsum("bhpN,bN->bhp", h, Cm[:, 0].astype(jnp.float32))
+    y = y + p["ssm_D"][None, :, None] * xh
+    y = y.reshape(B, 1, cfg.d_inner).astype(compute_dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = dense_apply(p["out_proj"], y, compute_dtype=compute_dtype)
+    return out, {"h": h, "conv": new_conv}

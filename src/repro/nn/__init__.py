@@ -1,0 +1,54 @@
+"""Minimal functional NN toolkit: param trees, initializers, dtype policies,
+and path-based logical-axis sharding rules (MaxText-style).
+
+No flax/haiku dependency — every layer in ``repro.models`` is an
+(init, apply) pair over plain nested dicts of jnp arrays.
+"""
+from repro.nn.tree import (
+    tree_paths,
+    tree_map_with_path,
+    flatten_with_paths,
+    path_str,
+    tree_size,
+    tree_bytes,
+)
+from repro.nn.dtypes import DTypePolicy, DEFAULT_POLICY
+from repro.nn.initializers import (
+    normal_init,
+    scaled_normal,
+    zeros_init,
+    ones_init,
+    he_normal,
+    lecun_normal,
+    truncated_normal_stddev,
+)
+from repro.nn.sharding import (
+    ShardingRules,
+    logical_to_pspec,
+    pspec_tree_for_params,
+    shardings_for_tree,
+    PROFILES,
+)
+
+__all__ = [
+    "tree_paths",
+    "tree_map_with_path",
+    "flatten_with_paths",
+    "path_str",
+    "tree_size",
+    "tree_bytes",
+    "DTypePolicy",
+    "DEFAULT_POLICY",
+    "normal_init",
+    "scaled_normal",
+    "zeros_init",
+    "ones_init",
+    "he_normal",
+    "lecun_normal",
+    "truncated_normal_stddev",
+    "ShardingRules",
+    "logical_to_pspec",
+    "pspec_tree_for_params",
+    "shardings_for_tree",
+    "PROFILES",
+]

@@ -1,0 +1,30 @@
+"""Mixed-precision dtype policy.
+
+Params are kept in ``param_dtype`` (fp32 by default — SYMOG's regularizer
+gradient is a small quantization error that would drown in bf16 rounding),
+compute runs in ``compute_dtype`` (bf16 on TPU), and reductions/logits in
+``accum_dtype`` (fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def cast_compute(self, x):
+        return x.astype(self.compute_dtype) if x.dtype != self.compute_dtype else x
+
+    def cast_accum(self, x):
+        return x.astype(self.accum_dtype) if x.dtype != self.accum_dtype else x
+
+
+DEFAULT_POLICY = DTypePolicy()
+# CPU-test policy: everything fp32 (bf16 matmuls on CPU are slow + lossy).
+FP32_POLICY = DTypePolicy(compute_dtype=jnp.float32)

@@ -1,0 +1,74 @@
+"""Weight initializers (pure functions of (key, shape, dtype))."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+    return init
+
+
+def truncated_normal_stddev(stddev: float):
+    def init(key, shape, dtype=jnp.float32):
+        # 2-sigma truncation, variance-corrected like jax.nn.initializers.
+        x = jax.random.truncated_normal(key, -2.0, 2.0, shape)
+        return (x * (stddev / 0.87962566)).astype(dtype)
+
+    return init
+
+
+def scaled_normal(scale: float = 1.0, fan_axis: int = 0):
+    """stddev = sqrt(scale / fan_in) where fan_in = shape[fan_axis]."""
+
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = shape[fan_axis]
+        stddev = float(np.sqrt(scale / max(fan_in, 1)))
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+    return init
+
+
+def _fans(shape, in_axes, out_axes):
+    fan_in = int(np.prod([shape[a] for a in in_axes]))
+    fan_out = int(np.prod([shape[a] for a in out_axes]))
+    return fan_in, fan_out
+
+
+def he_normal(in_axes=(0,)):
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = int(np.prod([shape[a] for a in in_axes]))
+        stddev = float(np.sqrt(2.0 / max(fan_in, 1)))
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+    return init
+
+
+def lecun_normal(in_axes=(0,)):
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = int(np.prod([shape[a] for a in in_axes]))
+        stddev = float(np.sqrt(1.0 / max(fan_in, 1)))
+        return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+    return init
+
+
+def zeros_init():
+    def init(key, shape, dtype=jnp.float32):
+        del key
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones_init():
+    def init(key, shape, dtype=jnp.float32):
+        del key
+        return jnp.ones(shape, dtype)
+
+    return init

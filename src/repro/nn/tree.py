@@ -1,0 +1,67 @@
+"""Pytree path utilities.
+
+Params are nested dicts of jnp arrays. Paths are tuples of str keys; a
+``path_str`` like ``"decoder/layers/attn/q_proj/kernel"`` is used by the
+sharding rules and by SYMOG's quantizable-parameter predicate.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+
+def path_str(path: Tuple[Any, ...]) -> str:
+    """Render a jax KeyPath (or tuple of strings) as a '/'-joined string."""
+    parts: List[str] = []
+    for p in path:
+        if isinstance(p, str):
+            parts.append(p)
+        elif hasattr(p, "key"):  # DictKey
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):  # SequenceKey
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):  # GetAttrKey
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_paths(tree: Any) -> List[str]:
+    """All leaf paths of a pytree, as strings."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [path_str(p) for p, _ in flat]
+
+
+def flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(p), v) for p, v in flat]
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any, *rest: Any) -> Any:
+    """Like tree_map but fn receives (path_str, leaf, *rest_leaves)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x, *r: fn(path_str(p), x, *r), tree, *rest
+    )
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return int(
+        sum(np.prod(x.shape) if hasattr(x, "shape") else 1 for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def tree_bytes(tree: Any) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_select(tree: Any, predicate: Callable[[str, Any], bool]) -> Dict[str, Any]:
+    """Return {path: leaf} for leaves where predicate(path, leaf) is True."""
+    return {p: v for p, v in flatten_with_paths(tree) if predicate(p, v)}

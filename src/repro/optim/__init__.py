@@ -1,0 +1,22 @@
+"""Optimizers: SGD+Nesterov (paper), AdamW, transformation chains."""
+from repro.optim.transform import (
+    GradientTransformation,
+    apply_updates,
+    chain,
+    identity,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.sgd import sgd
+from repro.optim.adamw import adamw
+
+__all__ = [
+    "GradientTransformation",
+    "apply_updates",
+    "chain",
+    "identity",
+    "clip_by_global_norm",
+    "global_norm",
+    "sgd",
+    "adamw",
+]

@@ -1,0 +1,57 @@
+"""AdamW — used by the transformer/MoE examples (beyond-paper substrate).
+
+Decoupled weight decay; bias-corrected first/second moments kept fp32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> GradientTransformation:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            mu=jax.tree_util.tree_map(z, params),
+            nu=jax.tree_util.tree_map(z, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, *, lr):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamWState(mu=mu, nu=nu, count=count)
+
+    return GradientTransformation(init, update)

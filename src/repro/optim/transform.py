@@ -1,0 +1,64 @@
+"""Minimal optax-style gradient transformations (optax unavailable offline).
+
+A ``GradientTransformation`` is an (init, update) pair:
+
+    state            = tx.init(params)
+    updates, state   = tx.update(grads, state, params, lr=...)
+    new_params       = apply_updates(params, updates)
+
+``update`` receives the current learning rate as a traced scalar so schedules
+live in the trainer (keeps optimizer state mesh-shardable and schedule-free).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]  # (grads, state, params, *, lr) -> (updates, state)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p, params, updates
+    )
+
+
+def chain(*txs: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(tx.init(params) for tx in txs)
+
+    def update(grads, state, params, *, lr):
+        new_state = []
+        for tx, s in zip(txs, state):
+            grads, s = tx.update(grads, s, params, lr=lr)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def identity() -> GradientTransformation:
+    return GradientTransformation(lambda p: (), lambda g, s, p, *, lr: (g, s))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, *, lr):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), state
+
+    return GradientTransformation(init, update)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))

@@ -1,0 +1,66 @@
+"""Batched serving: jit'd prefill + decode with a uniform-position KV cache.
+
+The engine serves either float params or SYMOG post-quantized params (the
+quantized values are exact fixed-point numbers in float representation, so
+the same forward code serves both — the packed-int8 fast path lives in
+``repro.kernels.fixedpoint_matmul`` and is exercised by
+``examples/serve_quantized.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import decode_lm, init_caches, prefill_lm
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: Any
+    max_len: int
+    compute_dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        cfg, cd = self.cfg, self.compute_dtype
+
+        @jax.jit
+        def _prefill(params, batch):
+            return prefill_lm(params, batch, cfg, max_len=self.max_len, compute_dtype=cd)
+
+        @jax.jit
+        def _decode(params, caches, tokens, pos):
+            return decode_lm(params, caches, tokens, pos, cfg, compute_dtype=cd)
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    def prefill(self, batch: Dict[str, jax.Array]):
+        return self._prefill(self.params, batch)
+
+    def decode(self, caches, tokens, pos):
+        return self._decode(self.params, caches, tokens, pos)
+
+    def generate(self, batch: Dict[str, jax.Array], steps: int) -> jax.Array:
+        """Greedy continuation of a batched prompt; returns (B, steps)."""
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        logits, caches = self.prefill(batch)
+        offset = self.cfg.prefix_len if self.cfg.family == "vlm" else 0
+        cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [cur]
+        for i in range(steps - 1):
+            logits, caches = self.decode(caches, cur, jnp.int32(offset + T + i))
+            cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(cur)
+        return jnp.concatenate(out, axis=1)
+
+
+def greedy_generate(cfg: ModelConfig, params, batch, steps: int, max_len: int,
+                    compute_dtype=jnp.bfloat16) -> jax.Array:
+    return ServeEngine(cfg, params, max_len, compute_dtype).generate(batch, steps)

@@ -1,0 +1,19 @@
+from repro.train.trainer import (
+    TrainState,
+    CNNTrainState,
+    init_train_state,
+    make_train_step,
+    make_cnn_train_step,
+    make_cnn_eval,
+    softmax_xent,
+)
+
+__all__ = [
+    "TrainState",
+    "CNNTrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_cnn_train_step",
+    "make_cnn_eval",
+    "softmax_xent",
+]

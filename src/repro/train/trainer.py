@@ -1,0 +1,201 @@
+"""Training step factory: grads (+ optional microbatch accumulation and
+remat) → SYMOG regularizer gradient (Alg. 1 l.15) → optimizer → weight
+clipping (l.17).  Pure functions of (TrainState, batch) — pjit-ready.
+
+SYMOG integration is exactly the paper's update:
+    w ← w − η(∂C/∂w + λ(step)·∂R/∂w) ;  w ← Clip(w, ±Δ(2^{N-1}−1))
+with λ on its exponential schedule and the quantization-error gradient from
+``repro.core``.  ``symog=None`` gives the float baseline trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SymogConfig,
+    SymogState,
+    clip_tree,
+    lambda_at,
+    reg_grad,
+    symog_init,
+)
+from repro.models.config import ModelConfig
+from repro.models.lm import lm_train_loss
+from repro.optim import GradientTransformation, apply_updates, global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    symog: Optional[SymogState]
+    step: jax.Array  # int32 scalar
+
+
+def init_train_state(params, tx: GradientTransformation,
+                     symog_cfg: Optional[SymogConfig] = None) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=tx.init(params),
+        symog=symog_init(params, symog_cfg) if symog_cfg else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _accum_grads(loss_fn, params, batch, accum: int, mb_constraint=None):
+    """Microbatch gradient accumulation via lax.scan (sequential — trades
+    activation memory for steps; required for the 1M-token train_4k cells).
+
+    ``mb_constraint``: optional fn applied to each microbatch (a
+    with_sharding_constraint pinning the batch axis — without it GSPMD is
+    free to mis-shard the (accum, B/accum, ...) reshape and microbatch
+    activations balloon; found via the dry-run collective parse)."""
+    if accum <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def split(x):
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+    mbatches = jax.tree_util.tree_map(split, batch)
+
+    def body(carry, mb):
+        g_acc, l_acc, m_acc = carry
+        if mb_constraint is not None:
+            mb = mb_constraint(mb)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
+        m_acc = jax.tree_util.tree_map(jnp.add, m_acc, metrics)
+        return (g_acc, l_acc + loss, m_acc), None
+
+    zeros_g = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    mb0 = jax.tree_util.tree_map(lambda x: x[0], mbatches)
+    zeros_m = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params, mb0)
+    zeros_m = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), zeros_m)
+    (grads, loss, metrics), _ = jax.lax.scan(body, (zeros_g, jnp.zeros(()), zeros_m), mbatches)
+    scale = 1.0 / accum
+    return (
+        loss * scale,
+        jax.tree_util.tree_map(lambda m: m * scale, metrics),
+        jax.tree_util.tree_map(lambda g: g * scale, grads),
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tx: GradientTransformation,
+    lr_schedule: Callable,
+    *,
+    symog_cfg: Optional[SymogConfig] = None,
+    accum_steps: int = 1,
+    compute_dtype=jnp.bfloat16,
+    loss_fn: Optional[Callable] = None,
+    mb_constraint: Optional[Callable] = None,
+    act_pspec=None,
+    cast_params: bool = False,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict[str, jax.Array]]]:
+    if loss_fn is None:
+        def loss_fn(params, batch):  # noqa: F811 — default LM loss
+            return lm_train_loss(params, batch, cfg, compute_dtype=compute_dtype,
+                                 act_pspec=act_pspec)
+
+    if cast_params:
+        # mixed precision: fp32 master weights live in the optimizer; the
+        # forward/backward consume a bf16 copy cast ONCE per step — FSDP
+        # param all-gathers then move bf16, not fp32 (§Perf iteration 4)
+        base_loss_fn = loss_fn
+
+        def loss_fn(params, batch):  # noqa: F811
+            cparams = jax.tree_util.tree_map(
+                lambda p: p.astype(compute_dtype)
+                if p.dtype == jnp.float32 and p.ndim >= 1 else p,
+                params,
+            )
+            return base_loss_fn(cparams, batch)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        loss, metrics, grads = _accum_grads(loss_fn, state.params, batch, accum_steps,
+                                            mb_constraint=mb_constraint)
+        lr = lr_schedule(state.step)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = global_norm(grads)
+        metrics["lr"] = lr
+
+        if symog_cfg is not None:
+            lam = lambda_at(symog_cfg, state.step)
+            rg = reg_grad(state.params, state.symog, symog_cfg)
+            grads = jax.tree_util.tree_map(
+                lambda g, r: g + lam * r.astype(g.dtype), grads, rg
+            )
+            metrics["symog_lambda"] = lam
+
+        updates, opt_state = tx.update(grads, state.opt_state, state.params, lr=lr)
+        params = apply_updates(state.params, updates)
+        if symog_cfg is not None and symog_cfg.clip:
+            params = clip_tree(params, state.symog, symog_cfg)
+
+        new_state = TrainState(
+            params=params, opt_state=opt_state, symog=state.symog, step=state.step + 1
+        )
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# CNN variant (paper models: BN state rides along, images/labels loss)
+# ---------------------------------------------------------------------------
+class CNNTrainState(NamedTuple):
+    params: Any
+    bn_state: Any
+    opt_state: Any
+    symog: Optional[SymogState]
+    step: jax.Array
+
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def make_cnn_train_step(cnn_cfg, tx: GradientTransformation, lr_schedule,
+                        *, symog_cfg: Optional[SymogConfig] = None):
+    from repro.models.cnn import cnn_apply
+
+    def loss_fn(params, bn_state, batch):
+        logits, new_bn = cnn_apply(params, bn_state, batch["images"], cnn_cfg, train=True)
+        loss = softmax_xent(logits, batch["labels"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+        return loss, (new_bn, {"loss": loss, "acc": acc})
+
+    def train_step(state: CNNTrainState, batch):
+        (loss, (bn_state, metrics)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, state.bn_state, batch
+        )
+        lr = lr_schedule(state.step)
+        if symog_cfg is not None:
+            lam = lambda_at(symog_cfg, state.step)
+            rg = reg_grad(state.params, state.symog, symog_cfg)
+            grads = jax.tree_util.tree_map(lambda g, r: g + lam * r.astype(g.dtype), grads, rg)
+            metrics = dict(metrics, symog_lambda=lam)
+        updates, opt_state = tx.update(grads, state.opt_state, state.params, lr=lr)
+        params = apply_updates(state.params, updates)
+        if symog_cfg is not None and symog_cfg.clip:
+            params = clip_tree(params, state.symog, symog_cfg)
+        return CNNTrainState(params, bn_state, opt_state, state.symog, state.step + 1), metrics
+
+    return train_step
+
+
+def make_cnn_eval(cnn_cfg):
+    from repro.models.cnn import cnn_apply
+
+    @jax.jit
+    def eval_step(params, bn_state, batch):
+        logits, _ = cnn_apply(params, bn_state, batch["images"], cnn_cfg, train=False)
+        return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+
+    return eval_step

@@ -1,0 +1,173 @@
+"""Block-level numerics: MoE dispatch, SSD scan, RG-LRU, chunked attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import AttnConfig, attend, attn_apply, attn_init
+from repro.models.moe import MoEConfig, moe_apply, moe_apply_dense_ref, moe_init
+from repro.models.rglru import (
+    RGLRUConfig,
+    rglru_block_apply,
+    rglru_block_decode,
+    rglru_init,
+    rglru_init_cache,
+)
+from repro.models.ssd import SSDConfig, ssd_block_apply, ssd_block_decode, ssd_init, ssd_init_cache, ssd_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("router", ["softmax", "sigmoid"])
+def test_moe_dispatch_matches_dense_ref(rng, router):
+    """Scatter/gather dispatch == dense per-token reference when capacity is
+    ample (no drops)."""
+    cfg = MoEConfig(d_model=16, n_experts=8, top_k=2, d_ff_expert=8,
+                    router=router, capacity_factor=8.0)
+    p = moe_init(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 12, 16)) * 0.5
+    y, aux = moe_apply(p, x, cfg=cfg, compute_dtype=jnp.float32)
+    y_ref = moe_apply_dense_ref(p, x, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-5)
+    assert np.isfinite(float(aux["moe_aux_loss"]))
+
+
+def test_moe_shared_expert(rng):
+    cfg = MoEConfig(d_model=16, n_experts=4, top_k=2, d_ff_expert=8,
+                    n_shared_experts=2, capacity_factor=8.0)
+    p = moe_init(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (1, 6, 16)) * 0.5
+    y, _ = moe_apply(p, x, cfg=cfg, compute_dtype=jnp.float32)
+    y_ref = moe_apply_dense_ref(p, x, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-5)
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """With capacity 1 some assignments are dropped — output differs from
+    the dropless reference but stays finite (GShard semantics)."""
+    cfg = MoEConfig(d_model=16, n_experts=2, top_k=2, d_ff_expert=8)
+    p = moe_init(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (1, 16, 16))
+    y, _ = moe_apply(p, x, cfg=cfg, compute_dtype=jnp.float32, capacity=1)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2)
+# ---------------------------------------------------------------------------
+def _ssd_sequential(x, dt, A, Bm, Cm):
+    """O(T) literal recurrence — ground truth for the chunked scan."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    h = np.zeros((B, H, P, N), np.float64)
+    ys = []
+    xf, dtf = np.asarray(x, np.float64), np.asarray(dt, np.float64)
+    Bf, Cf = np.asarray(Bm, np.float64), np.asarray(Cm, np.float64)
+    Af = np.asarray(A, np.float64)
+    for t in range(T):
+        a = np.exp(dtf[:, t] * Af)  # (B,H)
+        dBx = dtf[:, t, :, None, None] * (xf[:, t, :, :, None] * Bf[:, t, None, None, :])
+        h = a[:, :, None, None] * h + dBx
+        ys.append(np.einsum("bhpN,bN->bhp", h, Cf[:, t]))
+    return np.stack(ys, 1), h
+
+
+@pytest.mark.parametrize("T,chunk", [(16, 4), (24, 8), (8, 8)])
+def test_ssd_chunked_matches_sequential(rng, T, chunk):
+    B, H, P, N = 2, 3, 4, 5
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, T, N)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(rng, 9), (B, T, N)) * 0.5
+    y, h = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    y_ref, h_ref = _ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), h_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_decode_continues_full(rng):
+    """decode(T+1) from the full pass's final state == full pass over T+1."""
+    cfg = SSDConfig(d_model=16, d_inner=32, n_heads=4, head_dim=8, d_state=8,
+                    conv_width=4, chunk=4)
+    p = ssd_init(rng, cfg)
+    u = jax.random.normal(jax.random.fold_in(rng, 1), (2, 9, 16)) * 0.5
+    y_full, _ = ssd_block_apply(p, u, cfg=cfg, compute_dtype=jnp.float32)
+    # run first 8 steps (chunk-aligned), then decode step 9
+    y8, cache = ssd_block_apply(p, u[:, :8], cfg=cfg, compute_dtype=jnp.float32)
+    y9, _ = ssd_block_decode(p, u[:, 8:9], cache, cfg=cfg, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y9), np.asarray(y_full[:, 8:9]),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+def test_rglru_decode_continues_full(rng):
+    cfg = RGLRUConfig(d_model=16, d_rnn=32, n_heads=4, conv_width=4)
+    p = rglru_init(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 7, 16)) * 0.5
+    y_full, _ = rglru_block_apply(p, x, cfg=cfg, compute_dtype=jnp.float32)
+    y6, cache = rglru_block_apply(p, x[:, :6], cfg=cfg, compute_dtype=jnp.float32)
+    y7, _ = rglru_block_decode(p, x[:, 6:7], cache, cfg=cfg, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y7), np.asarray(y_full[:, 6:7]),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y6), np.asarray(y_full[:, :6]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_stability(rng):
+    """Decay a ∈ (0,1): hidden state stays bounded over long sequences."""
+    cfg = RGLRUConfig(d_model=8, d_rnn=16, n_heads=2, conv_width=4)
+    p = rglru_init(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (1, 512, 8))
+    y, cache = rglru_block_apply(p, x, cfg=cfg, compute_dtype=jnp.float32)
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert float(jnp.abs(cache["h"]).max()) < 1e3
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def test_chunked_attend_matches_unchunked(rng):
+    B, T, K, G, hd = 2, 32, 2, 2, 8
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, T, K, G, hd))
+    k = jax.random.normal(ks[1], (B, T, K, hd))
+    v = jax.random.normal(ks[2], (B, T, K, hd))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    kw = dict(causal=True, window=jnp.int32(9), scale=hd**-0.5, cap=0.0)
+    full = attend(q, k, v, pos, pos, q_chunk=0, **kw)
+    chunked = attend(q, k, v, pos, pos, q_chunk=8, **kw)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full), rtol=1e-5, atol=1e-6)
+
+
+def test_window_masks_restrict_attention(rng):
+    """A window-1 causal attention only sees the current token: output ==
+    v at each position (softmax over a single element)."""
+    B, T, K, hd = 1, 8, 1, 4
+    q = jax.random.normal(rng, (B, T, K, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, K, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, T, K, hd))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    out = attend(q, k, v, pos, pos, causal=True, window=jnp.int32(1),
+                 scale=1.0, cap=0.0, q_chunk=0)
+    np.testing.assert_allclose(np.asarray(out[:, :, :, 0]), np.asarray(v), rtol=1e-5)
+
+
+def test_gqa_equals_repeated_mha(rng):
+    """GQA with G groups == MHA with kv heads repeated G× (same weights)."""
+    cfg_g = AttnConfig(d_model=16, n_heads=4, n_kv_heads=2, head_dim=8)
+    p = attn_init(rng, cfg_g)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 6, 16)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    y_g = attn_apply(p, x, cfg=cfg_g, positions=pos, compute_dtype=jnp.float32)
+    # expand kv projections to 4 heads
+    cfg_m = AttnConfig(d_model=16, n_heads=4, n_kv_heads=4, head_dim=8)
+    p_m = dict(p)
+    p_m["k_proj"] = {"kernel": jnp.repeat(p["k_proj"]["kernel"], 2, axis=1)}
+    p_m["v_proj"] = {"kernel": jnp.repeat(p["v_proj"]["kernel"], 2, axis=1)}
+    y_m = attn_apply(p_m, x, cfg=cfg_m, positions=pos, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_m), rtol=1e-5, atol=1e-6)

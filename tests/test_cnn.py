@@ -1,0 +1,51 @@
+"""Paper CNN architectures: shapes, BN state, reduced variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.cnn import PAPER_CNNS, CNNConfig, cnn_apply, cnn_init, reduced_cnn
+
+
+@pytest.mark.parametrize("name", list(PAPER_CNNS))
+def test_cnn_forward(name, rng):
+    cfg = reduced_cnn(name, width_mult=0.25) if name != "lenet5" else PAPER_CNNS[name]
+    params, bn = cnn_init(rng, cfg)
+    x = jax.random.normal(rng, (2, cfg.input_hw, cfg.input_hw, cfg.in_channels))
+    logits, new_bn = cnn_apply(params, bn, x, cfg, train=True)
+    assert logits.shape == (2, cfg.n_classes)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    # train mode updates BN stats (for archs with BN)
+    if bn:
+        k = next(iter(bn))
+        assert not np.allclose(np.asarray(new_bn[k]["mean"]), np.asarray(bn[k]["mean"]))
+
+
+def test_lenet5_param_count(rng):
+    """The paper quotes ~60k params for LeNet-5 on MNIST."""
+    cfg = PAPER_CNNS["lenet5"]
+    params, _ = cnn_init(rng, cfg)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert 55_000 <= n <= 70_000, n
+
+
+def test_eval_mode_uses_running_stats(rng):
+    cfg = reduced_cnn("vgg7", 0.25)
+    params, bn = cnn_init(rng, cfg)
+    x = jax.random.normal(rng, (2, 32, 32, 3))
+    y1, bn1 = cnn_apply(params, bn, x, cfg, train=False)
+    y2, bn2 = cnn_apply(params, bn, x, cfg, train=False)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    k = next(iter(bn))
+    np.testing.assert_array_equal(np.asarray(bn1[k]["mean"]), np.asarray(bn[k]["mean"]))
+
+
+def test_symog_quantizes_conv_kernels(rng):
+    from repro import core
+
+    cfg = PAPER_CNNS["lenet5"]
+    params, _ = cnn_init(rng, cfg)
+    scfg = core.SymogConfig(n_bits=2, total_steps=10)
+    st = core.symog_init(params, scfg)
+    assert st.mask["conv1/kernel"] and st.mask["fc1/kernel"]
+    assert not st.mask["fc1/bias"]

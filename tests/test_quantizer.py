@@ -1,0 +1,105 @@
+"""Property-based tests of the paper's quantizer invariants (Eq. 1, §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+
+N_BITS = st.integers(min_value=2, max_value=8)
+F_EXP = st.integers(min_value=-4, max_value=12)
+# allow_subnormal=False: XLA CPU flushes f32 subnormals to zero (FTZ), so
+# clip(1e-45) == 0.0 — a backend artifact, not a quantizer property.
+ARRS = st.lists(
+    st.floats(min_value=-100.0, max_value=100.0, allow_nan=False, width=32,
+              allow_subnormal=False),
+    min_size=1, max_size=64,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRS, F_EXP, N_BITS)
+def test_symmetry(xs, f, n):
+    """Q_N(-x) == -Q_N(x): the representable set is symmetric (§3.1)."""
+    x = jnp.asarray(xs, jnp.float32)
+    d = core.delta_from_f(f)
+    np.testing.assert_allclose(core.quantize(-x, d, n), -core.quantize(x, d, n))
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRS, F_EXP, N_BITS)
+def test_idempotent(xs, f, n):
+    """Q(Q(x)) == Q(x): quantized values are fixed points."""
+    x = jnp.asarray(xs, jnp.float32)
+    d = core.delta_from_f(f)
+    q = core.quantize(x, d, n)
+    np.testing.assert_allclose(core.quantize(q, d, n), q)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRS, F_EXP, N_BITS)
+def test_error_bound_inside_range(xs, f, n):
+    """|x - Q(x)| <= Δ/2 for x inside the clip range (uniform quantizer)."""
+    x = jnp.asarray(xs, jnp.float32)
+    d = float(core.delta_from_f(f))
+    lim = d * core.qmax_int(n)
+    inside = jnp.clip(x, -lim, lim)
+    err = jnp.abs(inside - core.quantize(inside, d, n))
+    assert float(err.max()) <= d / 2 + 1e-6 * d
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRS, F_EXP, N_BITS)
+def test_values_on_grid(xs, f, n):
+    """Every output is m·Δ with integer m in [-(2^{N-1}-1), 2^{N-1}-1]."""
+    x = jnp.asarray(xs, jnp.float32)
+    d = float(core.delta_from_f(f))
+    q = np.asarray(core.quantize(x, d, n), np.float64)
+    m = q / d
+    assert np.allclose(m, np.round(m))
+    assert np.abs(m).max() <= core.qmax_int(n)
+
+
+@settings(max_examples=30, deadline=None)
+@given(F_EXP)
+def test_delta_power_of_two_exact(f):
+    """Δ = 2^{-f} is exact (exponent-only float) — the fixed-point constraint."""
+    d = float(core.delta_from_f(f))
+    assert d == 2.0 ** (-f)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ARRS, F_EXP, N_BITS)
+def test_clip_to_range(xs, f, n):
+    x = jnp.asarray(xs, jnp.float32)
+    d = core.delta_from_f(f)
+    lim = float(d) * core.qmax_int(n)
+    c = core.clip_to_range(x, d, n)
+    assert float(jnp.abs(c).max()) <= lim + 1e-6
+    # clipping is idempotent and only affects out-of-range values
+    inside = jnp.abs(x) <= lim
+    np.testing.assert_allclose(jnp.where(inside, c, 0), jnp.where(inside, x, 0))
+
+
+def test_ste_gradient_identity():
+    """quantize_ste forward == Q, gradient == identity."""
+    x = jnp.array([0.3, -0.8, 1.7])
+    g = jax.grad(lambda v: core.quantize_ste(v, 0.5, 2).sum())(x)
+    np.testing.assert_allclose(g, jnp.ones_like(x))
+    np.testing.assert_allclose(
+        core.quantize_ste(x, 0.5, 2), core.quantize(x, 0.5, 2)
+    )
+
+
+def test_reg_grad_is_scaled_error():
+    """Eq. 4: ∂R/∂w = (2/M)(w - Q(w)); ∂Q/∂w treated as 0."""
+    w = jnp.array([[0.3, -0.8], [0.1, 0.6]])
+    d = 0.5
+    g = core.layer_reg_grad(w, d, 2)
+    np.testing.assert_allclose(g, (2.0 / w.size) * (w - core.quantize(w, d, 2)), rtol=1e-6)
+    # matches autodiff of R with stop_gradient on Q
+    r = lambda w: (1.0 / w.size) * jnp.sum(
+        (w - jax.lax.stop_gradient(core.quantize(w, d, 2))) ** 2
+    )
+    np.testing.assert_allclose(g, jax.grad(r)(w), rtol=1e-6)

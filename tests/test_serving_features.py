@@ -1,0 +1,92 @@
+"""Serving-path features: fixed-point int8 KV cache, ring buffers, packed
+weights — the §Perf cell-C machinery."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, core
+from repro.models import decode_lm, forward_lm, init_caches, init_lm, prefill_lm
+
+
+def _run(cfg, rng, T=8, MAX=32):
+    params = init_lm(rng, cfg)
+    B = 2
+    batch = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, : T - 1]
+    _, caches = prefill_lm(params, pb, cfg, max_len=MAX, compute_dtype=jnp.float32)
+    dl, _ = decode_lm(params, caches, batch["tokens"][:, T - 1 : T], jnp.int32(T - 1),
+                      cfg, compute_dtype=jnp.float32)
+    ref = forward_lm(params, batch, cfg, compute_dtype=jnp.float32).logits[:, T - 1 : T]
+    return np.asarray(dl), np.asarray(ref)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-4b", "internlm2-1.8b", "deepseek-v3-671b"])
+def test_int8_fp_kv_cache_decode(arch, rng):
+    """int8 fixed-point KV cache: argmax-identical, small logit error."""
+    cfg = dataclasses.replace(configs.get_reduced(arch), kv_cache_dtype="int8_fp")
+    dl, ref = _run(cfg, rng)
+    scale = np.abs(ref).max()
+    assert np.abs(dl - ref).max() < 0.25 * scale + 0.05
+    np.testing.assert_array_equal(dl.argmax(-1), ref.argmax(-1))
+
+
+def test_int8_cache_struct_is_int8(rng):
+    cfg = dataclasses.replace(configs.get_reduced("gemma3-4b"), kv_cache_dtype="int8_fp")
+    caches = init_caches(cfg, 2, 16)
+    leaves = jax.tree_util.tree_leaves(caches)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+
+
+def test_ring_cache_bounds_memory(rng):
+    """Hybrid (recurrentgemma) local-attn decode cache is window-sized, not
+    context-sized — the long_500k enabler."""
+    cfg = configs.get_reduced("recurrentgemma-2b")
+    caches = init_caches(cfg, 2, 10_000)
+    sizes = [l.shape for l in jax.tree_util.tree_leaves(caches) if hasattr(l, "shape")]
+    assert all(max(s, default=0) <= 10_000 for s in sizes)
+    # attention caches capped at the window (8 in the reduced config)
+    kv = [s for s in sizes if len(s) == 4]
+    assert kv and all(s[1] == cfg.window for s in kv), kv
+
+
+def test_ring_decode_matches_forward_past_window(rng):
+    """Decode far beyond the window: ring wraps and stays consistent with
+    the windowed full forward."""
+    cfg = configs.get_reduced("recurrentgemma-2b")
+    params = init_lm(rng, cfg)
+    B, T = 1, 24  # > 2× window of 8
+    toks = jax.random.randint(rng, (B, T), 0, cfg.vocab_size)
+    caches = init_caches(cfg, B, T)
+    outs = []
+    for t in range(T):
+        logits, caches = decode_lm(params, caches, toks[:, t : t + 1], jnp.int32(t),
+                                   cfg, compute_dtype=jnp.float32)
+        outs.append(np.asarray(logits[:, 0]))
+    ref = np.asarray(forward_lm(params, {"tokens": toks}, cfg,
+                                compute_dtype=jnp.float32).logits)
+    np.testing.assert_allclose(np.stack(outs, 1), ref, rtol=0.05, atol=5e-3)
+
+
+def test_packed_params_tree_decode(rng):
+    """pack_tree → unpack → decode equals decode with quantize_tree params
+    (the dry-run quantized serving path, in miniature)."""
+    cfg = configs.get_reduced("internlm2-1.8b")
+    params = init_lm(rng, cfg)
+    scfg = core.SymogConfig(n_bits=2, total_steps=1)
+    st = core.symog_init(params, scfg)
+    packed = core.pack_tree(params, st, scfg)
+    unpacked = jax.tree_util.tree_map(
+        lambda l: core.unpack(l, jnp.float32) if isinstance(l, core.Packed) else l,
+        packed, is_leaf=lambda l: isinstance(l, core.Packed))
+    qt = core.quantize_tree(params, st, scfg)
+    B = 2
+    toks = jax.random.randint(rng, (B, 4), 0, cfg.vocab_size)
+    c1 = init_caches(cfg, B, 8)
+    c2 = init_caches(cfg, B, 8)
+    l1, _ = decode_lm(unpacked, c1, toks[:, :1], jnp.int32(0), cfg, compute_dtype=jnp.float32)
+    l2, _ = decode_lm(qt, c2, toks[:, :1], jnp.int32(0), cfg, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)

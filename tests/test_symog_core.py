@@ -1,0 +1,100 @@
+"""SYMOG orchestration: Δ-search, state, schedules, clipping, finalize."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.stepsize import sse_for_f
+
+
+@pytest.fixture
+def params(rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "dense": {"kernel": jax.random.normal(k1, (32, 16)) * 0.2,
+                  "bias": jnp.zeros(16)},
+        "norm": {"scale": jnp.ones(16)},
+        "moe": {"experts": {"wi": {"kernel": jax.random.normal(k2, (4, 8, 8)) * 0.1}}},
+        "router": {"kernel": jax.random.normal(k3, (16, 4))},
+    }
+
+
+def test_optimal_f_is_argmin(rng):
+    """Grid search returns the true argmin over the f window (Alg.1 l.2-5)."""
+    w = jax.random.normal(rng, (500,)) * 0.13
+    f_star, _ = core.optimal_f(w, 2)
+    sses = {f: float(sse_for_f(w, f, 2)) for f in range(core.F_MIN, core.F_MAX + 1)}
+    assert sses[int(f_star)] == min(sses.values())
+
+
+def test_mask_follows_filter(params):
+    cfg = core.SymogConfig(n_bits=2, total_steps=10)
+    st = core.symog_init(params, cfg)
+    assert st.mask["dense/kernel"] is True
+    assert st.mask["dense/bias"] is False  # rank-1
+    assert st.mask["norm/scale"] is False  # excluded name
+    assert st.mask["router/kernel"] is False  # router stays float (DESIGN §5)
+    assert st.mask["moe/experts/wi/kernel"] is True
+
+
+def test_per_expert_deltas(params):
+    cfg = core.SymogConfig(n_bits=2, total_steps=10)
+    st = core.symog_init(params, cfg)
+    assert st.f["moe"]["experts"]["wi"]["kernel"].shape == (4,)  # one Δ per expert
+
+
+def test_lambda_schedule_endpoints():
+    cfg = core.SymogConfig(lambda0=10.0, alpha=9.0, total_steps=100)
+    assert float(core.lambda_at(cfg, 0)) == pytest.approx(10.0)
+    assert float(core.lambda_at(cfg, 100)) == pytest.approx(10.0 * np.exp(9.0), rel=1e-5)
+    # strictly increasing
+    vals = [float(core.lambda_at(cfg, s)) for s in range(0, 101, 10)]
+    assert all(b > a for a, b in zip(vals, vals[1:]))
+
+
+def test_reg_grad_zero_for_excluded(params):
+    cfg = core.SymogConfig(n_bits=2, total_steps=10)
+    st = core.symog_init(params, cfg)
+    g = core.reg_grad(params, st, cfg)
+    assert float(jnp.abs(g["norm"]["scale"]).max()) == 0.0
+    assert float(jnp.abs(g["router"]["kernel"]).max()) == 0.0
+    assert float(jnp.abs(g["dense"]["kernel"]).max()) > 0.0
+
+
+def test_clip_tree_bounds(params):
+    cfg = core.SymogConfig(n_bits=2, total_steps=10)
+    st = core.symog_init(params, cfg)
+    big = jax.tree_util.tree_map(lambda x: x * 100.0, params)
+    clipped = core.clip_tree(big, st, cfg)
+    f = st.f["dense"]["kernel"]
+    lim = float(core.delta_from_f(f)) * core.qmax_int(2)
+    assert float(jnp.abs(clipped["dense"]["kernel"]).max()) <= lim + 1e-6
+    # excluded leaves untouched
+    np.testing.assert_allclose(clipped["norm"]["scale"], big["norm"]["scale"])
+
+
+def test_quantize_then_pack_consistent(params):
+    cfg = core.SymogConfig(n_bits=2, total_steps=10)
+    st = core.symog_init(params, cfg)
+    qt = core.quantize_tree(params, st, cfg)
+    pk = core.pack_tree(params, st, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(core.unpack(pk["dense"]["kernel"])),
+        np.asarray(qt["dense"]["kernel"]),
+    )
+    # quantized values are exact fixed points of the quantizer
+    qt2 = core.quantize_tree(qt, st, cfg)
+    np.testing.assert_array_equal(np.asarray(qt2["dense"]["kernel"]),
+                                  np.asarray(qt["dense"]["kernel"]))
+
+
+def test_symog_state_is_pytree(params):
+    cfg = core.SymogConfig(n_bits=2, total_steps=10)
+    st = core.symog_init(params, cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    st2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert st2.mask == st.mask
+    # jit-compatible
+    out = jax.jit(lambda s, p: core.reg_value(p, s, cfg))(st, params)
+    assert jnp.isfinite(out)
