@@ -86,6 +86,27 @@ def run() -> None:
     err = float(jnp.max(jnp.abs(y - x[:, :256] @ qw)))
     emit("fixedpoint_matmul_exactness", 0.0, f"max_abs_err_vs_quantized_float={err:.2e}")
 
+    # ---- packed vs dense DECODE matmul (ServeEngine hot path) -------------
+    # Decode is a (batch, K) x (K, N) matvec-batch: weight-bandwidth-bound,
+    # so bytes moved is the first-order model (DESIGN.md §2).  Wall time
+    # here is the CPU unpack-then-dot fallback (the packed path XLA runs
+    # when no TPU is present); the Pallas kernel replaces it on hardware.
+    for n_bits in (2, 4):
+        pk = core.pack(wkn, 2, n_bits)
+
+        @jax.jit
+        def packed_decode(x, data=pk.data):
+            p = core.Packed(data=data, n_bits=n_bits, f=jnp.asarray(2))
+            return x @ core.unpack(p, jnp.float32)
+
+        t_packed = _time(packed_decode, x)
+        dense_bytes = K * N * 4 + 8 * K * 4 + 8 * N * 4
+        packed_bytes = K * N * n_bits // 8 + 8 * K * 4 + 8 * N * 4
+        emit(f"decode_matmul_packed{n_bits}bit_8x{K}x{N}", t_packed,
+             f"bytes_moved={packed_bytes} vs dense_f32={dense_bytes} "
+             f"({dense_bytes / packed_bytes:.1f}x less; CPU fallback "
+             f"{t_packed / t_dense:.2f}x dense wall time)")
+
 
 if __name__ == "__main__":
     run()

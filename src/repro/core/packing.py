@@ -21,21 +21,31 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass
 class Packed:
-    """A packed fixed-point tensor: int8 words + static metadata."""
+    """A packed fixed-point tensor: int8 words + static metadata.
+
+    ``shape`` (the original unpacked shape) is DERIVED from the word array,
+    not stored: pack() requires exact divisibility, so the last dim is just
+    words·(8/n_bits).  That keeps Packed closed under lax.scan / vmap leaf
+    slicing — a stacked layer group scans Packed params like any float
+    leaf (see repro.models.quantized.scan_ready)."""
 
     data: jax.Array  # int8, shape[..., last/per_byte]
     n_bits: int
-    f: jax.Array  # int32 scalar or per-leading-dim vector (MoE experts)
-    shape: Tuple[int, ...]  # original (unpacked) shape
+    f: jax.Array  # int32 scalar or per-leading-dim array (layers/experts)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        per = 8 // self.n_bits
+        return tuple(self.data.shape[:-1]) + (self.data.shape[-1] * per,)
 
     def tree_flatten(self):
-        return (self.data, self.f), (self.n_bits, self.shape)
+        return (self.data, self.f), (self.n_bits,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         data, f = children
-        n_bits, shape = aux
-        return cls(data=data, n_bits=n_bits, f=f, shape=shape)
+        (n_bits,) = aux
+        return cls(data=data, n_bits=n_bits, f=f)
 
 
 jax.tree_util.register_pytree_node(
@@ -96,7 +106,6 @@ def pack(weight: jax.Array, f, n_bits: int) -> Packed:
         data=pack_int(m, n_bits),
         n_bits=n_bits,
         f=jnp.asarray(f, jnp.int32),
-        shape=tuple(weight.shape),
     )
 
 

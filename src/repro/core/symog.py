@@ -47,6 +47,8 @@ DEFAULT_EXCLUDES: Tuple[str, ...] = (
     "a_log",
     "dt_bias",
     "rg_lru/a_param",
+    "bias",  # whisper biases are rank-2 (H, hd) — still additive, stay float
+    "ssm_d",  # mamba2 skip scale: rank-1 per layer, rank-2 once scan-stacked
 )
 
 
@@ -108,8 +110,13 @@ def symog_init(params: Any, cfg: SymogConfig) -> SymogState:
         if not mask[path]:
             return jnp.zeros((), jnp.int32)
         if re.search(cfg.per_expert_pattern, path) and w.ndim >= 3:
-            f, _ = jax.vmap(lambda e: optimal_f(e, cfg.n_bits, cfg.f_min, cfg.f_max))(w)
-            return f.astype(jnp.int32)
+            # one Δ per expert, over EVERY leading dim: an unstacked stack
+            # (E,D,F) gets f (E,); a scan-stacked stack (L,E,D,F) gets
+            # (L,E) so each layer's experts keep their own exponent.
+            lead = w.shape[:-2]
+            w2 = w.reshape((-1,) + w.shape[-2:])
+            f, _ = jax.vmap(lambda e: optimal_f(e, cfg.n_bits, cfg.f_min, cfg.f_max))(w2)
+            return f.reshape(lead).astype(jnp.int32)
         f, _ = optimal_f(w, cfg.n_bits, cfg.f_min, cfg.f_max)
         return jnp.asarray(f, jnp.int32)
 

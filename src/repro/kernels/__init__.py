@@ -14,6 +14,15 @@ Each kernel ships <name>/kernel.py (pl.pallas_call + BlockSpec),
 tests sweep shapes/dtypes and assert allclose in interpret mode.
 """
 from repro.kernels.symog_update.ops import symog_update
-from repro.kernels.fixedpoint_matmul.ops import fixedpoint_matmul, pack_weight
+from repro.kernels.fixedpoint_matmul.ops import (
+    fixedpoint_matmul,
+    fixedpoint_matmul_experts,
+    pack_weight,
+)
 
-__all__ = ["symog_update", "fixedpoint_matmul", "pack_weight"]
+__all__ = [
+    "symog_update",
+    "fixedpoint_matmul",
+    "fixedpoint_matmul_experts",
+    "pack_weight",
+]

@@ -1,14 +1,19 @@
 """Pallas kernel: fixed-point matmul with 2/4-bit packed weights.
 
-    y (M,N) = x (M,K) @ (m (K,N) · 2^{-f})
+    y (M,N) = x (M,K) @ (m (K,N) · 2^{-f}) + b (N)
 
 ``m`` is streamed from HBM as int8 words holding 8/n_bits mantissas each
 (packed along N, little-endian within byte — repro.core.packing layout).
 Per (bm, bn) output tile the kernel loops K-blocks: unpack the (bk, bn/per)
 word block to (bk, bn) in VMEM (shift/mask/sign-extend on the VPU), then
 MXU-dot into an fp32 accumulator tile.  The power-of-two scale multiplies
-the tile ONCE on the last K step — the TPU analogue of the paper's
-bit-shift dequantization (exponent add, exact).
+the tile ONCE on the last K step (the TPU analogue of the paper's bit-shift
+dequantization — exponent add, exact) and the bias rides the same epilogue,
+so a full dense layer is one kernel launch.
+
+Activations keep their dtype on the wire: bf16 x dots against bf16
+mantissas (|m| ≤ 7 is exact in bf16) with an fp32 accumulator — the MXU
+path real serving uses.
 
 HBM traffic for weights: N·K·n_bits/8 bytes — 8× (2-bit) less than bf16.
 Decode matvecs are weight-bandwidth-bound, so this is the serving win.
@@ -22,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(scale_ref, x_ref, w_ref, o_ref, *, n_bits: int, bn: int, nk: int):
+def _kernel(scale_ref, bias_ref, x_ref, w_ref, o_ref, *, n_bits: int, bn: int, nk: int):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -33,29 +38,33 @@ def _kernel(scale_ref, x_ref, w_ref, o_ref, *, n_bits: int, bn: int, nk: int):
     mask = (1 << n_bits) - 1
     sign = 1 << (n_bits - 1)
 
+    x = x_ref[...]
     w_words = w_ref[...]  # (bk, bn//per) int8
     wu = w_words.astype(jnp.int32) & 0xFF  # unsigned byte view
     shifts = jnp.arange(per, dtype=jnp.int32) * n_bits
     fields = (wu[..., None] >> shifts) & mask  # (bk, bn//per, per)
-    m = ((fields ^ sign) - sign).astype(jnp.float32)
+    m = ((fields ^ sign) - sign).astype(x.dtype)
     m = m.reshape(w_words.shape[0], bn)  # (bk, bn) mantissas
 
-    x = x_ref[...].astype(jnp.float32)
     o_ref[...] += jnp.dot(x, m, preferred_element_type=jnp.float32)
 
     @pl.when(k_idx == nk - 1)
     def _finish():
-        o_ref[...] *= scale_ref[0, 0]
+        o_ref[...] = o_ref[...] * scale_ref[0, 0] + bias_ref[...].astype(jnp.float32)
 
 
-def fixedpoint_matmul_padded(x, packed_w, scale, *, n_bits: int, n_out: int,
-                             bm: int, bn: int, bk: int, interpret: bool = False):
-    """x (M,K) f32; packed_w (K, n_out·n_bits/8) int8; scale (1,1) f32.
+def fixedpoint_matmul_padded(x, packed_w, scale, bias=None, *, n_bits: int,
+                             n_out: int, bm: int, bn: int, bk: int,
+                             interpret: bool = False):
+    """x (M,K) float; packed_w (K, n_out·n_bits/8) int8; scale (1,1) f32;
+    bias (1, n_out) float or None.
     M % bm == K % bk == n_out % bn == 0 (pad in ops.py)."""
     M, K = x.shape
     per = 8 // n_bits
     assert packed_w.shape == (K, n_out // per), (packed_w.shape, K, n_out, per)
     assert bn % per == 0
+    if bias is None:
+        bias = jnp.zeros((1, n_out), jnp.float32)
     nk = K // bk
     grid = (M // bm, n_out // bn, nk)
     return pl.pallas_call(
@@ -63,10 +72,11 @@ def fixedpoint_matmul_padded(x, packed_w, scale, *, n_bits: int, n_out: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn // per), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, n_out), jnp.float32),
         interpret=interpret,
-    )(scale, x, packed_w)
+    )(scale, bias, x, packed_w)

@@ -1,12 +1,15 @@
 """Public wrapper: packed fixed-point matmul for arbitrary (M, K, N).
 
 ``pack_weight`` quantizes a SYMOG-converged weight to packed mantissas;
-``fixedpoint_matmul`` pads to the kernel's block grid and dispatches.
+``fixedpoint_matmul`` pads to the kernel's block grid and dispatches — with
+optional fused bias add and bf16 activations (the epilogue real dense
+layers need, DESIGN.md §3).  ``fixedpoint_matmul_experts`` vmaps the kernel
+over a leading expert dim with a per-expert exponent vector ``f`` — the
+MoE-stack form (each expert is a "layer" in the paper's Δ-per-layer sense).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,17 +35,23 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
+def _as_compute(x):
+    """Keep float activations in their wire dtype; promote ints to f32."""
+    return x if jnp.issubdtype(x.dtype, jnp.floating) else x.astype(jnp.float32)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("n_bits", "n_out", "bm", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("n_bits", "n_out", "bm", "bn", "bk", "interpret", "out_dtype"),
 )
-def fixedpoint_matmul(x, packed_w, f, *, n_bits: int = 2, n_out: int,
+def fixedpoint_matmul(x, packed_w, f, bias=None, *, n_bits: int = 2, n_out: int,
                       bm: int = 128, bn: int = 128, bk: int = 128,
-                      interpret: bool = True) -> jax.Array:
-    """y = x @ (unpack(packed_w)·2^{-f}).  x: (..., K) float."""
+                      interpret: bool = True, out_dtype=None) -> jax.Array:
+    """y = x @ (unpack(packed_w)·2^{-f}) [+ bias].  x: (..., K) float."""
     per = values_per_byte(n_bits)
     lead = x.shape[:-1]
     K = x.shape[-1]
-    x2 = x.reshape(-1, K).astype(jnp.float32)
+    x2 = _as_compute(x).reshape(-1, K)
     M = x2.shape[0]
 
     bm_ = min(bm, max(8, M))
@@ -52,9 +61,46 @@ def fixedpoint_matmul(x, packed_w, f, *, n_bits: int = 2, n_out: int,
     w2 = _pad_to(_pad_to(packed_w, 0, bk_), 1, bn_ // per)
     n_pad = w2.shape[1] * per
 
+    b2 = None
+    if bias is not None:
+        b2 = _pad_to(bias.reshape(1, n_out).astype(jnp.float32), 1, n_pad)
+
     scale = delta_from_f(f).reshape(1, 1)
     y = fixedpoint_matmul_padded(
-        x2, w2, scale, n_bits=n_bits, n_out=n_pad, bm=bm_, bn=bn_, bk=bk_,
+        x2, w2, scale, b2, n_bits=n_bits, n_out=n_pad, bm=bm_, bn=bn_, bk=bk_,
         interpret=interpret,
     )
-    return y[:M, :n_out].reshape(*lead, n_out)
+    y = y[:M, :n_out].reshape(*lead, n_out)
+    return y.astype(out_dtype) if out_dtype is not None else y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "n_out", "bm", "bn", "bk", "interpret", "out_dtype"),
+)
+def fixedpoint_matmul_experts(x, packed_w, f, *, n_bits: int = 2, n_out: int,
+                              bm: int = 128, bn: int = 128, bk: int = 128,
+                              interpret: bool = True, out_dtype=None) -> jax.Array:
+    """Per-expert packed matmul: y[e] = x[e] @ (unpack(w[e])·2^{-f[e]}).
+
+    x (E, C, K) float; packed_w (E, K, n_out·n_bits/8) int8; f (E,) int32.
+    The expert dim rides a vmap over the padded kernel (one extra grid dim
+    on TPU), so the per-expert scale stays a scalar inside each program.
+    """
+    per = values_per_byte(n_bits)
+    E, C, K = x.shape
+    x2 = _as_compute(x)
+
+    bm_ = min(bm, max(8, C))
+    bn_ = min(bn, n_out)
+    bk_ = min(bk, K)
+    x2 = _pad_to(_pad_to(x2, 1, bm_), 2, bk_)
+    w2 = _pad_to(_pad_to(packed_w, 1, bk_), 2, bn_ // per)
+    n_pad = w2.shape[2] * per
+
+    scale = delta_from_f(f).reshape(E, 1, 1)
+    run = functools.partial(fixedpoint_matmul_padded, n_bits=n_bits, n_out=n_pad,
+                            bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    y = jax.vmap(lambda xe, we, se: run(xe, we, se))(x2, w2, scale)
+    y = y[:, :C, :n_out]
+    return y.astype(out_dtype) if out_dtype is not None else y

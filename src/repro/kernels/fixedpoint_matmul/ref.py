@@ -1,4 +1,4 @@
-"""Pure-jnp oracle: y = x @ (m · 2^{-f}) from the 2-bit packed weight."""
+"""Pure-jnp oracle: y = x @ (m · 2^{-f}) [+ b] from the packed weight."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -6,8 +6,18 @@ import jax.numpy as jnp
 from repro.core.packing import unpack_int
 
 
-def fixedpoint_matmul_ref(x, packed_w, f, *, n_bits: int, n_out: int):
+def fixedpoint_matmul_ref(x, packed_w, f, bias=None, *, n_bits: int, n_out: int):
     """x (M, K) float; packed_w (K, n_out·n_bits/8) int8; f int scalar."""
     m = unpack_int(packed_w, n_bits, n_out).astype(jnp.float32)  # (K, N)
     scale = jnp.exp2(-jnp.asarray(f, jnp.float32))
-    return (x.astype(jnp.float32) @ m) * scale
+    y = (x.astype(jnp.float32) @ m) * scale
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y
+
+
+def fixedpoint_matmul_experts_ref(x, packed_w, f, *, n_bits: int, n_out: int):
+    """x (E, C, K); packed_w (E, K, n_out·n_bits/8); f (E,) ints."""
+    m = unpack_int(packed_w, n_bits, n_out).astype(jnp.float32)  # (E, K, N)
+    scale = jnp.exp2(-jnp.asarray(f, jnp.float32))[:, None, None]
+    return jnp.einsum("ECK,EKN->ECN", x.astype(jnp.float32), m) * scale

@@ -2,12 +2,19 @@
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch internlm2-1.8b --reduced --batch 4 --prompt-len 32 --steps 16 \
-        [--quantized --n-bits 2]
+        [--quantized | --packed] [--n-bits 2]
 
 ``--quantized`` loads/creates SYMOG post-quantized weights (exact fixed-
-point values) and reports the agreement rate of generated tokens vs the
-float model — the serving-side acceptance test of the paper's claim that
-post-quantization after SYMOG training is (near-)lossless.
+point values in float representation) and reports the agreement rate of
+generated tokens vs the float model — the serving-side acceptance test of
+the paper's claim that post-quantization after SYMOG training is
+(near-)lossless.
+
+``--packed`` serves the ``pack_tree`` artifact itself: 2/4-bit mantissas in
+int8 words, dispatched to the packed fixed-point matmul at every dense
+call site (Pallas on TPU, exact unpack fallback elsewhere — DESIGN.md §3).
+Reports resident weight bytes vs float and the token agreement with BOTH
+the float and the quantize_tree engines (the latter must be 100% exact).
 """
 from __future__ import annotations
 
@@ -34,6 +41,8 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve the pack_tree int8-word artifact end to end")
     ap.add_argument("--n-bits", type=int, default=2)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
@@ -63,7 +72,7 @@ def main() -> None:
     print(f"float generation: {out_float.shape} in {dt:.2f}s "
           f"({args.batch * args.steps / dt:.1f} tok/s)")
 
-    if args.quantized:
+    if args.quantized or args.packed:
         scfg = core.SymogConfig(n_bits=args.n_bits, total_steps=1)
         sst = core.symog_init(params, scfg)
         qparams = core.quantize_tree(params, sst, scfg)
@@ -74,6 +83,21 @@ def main() -> None:
         print(f"quantized ({args.n_bits}-bit) agreement with float: {agree:.2%} "
               f"(rel quant err {float(qm['rel_quant_error']):.3f} — "
               "train with SYMOG to drive this to ~0)")
+
+    if args.packed:
+        peng = ServeEngine.from_symog(cfg, params, sst, scfg,
+                                      max_len=max_len, compute_dtype=dtype)
+        t0 = time.time()
+        out_p = peng.generate(batch, args.steps)
+        dt = time.time() - t0
+        exact = float(np.mean(np.asarray(out_p) == np.asarray(out_q)))
+        agree_f = float(np.mean(np.asarray(out_p) == np.asarray(out_float)))
+        fb = eng.weight_bytes()
+        print(f"packed ({args.n_bits}-bit) serving: {peng.weight_bytes()} weight bytes "
+              f"vs {fb} float ({fb / peng.weight_bytes():.1f}x smaller), "
+              f"{args.batch * args.steps / dt:.1f} tok/s")
+        print(f"packed vs quantized token agreement: {exact:.2%} (must be 100%); "
+              f"vs float: {agree_f:.2%}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,13 @@
 """Model zoo: composable layers + the 10 assigned architectures + paper CNNs."""
 from repro.models.config import ModelConfig, GLOBAL_WINDOW
+from repro.models.quantized import (
+    as_dense,
+    get_packed_backend,
+    is_packed,
+    set_packed_backend,
+    tree_has_packed,
+    unpack_params,
+)
 from repro.models.lm import (
     ForwardOut,
     init_lm,
@@ -15,6 +23,12 @@ from repro.models.lm import (
 __all__ = [
     "ModelConfig",
     "GLOBAL_WINDOW",
+    "as_dense",
+    "get_packed_backend",
+    "is_packed",
+    "set_packed_backend",
+    "tree_has_packed",
+    "unpack_params",
     "ForwardOut",
     "init_lm",
     "forward_lm",

@@ -28,6 +28,7 @@ from repro.models.layers import (
     rmsnorm_init,
     softcap as softcap_fn,
 )
+from repro.models.quantized import as_dense
 
 Q_CHUNK_DEFAULT = 1024  # chunk queries when T exceeds this
 
@@ -318,8 +319,9 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
     q = dense_apply(p["q_b_proj"], cq, compute_dtype=compute_dtype)
     q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
     q_rope = apply_rope(q_rope, positions, rope_base)
-    # absorb kv_b_k:  (B,1,H,n) x (r,H,n) -> (B,1,H,r)
-    q_eff = jnp.einsum("BTHn,rHn->BTHr", q_nope, p["kv_b_k_proj"]["kernel"].astype(compute_dtype))
+    # absorb kv_b_k:  (B,1,H,n) x (r,H,n) -> (B,1,H,r).  as_dense: Packed
+    # serving weights dequantize on the fly for the absorbed contraction.
+    q_eff = jnp.einsum("BTHn,rHn->BTHr", q_nope, as_dense(p["kv_b_k_proj"]["kernel"], compute_dtype))
 
     c_new = rmsnorm_apply(p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype))
     kr_new = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]
@@ -340,6 +342,6 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
     out_c = jnp.einsum("BHTS,BSr->BTHr", probs, c_kv)  # compressed values
-    out = jnp.einsum("BTHr,rHv->BTHv", out_c, p["kv_b_v_proj"]["kernel"].astype(compute_dtype))
+    out = jnp.einsum("BTHr,rHv->BTHv", out_c, as_dense(p["kv_b_v_proj"]["kernel"], compute_dtype))
     y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
     return y, cache

@@ -139,6 +139,21 @@ def _tag(x, name: str):
     return checkpoint_name(x, name)
 
 
+@jax.custom_jvp
+def _barrier(x):
+    """Differentiable optimization_barrier: jax<0.5 has no AD rule for the
+    primitive, so train steps through scanned blocks would raise
+    NotImplementedError.  The barrier is the identity, so its tangent is
+    the identity (and the transpose of that linear JVP is too)."""
+    return jax.lax.optimization_barrier(x)
+
+
+@_barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return _barrier(x), t
+
+
 # ---------------------------------------------------------------------------
 # init
 # ---------------------------------------------------------------------------
@@ -225,7 +240,7 @@ def block_apply(
         # collective to rebuild the norm input (measured in §Perf it.2).
         # The barrier also pins the wire dtype: without it XLA hoists the
         # norm's f32 upcast above the all-reduce (2× wire bytes).
-        y = jax.lax.optimization_barrier(_tag(y, "block_out"))
+        y = _barrier(_tag(y, "block_out"))
         if cfg.post_norm:
             y = _norm_apply(cfg, p["post_attn_norm"], y)
         x = x + y
@@ -248,7 +263,7 @@ def block_apply(
             y, aux = moe_apply(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype)
     else:
         y = mlp_apply(p["mlp"], h, cfg=_mlp_cfg(cfg), compute_dtype=compute_dtype)
-    y = jax.lax.optimization_barrier(_tag(y, "block_out"))
+    y = _barrier(_tag(y, "block_out"))
     if cfg.post_norm:
         y = _norm_apply(cfg, p["post_mlp_norm"], y)
     return x + y, aux, cache

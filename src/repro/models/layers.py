@@ -12,6 +12,7 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models.quantized import as_dense, is_packed, packed_dense_apply, packed_take
 from repro.nn.initializers import normal_init, scaled_normal
 
 
@@ -32,8 +33,14 @@ def dense_init(key, in_dims: Sequence[int], out_dims: Sequence[int], *, bias: bo
 
 
 def dense_apply(p, x, *, n_in: int = 1, compute_dtype=None):
-    """Contract the last ``n_in`` dims of x with the first n_in of kernel."""
+    """Contract the last ``n_in`` dims of x with the first n_in of kernel.
+
+    A ``Packed`` kernel (pack_tree serving artifact) dispatches to the
+    fixed-point matmul — Pallas on TPU, exact unpack-then-dot elsewhere
+    (repro.models.quantized, DESIGN.md §3)."""
     k = p["kernel"]
+    if is_packed(k):
+        return packed_dense_apply(p, x, n_in=n_in, compute_dtype=compute_dtype)
     if compute_dtype is not None:
         x = x.astype(compute_dtype)
         k = k.astype(compute_dtype)
@@ -82,14 +89,17 @@ def embed_init(key, vocab: int, dim: int, *, stddev: float = 0.02, dtype=jnp.flo
 
 def embed_apply(p, ids, *, compute_dtype=None):
     e = p["embedding"]
+    if is_packed(e):  # gather packed rows, dequantize only those
+        return packed_take(e, ids, dtype=compute_dtype)
     if compute_dtype is not None:
         e = e.astype(compute_dtype)
     return jnp.take(e, ids, axis=0)
 
 
 def embed_logits(p, x):
-    """Tied read-out: x @ E^T in fp32 (vocab logits)."""
-    e = p["embedding"].astype(jnp.float32)
+    """Tied read-out: x @ E^T in fp32 (vocab logits).  A Packed table
+    dequantizes on the fly (transposed contraction — see DESIGN.md §3)."""
+    e = as_dense(p["embedding"], jnp.float32)
     return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), e)
 
 

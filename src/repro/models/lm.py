@@ -25,6 +25,7 @@ from repro.models.blocks import (
     zero_aux,
 )
 from repro.models.config import GLOBAL_WINDOW, ModelConfig
+from repro.models.quantized import scan_ready
 from repro.models.layers import (
     dense_apply,
     dense_init,
@@ -208,6 +209,7 @@ def _apply_group(gp, x, spec: GroupSpec, cfg: ModelConfig, *, positions, causal,
         )
     else:
         body_fn = jax.checkpoint(body)
+    gp = scan_ready(gp, spec.count)  # Packed serving params scan per-layer
     x, (auxs, caches) = jax.lax.scan(body_fn, x, (gp, win, rb))
     aux = jax.tree_util.tree_map(lambda a: jnp.sum(a, axis=0), auxs)
     return x, aux, (caches if cache_len else None)
@@ -372,7 +374,7 @@ def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
                 x, nc = unit_decode(p_u, c_u, x, win_u, rb_u)
                 return x, nc
 
-            x, nc = jax.lax.scan(body, x, (gp, gc, win, rb))
+            x, nc = jax.lax.scan(body, x, (scan_ready(gp, g.count), gc, win, rb))
         new_caches[g.name] = nc
 
     logits, _ = _head(params, cfg, x)
@@ -399,7 +401,7 @@ def prefill_lm(params, batch, cfg: ModelConfig, *, max_len: int,
                     return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
 
                 if spec.stacked:
-                    k, v = jax.vmap(cross_kv)(p_sub)
+                    k, v = jax.vmap(cross_kv)(scan_ready(p_sub, spec.count))
                 else:
                     k, v = cross_kv(p_sub)
                 gc[f"sub{j}"]["cross_k"] = k

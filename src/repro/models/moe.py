@@ -23,7 +23,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import act_fn, dense_init
+from repro.models.layers import act_fn, dense_apply, dense_init
+from repro.models.quantized import is_packed, packed_expert_einsum
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,21 +113,31 @@ def moe_apply(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
     buf = buf.at[e_ids, pos_c].add(xb[token_ids] * keep[:, None])
 
     # --- expert FFN (gated) -----------------------------------------------
+    # Packed expert stacks (pack_tree artifacts, one f per expert) route to
+    # the per-expert fixed-point matmul; float stacks take the einsums.
     we = p["experts"]
     f = act_fn(cfg.act)
-    h = jnp.einsum("ECD,EDF->ECF", buf, we["gate_proj"]["kernel"].astype(compute_dtype))
-    u = jnp.einsum("ECD,EDF->ECF", buf, we["up_proj"]["kernel"].astype(compute_dtype))
-    out_buf = jnp.einsum("ECF,EFD->ECD", f(h) * u, we["down_proj"]["kernel"].astype(compute_dtype))
+
+    def expert_mm(proj, z):
+        k = proj["kernel"]
+        if is_packed(k):
+            return packed_expert_einsum(z, k, compute_dtype=compute_dtype)
+        return jnp.einsum("ECK,EKN->ECN", z, k.astype(compute_dtype))
+
+    h = expert_mm(we["gate_proj"], buf)
+    u = expert_mm(we["up_proj"], buf)
+    out_buf = expert_mm(we["down_proj"], f(h) * u)
 
     # --- combine ------------------------------------------------------------
     y_assign = out_buf[e_ids, pos_c] * (g_flat.astype(compute_dtype) * keep)[:, None]
     y = jnp.zeros((N, D), compute_dtype).at[token_ids].add(y_assign)
 
     if cfg.n_shared_experts:
+        # dense_apply dispatches Packed shared-expert kernels too
         sh = p["shared"]
-        g = jnp.einsum("ND,DF->NF", xb, sh["gate_proj"]["kernel"].astype(compute_dtype))
-        u2 = jnp.einsum("ND,DF->NF", xb, sh["up_proj"]["kernel"].astype(compute_dtype))
-        y = y + jnp.einsum("NF,FD->ND", f(g) * u2, sh["down_proj"]["kernel"].astype(compute_dtype))
+        g = dense_apply(sh["gate_proj"], xb, compute_dtype=compute_dtype)
+        u2 = dense_apply(sh["up_proj"], xb, compute_dtype=compute_dtype)
+        y = y + dense_apply(sh["down_proj"], f(g) * u2, compute_dtype=compute_dtype)
 
     return y.reshape(B, T, D), aux
 

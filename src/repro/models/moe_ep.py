@@ -36,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.models.layers import act_fn
 from repro.models.moe import MoEConfig, _route
+from repro.models.quantized import tree_has_packed, unpack_params
 
 
 def _positions_for(dest: jax.Array, n_dest: int, cap: int):
@@ -52,6 +53,10 @@ def moe_apply_ep(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
                  ep_axes=("model",), dp_axes=("pod", "data"),
                  capacity_mult: float = 2.0) -> Tuple[jax.Array, Dict]:
     """x (B,T,D) global → (B,T,D).  Trace under jax.set_mesh(mesh)."""
+    if tree_has_packed(p):
+        # shard_map bodies below index raw kernels; densify Packed serving
+        # leaves up front (exact) until the EP path grows a packed kernel.
+        p = unpack_params(p, jnp.float32)
     mesh = jax.sharding.get_abstract_mesh()
     ep_axes = tuple(a for a in ep_axes if a in mesh.axis_names)
     assert ep_axes, (mesh.axis_names,)

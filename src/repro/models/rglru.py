@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense_apply, dense_init
+from repro.models.quantized import as_dense
 
 C_FACTOR = 8.0
 
@@ -68,7 +69,7 @@ def _block_diag_gate(gp, x, H: int, compute_dtype):
     B, T, R = x.shape
     dh = R // H
     xh = x.reshape(B, T, H, dh)
-    y = jnp.einsum("BTHi,Hij->BTHj", xh.astype(compute_dtype), gp["kernel"].astype(compute_dtype))
+    y = jnp.einsum("BTHi,Hij->BTHj", xh.astype(compute_dtype), as_dense(gp["kernel"], compute_dtype))
     y = y + gp["bias"].astype(compute_dtype)
     return jax.nn.sigmoid(y.astype(jnp.float32)).reshape(B, T, R)
 
@@ -106,7 +107,7 @@ def rglru_block_apply(p, x, *, cfg: RGLRUConfig, compute_dtype=jnp.bfloat16,
     B, T, D = x.shape
     xb = dense_apply(p["in_proj_x"], x, compute_dtype=compute_dtype)
     yb = jax.nn.gelu(dense_apply(p["in_proj_y"], x, compute_dtype=compute_dtype))
-    xc, new_conv = _conv_causal(p["conv1d"]["kernel"], xb, conv_state)
+    xc, new_conv = _conv_causal(as_dense(p["conv1d"]["kernel"]), xb, conv_state)
     a, gated_x = _gates(p, xc, cfg.n_heads, compute_dtype)
 
     if h0 is not None:
@@ -141,7 +142,7 @@ def rglru_block_decode(p, x, cache, *, cfg: RGLRUConfig, compute_dtype=jnp.bfloa
     """Single-step decode: x (B,1,D) -> (y (B,1,D), cache)."""
     xb = dense_apply(p["in_proj_x"], x, compute_dtype=compute_dtype)
     yb = jax.nn.gelu(dense_apply(p["in_proj_y"], x, compute_dtype=compute_dtype))
-    xc, new_conv = _conv_causal(p["conv1d"]["kernel"], xb, cache["conv"])
+    xc, new_conv = _conv_causal(as_dense(p["conv1d"]["kernel"]), xb, cache["conv"])
     a, gated_x = _gates(p, xc, cfg.n_heads, compute_dtype)
     h = a[:, 0] * cache["h"] + gated_x[:, 0]  # (B,R) fp32
     y = (h[:, None, :].astype(compute_dtype) * yb)

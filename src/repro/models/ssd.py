@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+from repro.models.quantized import as_dense
 from repro.models.rglru import _conv_causal
 
 
@@ -69,7 +70,7 @@ def _in_projections(p, u, cfg: SSDConfig, compute_dtype, conv_state=None):
     Cm = dense_apply(p["in_proj_C"], u, compute_dtype=compute_dtype)
     dt_raw = dense_apply(p["in_proj_dt"], u, compute_dtype=compute_dtype)
     xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
-    xbc, new_conv = _conv_causal(p["conv1d"]["kernel"], jax.nn.silu(xbc), conv_state)
+    xbc, new_conv = _conv_causal(as_dense(p["conv1d"]["kernel"]), jax.nn.silu(xbc), conv_state)
     R, N = cfg.d_inner, cfg.d_state
     x, Bm, Cm = xbc[..., :R], xbc[..., R : R + N], xbc[..., R + N :]
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)

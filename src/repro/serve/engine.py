@@ -1,10 +1,23 @@
 """Batched serving: jit'd prefill + decode with a uniform-position KV cache.
 
-The engine serves either float params or SYMOG post-quantized params (the
-quantized values are exact fixed-point numbers in float representation, so
-the same forward code serves both — the packed-int8 fast path lives in
-``repro.kernels.fixedpoint_matmul`` and is exercised by
-``examples/serve_quantized.py``).
+The engine serves three kinds of param trees through the SAME forward code:
+
+  float          — ordinary bf16/f32 leaves;
+  quantize_tree  — SYMOG post-quantized floats (exact fixed-point values in
+                   float representation — numerically the reference for the
+                   packed path);
+  pack_tree      — the ``Packed`` serving artifact: 2/4-bit mantissas in
+                   int8 words plus one integer exponent per layer (or per
+                   expert).  The layer stack dispatches those leaves to the
+                   packed fixed-point matmul at every dense/einsum call site
+                   (repro.models.quantized): Pallas on TPU — weights stream
+                   HBM→VMEM at n_bits/16 of the bf16 bytes, the decode-side
+                   realization of the paper's bit-shift dequantization — and
+                   an exact unpack-then-dot elsewhere, so generation is
+                   token-identical to the quantize_tree params on any host.
+
+``Packed`` is a registered pytree node, so jit closes over packed trees
+like any other params; nothing is densified at rest.
 """
 from __future__ import annotations
 
@@ -17,6 +30,13 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models.lm import decode_lm, init_caches, prefill_lm
+from repro.models.quantized import (
+    get_packed_backend,
+    resolve_backend,
+    set_packed_backend,
+    tree_has_packed,
+)
+from repro.nn.tree import tree_bytes
 
 
 @dataclasses.dataclass
@@ -28,6 +48,11 @@ class ServeEngine:
 
     def __post_init__(self):
         cfg, cd = self.cfg, self.compute_dtype
+        self.packed = tree_has_packed(self.params)
+        # The packed backend is baked into the jitted traces at first call;
+        # pin it NOW so later set_packed_backend() calls can't desync a
+        # cached trace from the global (construct a new engine to switch).
+        self.backend = resolve_backend()
 
         @jax.jit
         def _prefill(params, batch):
@@ -40,11 +65,33 @@ class ServeEngine:
         self._prefill = _prefill
         self._decode = _decode
 
+    def _with_backend(self, fn, *args):
+        prev = get_packed_backend()
+        set_packed_backend(self.backend)
+        try:
+            return fn(*args)
+        finally:
+            set_packed_backend(prev)
+
+    @classmethod
+    def from_symog(cls, cfg: ModelConfig, params, symog_state, symog_cfg, *,
+                   max_len: int, compute_dtype=jnp.bfloat16) -> "ServeEngine":
+        """Pack a SYMOG-trained float tree and serve the Packed artifact."""
+        from repro.core.symog import pack_tree
+
+        return cls(cfg, pack_tree(params, symog_state, symog_cfg),
+                   max_len=max_len, compute_dtype=compute_dtype)
+
+    def weight_bytes(self) -> int:
+        """Resident param bytes (Packed leaves count their int8 words — the
+        number the serving bandwidth math in DESIGN.md §2 is about)."""
+        return tree_bytes(self.params)
+
     def prefill(self, batch: Dict[str, jax.Array]):
-        return self._prefill(self.params, batch)
+        return self._with_backend(self._prefill, self.params, batch)
 
     def decode(self, caches, tokens, pos):
-        return self._decode(self.params, caches, tokens, pos)
+        return self._with_backend(self._decode, self.params, caches, tokens, pos)
 
     def generate(self, batch: Dict[str, jax.Array], steps: int) -> jax.Array:
         """Greedy continuation of a batched prompt; returns (B, steps)."""

@@ -1,0 +1,211 @@
+"""End-to-end packed fixed-point serving: ServeEngine on pack_tree artifacts.
+
+The acceptance property (DESIGN.md §3): dequantization of a Packed leaf is
+EXACT (mantissa × power-of-two scale), so serving the packed artifact on
+the unpack fallback must produce token-identical greedy generations to
+serving the quantize_tree float params — for 2- and 4-bit, dense and MoE
+(per-expert f) stacks.  The Pallas kernel path is validated against the
+same reference in interpret mode at the layer level (running a whole
+engine under the interpreter is minutes-slow, the layer is the unit).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, core
+from repro.kernels import fixedpoint_matmul, fixedpoint_matmul_experts
+from repro.kernels.fixedpoint_matmul.ref import (
+    fixedpoint_matmul_experts_ref,
+    fixedpoint_matmul_ref,
+)
+from repro.models import init_lm, set_packed_backend, tree_has_packed
+from repro.models.quantized import packed_dense_apply, packed_expert_einsum
+from repro.serve import ServeEngine
+
+
+@pytest.fixture
+def unpack_backend():
+    set_packed_backend("unpack")
+    yield
+    set_packed_backend("auto")
+
+
+def _pack_and_quant(cfg, rng, n_bits):
+    params = init_lm(rng, cfg)
+    scfg = core.SymogConfig(n_bits=n_bits, total_steps=1)
+    st = core.symog_init(params, scfg)
+    return core.quantize_tree(params, st, scfg), core.pack_tree(params, st, scfg), st
+
+
+def _prompts(cfg, rng, B=2, T=8):
+    b = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(rng, (B, cfg.encoder_len, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(rng, (B, cfg.prefix_len, cfg.d_model)) * 0.1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# engine-level: token-exact agreement packed vs quantize_tree.  ALL 10
+# archs: plain dense, MoE per-expert (olmoe), MLA absorbed einsums +
+# sigmoid-router MoE (deepseek), VLM prefix (paligemma), encdec rank-2
+# biases + cross-attn (whisper), recurrent conv/gates, SSD, local/global
+# hybrids (gemma2/3).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,n_bits", [
+    ("internlm2-1.8b", 2),
+    ("internlm2-1.8b", 4),
+    ("olmoe-1b-7b", 2),
+    ("whisper-large-v3", 2),
+    ("recurrentgemma-2b", 2),
+    ("mamba2-2.7b", 2),
+    ("deepseek-v3-671b", 2),
+    ("paligemma-3b", 2),
+    ("granite-34b", 2),
+    ("gemma2-27b", 2),
+    ("gemma3-4b", 2),
+])
+def test_engine_packed_token_exact(arch, n_bits, rng, unpack_backend):
+    cfg = configs.get_reduced(arch)
+    qt, packed, _ = _pack_and_quant(cfg, rng, n_bits)
+    assert tree_has_packed(packed) and not tree_has_packed(qt)
+
+    prompts = _prompts(cfg, rng)
+    steps = 8
+    max_len = 16 + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    e_q = ServeEngine(cfg, qt, max_len=max_len, compute_dtype=jnp.float32)
+    e_p = ServeEngine(cfg, packed, max_len=max_len, compute_dtype=jnp.float32)
+    assert e_p.packed and not e_q.packed
+
+    out_q = np.asarray(e_q.generate(prompts, steps))
+    out_p = np.asarray(e_p.generate(prompts, steps))
+    np.testing.assert_array_equal(out_p, out_q)
+
+    # the artifact is actually small: ≤ 8/n_bits-fold fewer weight bytes
+    # than f32 on the quantizable leaves (plus the float remainder)
+    assert e_p.weight_bytes() < e_q.weight_bytes() * (n_bits / 8.0) + 8192
+
+
+def test_engine_packed_moe_has_per_expert_f(rng, unpack_backend):
+    """The MoE artifact carries one exponent per expert (stacked layers:
+    one per (layer, expert)), not one per stack."""
+    from repro.models import is_packed
+    from repro.nn.tree import path_str
+
+    cfg = configs.get_reduced("olmoe-1b-7b")
+    _, packed, st = _pack_and_quant(cfg, rng, 2)
+    flat, _ = jax.tree_util.tree_flatten_with_path(packed, is_leaf=is_packed)
+    expert_pks = [l for p, l in flat if is_packed(l) and "experts" in path_str(p)]
+    assert expert_pks
+    assert all(l.f.ndim >= 1 and l.f.shape[-1] == cfg.n_experts for l in expert_pks)
+
+
+def test_engine_pins_backend_at_construction(rng):
+    """set_packed_backend() after an engine exists must not desync its
+    cached jit traces: the engine pins the backend it was built under and
+    restores the global around each call."""
+    from repro.models import get_packed_backend
+
+    cfg = configs.get_reduced("internlm2-1.8b")
+    _, packed, _ = _pack_and_quant(cfg, rng, 2)
+    prompts = _prompts(cfg, rng)
+    try:
+        set_packed_backend("unpack")
+        eng = ServeEngine(cfg, packed, max_len=12, compute_dtype=jnp.float32)
+        out1 = np.asarray(eng.generate(prompts, 4))
+        set_packed_backend("interpret")  # ignored by the existing engine
+        out2 = np.asarray(eng.generate(prompts, 4))
+        assert eng.backend == "unpack"
+        assert get_packed_backend() == "interpret"  # global left untouched
+    finally:
+        set_packed_backend("auto")
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_engine_packed_prefill_logits_bitexact(rng, unpack_backend):
+    """Stronger than token agreement: the unpack path dequantizes exactly,
+    so prefill logits match quantize_tree serving bit for bit."""
+    cfg = configs.get_reduced("internlm2-1.8b")
+    qt, packed, _ = _pack_and_quant(cfg, rng, 2)
+    batch = {"tokens": jax.random.randint(rng, (2, 8), 0, cfg.vocab_size)}
+    e_q = ServeEngine(cfg, qt, max_len=12, compute_dtype=jnp.float32)
+    e_p = ServeEngine(cfg, packed, max_len=12, compute_dtype=jnp.float32)
+    lq, _ = e_q.prefill(batch)
+    lp, _ = e_p.prefill(batch)
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(lq))
+
+
+# ---------------------------------------------------------------------------
+# layer-level: Pallas kernel path (interpret mode) vs the exact fallback
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_bits", [2, 4])
+def test_packed_dense_kernel_matches_unpack(rng, n_bits):
+    """dense_apply dispatch: bias add + bf16 activations + multi-dim out
+    dims through the kernel agree with the exact unpack-then-dot path."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    w = jax.random.normal(k1, (32, 4, 8)) * 0.3
+    b = jax.random.normal(k2, (4, 8)) * 0.1
+    p = {"kernel": core.pack(w, 3, n_bits), "bias": b}
+    x = jax.random.normal(k3, (2, 5, 32)).astype(jnp.bfloat16)
+    try:
+        set_packed_backend("unpack")
+        y_ref = packed_dense_apply(p, x, compute_dtype=jnp.bfloat16)
+        set_packed_backend("interpret")
+        y_k = packed_dense_apply(p, x, compute_dtype=jnp.bfloat16)
+    finally:
+        set_packed_backend("auto")
+    assert y_k.shape == (2, 5, 4, 8) and y_k.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_ref, np.float32), atol=0.05, rtol=0.05)
+
+
+@pytest.mark.parametrize("n_bits", [2, 4])
+def test_fixedpoint_matmul_experts_matches_ref(rng, n_bits):
+    E, C, K, N = 3, 8, 16, 24
+    k1, k2 = jax.random.split(rng)
+    w = jax.random.normal(k1, (E, K, N)) * 0.3
+    f = jnp.asarray([1, 2, 3], jnp.int32)
+    pk = core.pack(w, f, n_bits)
+    x = jax.random.normal(k2, (E, C, K))
+    y_ref = fixedpoint_matmul_experts_ref(x, pk.data, f, n_bits=n_bits, n_out=N)
+    y = fixedpoint_matmul_experts(x, pk.data, f, n_bits=n_bits, n_out=N, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-6, atol=1e-6)
+    try:
+        set_packed_backend("unpack")
+        y_u = packed_expert_einsum(x, pk, compute_dtype=jnp.float32)
+    finally:
+        set_packed_backend("auto")
+    np.testing.assert_allclose(np.asarray(y_u), np.asarray(y_ref), rtol=1e-6, atol=1e-6)
+
+
+def test_fixedpoint_matmul_bias_fused(rng):
+    """ops-level bias epilogue agrees with the jnp oracle."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    K, N = 48, 40
+    w = jax.random.normal(k1, (K, N)) * 0.3
+    bias = jax.random.normal(k2, (N,))
+    pk = core.pack(w, 2, 2)
+    x = jax.random.normal(k3, (6, K))
+    y = fixedpoint_matmul(x, pk.data, 2, bias, n_bits=2, n_out=N, interpret=True)
+    y_ref = fixedpoint_matmul_ref(x, pk.data, 2, bias, n_bits=2, n_out=N)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-6, atol=1e-6)
+
+
+def test_packed_scan_slicing_roundtrip(rng):
+    """Packed survives lax.scan leaf slicing (the stacked-group serving
+    path): scanning a (L, ...) Packed with per-layer f reproduces per-layer
+    dequantization exactly."""
+    L, K, N = 3, 8, 12
+    w = jax.random.normal(rng, (L, K, N)) * 0.4
+    f = jnp.asarray([1, 2, 3], jnp.int32)
+    pk = core.pack(w, f, 2)
+
+    def body(carry, pk_l):
+        return carry, core.unpack(pk_l, jnp.float32)
+
+    _, per_layer = jax.lax.scan(
+        body, 0, pk, length=L
+    )
+    np.testing.assert_array_equal(np.asarray(per_layer), np.asarray(core.unpack(pk)))

@@ -1,6 +1,8 @@
 """Bit-packing roundtrip properties (serving artifact format)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev deps
 from hypothesis import given, settings, strategies as st
 
 from repro import core
