@@ -79,6 +79,28 @@ def run_symog_protocol(
     }
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    """The harness CSV contract: name,us_per_call,derived."""
+# Every emit() is also recorded here so benchmark mains can dump a JSON
+# artifact (CI uploads BENCH_serve.json and gates on regressions vs a
+# committed baseline — see benchmarks/compare_bench.py).
+RESULTS: list = []
+
+
+def emit(name: str, us_per_call: float, derived: str, ref_us: float = 0.0,
+         **metrics) -> None:
+    """The harness CSV contract: name,us_per_call,derived.  Extra numeric
+    ``metrics`` ride along into the JSON artifact (e.g. speedup floors).
+    ``ref_us``: a reference-workload time measured ADJACENT to this entry —
+    the regression gate compares us_per_call/ref_us ratios, which cancels
+    shared-runner speed swings (they hit entry and reference alike)."""
+    RESULTS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived, "ref_us": ref_us, "metrics": metrics})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_results_json(path: str) -> None:
+    import json
+
+    with open(path, "w") as f:
+        json.dump({"entries": {r["name"]: r for r in RESULTS}}, f, indent=2,
+                  sort_keys=True)
+    print(f"wrote {len(RESULTS)} entries to {path}")

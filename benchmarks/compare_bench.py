@@ -1,0 +1,79 @@
+"""Gate a kernel_bench JSON artifact against a committed baseline.
+
+    python benchmarks/compare_bench.py \
+        --baseline benchmarks/BENCH_serve.baseline.json \
+        --current BENCH_serve.json [--factor 2.0]
+
+Two checks, exit 1 on any violation:
+  * timed entries (us_per_call > us-floor in BOTH files) must not regress
+    by more than ``--factor`` vs the baseline.  Absolute wall time on a
+    shared runner swings 2x+ even WITHIN one bench run (co-tenant bursts
+    last seconds), so each entry is normalized by its own ``ref_us`` — a
+    fixed reference matmul kernel_bench times immediately adjacent to that
+    entry's measurement, landing in the same noise regime.  The us/ref
+    ratio cancels machine-speed swings while a real per-entry step
+    function (e.g. an accidental per-call retrace, 10-100x) still trips
+    the gate.  Falls back to raw us when either side lacks ref_us;
+  * metric floors: any ``metrics`` key in the BASELINE acts as a floor for
+    the same key in the current entry (continuous-batching speedup >= 1.5
+    ships in the committed baseline, so the serve scheduler can't silently
+    fall back to static-loop throughput).
+
+New entries (in current but not baseline) pass — refresh the baseline in
+the same PR that adds them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+US_FLOOR = 50.0  # entries faster than this are timer noise, not signals
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--factor", type=float, default=2.0)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)["entries"]
+    with open(args.current) as f:
+        cur = json.load(f)["entries"]
+
+    failures = []
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        b_us, c_us = b.get("us_per_call", 0.0), c.get("us_per_call", 0.0)
+        if b_us > US_FLOOR and c_us > US_FLOOR:
+            b_ref, c_ref = b.get("ref_us", 0.0), c.get("ref_us", 0.0)
+            norm = b_ref > 0 and c_ref > 0
+            b_t = b_us / b_ref if norm else b_us
+            c_t = c_us / c_ref if norm else c_us
+            unit = "x ref" if norm else "us"
+            if c_t > args.factor * b_t:
+                failures.append(
+                    f"{name}: {c_t:.2f}{unit} vs baseline {b_t:.2f}{unit} "
+                    f"(> {args.factor:.1f}x regression)")
+        for key, floor in (b.get("metrics") or {}).items():
+            got = (c.get("metrics") or {}).get(key)
+            if got is None or got < floor:
+                failures.append(f"{name}.{key}: {got} below floor {floor}")
+
+    if failures:
+        print("BENCH REGRESSION GATE FAILED:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"bench gate OK: {len(base)} baseline entries within "
+          f"{args.factor:.1f}x, all metric floors met")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

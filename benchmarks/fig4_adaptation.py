@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro import core, optim
 from repro.data import SyntheticImages, SyntheticImagesConfig
-from repro.models.cnn import PAPER_CNNS, cnn_init, reduced_cnn
+from repro.models.cnn import cnn_init, reduced_cnn
 from repro.nn.tree import flatten_with_paths
 from repro.train import CNNTrainState, make_cnn_train_step
 

@@ -9,22 +9,50 @@ loop — timing them is meaningless), so we report:
 """
 from __future__ import annotations
 
+import argparse
 import time
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_results_json
 from repro import core
 
 
 def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
-    t0 = time.perf_counter()
+    """us per call, MIN over iters: the mean is inflated 2x+ by co-tenant
+    noise on shared runners, which would flake the CI regression gate; the
+    minimum estimates the achievable time."""
+    warm = fn(*args)
+    (warm[0] if isinstance(warm, tuple) else warm).block_until_ready()
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
         (out[0] if isinstance(out, tuple) else out).block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+_REF_STATE = {}
+
+
+def _ref_us() -> float:
+    """Reference-workload time (fixed 8x1024x1024 matmul), measured NOW.
+
+    Every timed entry records the reference time taken adjacent to its own
+    measurement: shared-runner noise regimes (co-tenant bursts, frequency
+    scaling) last seconds, so entry and reference land in the same regime
+    and the us/ref ratio the CI gate compares stays stable while absolute
+    wall time swings 2x+ (measured on the dev container)."""
+    if not _REF_STATE:
+        key = jax.random.PRNGKey(42)
+        _REF_STATE["x"] = jax.random.normal(key, (8, 1024))
+        _REF_STATE["w"] = jax.random.normal(jax.random.fold_in(key, 1), (1024, 1024))
+        _REF_STATE["fn"] = jax.jit(lambda a, b: a @ b)
+    return _time(_REF_STATE["fn"], _REF_STATE["x"], _REF_STATE["w"])
 
 
 def run() -> None:
@@ -54,10 +82,13 @@ def run() -> None:
         return jnp.clip(w - lr * (g_tot + mu * v2), -delta, delta), v2
 
     t_unfused = _time(unfused, w, g, v)
+    r_unfused = _ref_us()
     t_fused = _time(fused, w, g, v)
-    emit("symog_update_unfused_1M", t_unfused, "jnp multi-pass (CPU)")
+    r_fused = _ref_us()
+    emit("symog_update_unfused_1M", t_unfused, "jnp multi-pass (CPU)",
+         ref_us=r_unfused)
     emit("symog_update_fused_1M", t_fused,
-         f"speedup_vs_unfused={t_unfused / t_fused:.2f}x")
+         f"speedup_vs_unfused={t_unfused / t_fused:.2f}x", ref_us=r_fused)
     # TPU traffic model: unfused ~10 streams (r/w per pass) vs fused 5
     emit("symog_update_traffic_model", 0.0,
          "fused=5 streams (r:w,g,v; w:w',v') vs naive>=10 -> >=2x HBM saving")
@@ -72,7 +103,8 @@ def run() -> None:
         return x @ w
 
     t_dense = _time(dense, x, wkn)
-    emit("matmul_dense_f32_8x2048x2048", t_dense, "baseline x@W (CPU)")
+    emit("matmul_dense_f32_8x2048x2048", t_dense, "baseline x@W (CPU)",
+         ref_us=_ref_us())
     emit("fixedpoint_matmul_traffic_model", 0.0,
          f"weight_bytes: f32={K * N * 4}, bf16={K * N * 2}, packed2bit={K * N // 4}"
          " -> 8x less HBM than bf16 (decode is weight-bandwidth-bound)")
@@ -105,8 +137,103 @@ def run() -> None:
         emit(f"decode_matmul_packed{n_bits}bit_8x{K}x{N}", t_packed,
              f"bytes_moved={packed_bytes} vs dense_f32={dense_bytes} "
              f"({dense_bytes / packed_bytes:.1f}x less; CPU fallback "
-             f"{t_packed / t_dense:.2f}x dense wall time)")
+             f"{t_packed / t_dense:.2f}x dense wall time)", ref_us=_ref_us())
+
+    run_serve_bench()
+
+
+def run_serve_bench() -> None:
+    """Ragged-decode throughput: continuous batching vs the static loop.
+
+    Workload: requests with uniform prompts but heavy-tailed generation
+    budgets — the shape where static batching burns the most bandwidth
+    (every batch decodes to its slowest member while finished rows ride
+    along).  The continuous scheduler evicts at each budget and refills the
+    slot, so useful-token throughput is the honest comparison: both sides
+    pay their prefills and produce exactly the same `useful` tokens.
+    Measured for the float tree and the 2-bit pack_tree artifact.
+
+    Runs a widened reduced config (d_model 256): at test scale (d_model 32)
+    a decode step is dispatch-overhead-bound on CPU, and the scheduler's
+    step-count advantage disappears into timer noise.
+    """
+    import dataclasses as _dc
+
+    from repro import configs
+    from repro.models.lm import init_lm
+    from repro.serve import Request, ServeEngine
+
+    cfg = _dc.replace(configs.get_reduced("internlm2-1.8b"),
+                      d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+                      d_ff=1024, vocab_size=2048)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    scfg = core.SymogConfig(n_bits=2, total_steps=1)
+    sst = core.symog_init(params, scfg)
+    packed = core.pack_tree(params, sst, scfg)
+
+    slots, prompt_len, steps_max = 4, 8, 48
+    budgets = [steps_max, 4, 6, 4] * 5  # heavy-tailed: one straggler per wave
+    key = jax.random.PRNGKey(7)
+    prompts = [np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                             (prompt_len,), 0, cfg.vocab_size))
+               for i in range(len(budgets))]
+    reqs = [Request(tokens=p, max_new_tokens=b) for p, b in zip(prompts, budgets)]
+    useful = sum(budgets)
+
+    for label, tree in (("float", params), ("packed2bit", packed)):
+        eng = ServeEngine(cfg, tree, max_len=prompt_len + steps_max,
+                          compute_dtype=jnp.float32)
+
+        def run_static():
+            for lo in range(0, len(reqs), slots):
+                chunk = reqs[lo : lo + slots]
+                batch = {"tokens": jnp.asarray(np.stack([np.asarray(r.tokens)
+                                                         for r in chunk]))}
+                out = eng.generate_static(batch, max(r.max_new_tokens for r in chunk))
+                # sync before the timer stops: the continuous arm pays a
+                # per-step host sync by construction, so the static arm must
+                # not get away with measuring dispatch only
+                jax.block_until_ready(out)
+
+        def run_continuous():
+            eng.serve(reqs, n_slots=slots)
+
+        def timed(fn):
+            t0 = time.perf_counter()
+            fn()
+            return time.perf_counter() - t0
+
+        run_static(); run_continuous()  # warm both trace sets
+        # INTERLEAVED best-of-3: a co-tenant burst spanning one arm's runs
+        # would skew the gated speedup ratio; alternating S,C,S,C,S,C puts
+        # both arms in the same noise regime, and min-of-3 drops the bursts
+        ts, tc = [], []
+        for _ in range(3):
+            ts.append(timed(run_static))
+            tc.append(timed(run_continuous))
+        t_static, t_cont = min(ts), min(tc)
+        r_static = r_cont = _ref_us()
+        speedup = t_static / t_cont
+        emit(f"serve_static_ragged_{label}", t_static * 1e6,
+             f"{useful / t_static:.1f} useful tok/s "
+             f"({len(reqs)} reqs x batches-of-{slots} to slowest member)",
+             ref_us=r_static)
+        emit(f"serve_continuous_ragged_{label}", t_cont * 1e6,
+             f"{useful / t_cont:.1f} useful tok/s; "
+             f"{speedup:.2f}x static (target >= 1.5x)", ref_us=r_cont,
+             speedup_vs_static=round(speedup, 3))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="also write the emitted entries to this JSON path "
+                         "(CI: BENCH_serve.json artifact + regression gate)")
+    args = ap.parse_args()
+    run()
+    if args.json:
+        write_results_json(args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

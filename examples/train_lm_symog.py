@@ -11,7 +11,6 @@ identical code path at CPU-friendly width.  On a real cluster pass
 ``--mesh 16x16`` (see repro.launch.train for the full CLI).
 """
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,7 @@ from repro.core.quantizer import (
 )
 from repro.core.regularizer import layer_reg_grad, layer_reg_value
 from repro.core.stepsize import F_MAX, F_MIN, optimal_f
-from repro.core.packing import Packed, pack
+from repro.core.packing import pack
 from repro.nn.tree import tree_map_with_path, flatten_with_paths
 
 DEFAULT_EXCLUDES: Tuple[str, ...] = (

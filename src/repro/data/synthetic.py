@@ -16,7 +16,7 @@ noise; linearly separable at high SNR, CNN-learnable in a few hundred steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

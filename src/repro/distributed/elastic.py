@@ -15,7 +15,7 @@ from typing import Any
 
 from jax.sharding import Mesh
 
-from repro.nn.sharding import ShardingRules, make_rules, shardings_for_tree
+from repro.nn.sharding import make_rules, shardings_for_tree
 
 
 def reshard_plan(train_state_like: Any, mesh: Mesh, profile: str) -> Any:

@@ -20,12 +20,11 @@ roofline terms (balanced-shard assumption).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
+from typing import Dict
 
 import numpy as np
 
 import jax
-from jax import core as jcore
 
 
 def _aval_bytes(aval) -> float:

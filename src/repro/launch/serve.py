@@ -15,6 +15,13 @@ int8 words, dispatched to the packed fixed-point matmul at every dense
 call site (Pallas on TPU, exact unpack fallback elsewhere — DESIGN.md §3).
 Reports resident weight bytes vs float and the token agreement with BOTH
 the float and the quantize_tree engines (the latter must be 100% exact).
+
+``--continuous`` drives a synthetic ragged-arrival workload through the
+continuous-batching scheduler (DESIGN.md §5): ``--requests`` prompts with
+random lengths/budgets arriving over time, scheduled onto ``--slots``
+ragged decode rows with EOS-free early exit at each budget, and compares
+useful-token throughput against the static uniform loop that runs every
+batch to its slowest member.
 """
 from __future__ import annotations
 
@@ -30,7 +37,50 @@ from repro import core
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, get_config, get_reduced
 from repro.models.lm import init_lm
-from repro.serve import ServeEngine
+from repro.serve import Request, ServeEngine
+
+
+def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
+                         seed: int, batch_extras=None):
+    """Synthetic ragged-arrival workload: uniform prompt length (so the
+    static baseline can batch them), ragged generation budgets in
+    [2, steps], arrivals spread over time in decode-step units."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.integers(0, 3, size=n_requests))
+    key = jax.random.PRNGKey(seed + 2)
+    reqs = []
+    for i in range(n_requests):
+        toks = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (prompt_len,), 0, cfg.vocab_size))
+        extras = None
+        if batch_extras is not None:
+            extras = {k: np.asarray(v[:1]) for k, v in batch_extras.items()}
+        reqs.append(Request(tokens=toks, max_new_tokens=int(rng.integers(2, steps + 1)),
+                            arrival=int(arrivals[i]), extras=extras))
+    return reqs
+
+
+def run_continuous(eng: ServeEngine, reqs, *, slots: int,
+                   temperature: float, top_k: int, seed: int, label: str) -> None:
+    useful = sum(r.max_new_tokens for r in reqs)
+    # warm the traces with the SAME sampling config (greedy and sampled
+    # decode/admit steps are different traces — scheduler_fns memo key)
+    eng.serve(reqs[:1], n_slots=slots, temperature=temperature, top_k=top_k,
+              seed=seed)
+    t0 = time.time()
+    comps, sched = eng.serve(reqs, n_slots=slots, temperature=temperature,
+                             top_k=top_k, seed=seed, return_scheduler=True)
+    dt = time.time() - t0
+    # static loop: batches of `slots` in arrival order, each run to the max
+    # budget in the batch (finished rows burn decode steps)
+    static_steps = 0
+    for lo in range(0, len(reqs), slots):
+        static_steps += max(r.max_new_tokens for r in reqs[lo : lo + slots])
+    print(f"continuous ({label}): {len(comps)} requests, {useful} useful tokens "
+          f"in {dt:.2f}s ({useful / dt:.1f} tok/s), "
+          f"{sched.stats['decode_steps']} ragged decode steps "
+          f"(+{sched.stats['idle_steps']} idle) vs {static_steps} static; "
+          f"reasons={ {c.finish_reason for c in comps} }")
 
 
 def main() -> None:
@@ -44,6 +94,17 @@ def main() -> None:
     ap.add_argument("--packed", action="store_true",
                     help="serve the pack_tree int8-word artifact end to end")
     ap.add_argument("--n-bits", type=int, default=2)
+    ap.add_argument("--continuous", action="store_true",
+                    help="ragged-arrival workload through the continuous-"
+                         "batching scheduler vs the static loop")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--continuous: number of synthetic requests")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="--continuous: decode slot-table size")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="--continuous: sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="--continuous: top-k sampling cutoff (0 = off)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -66,6 +127,31 @@ def main() -> None:
     max_len = args.prompt_len + args.steps + (cfg.prefix_len if cfg.family == "vlm" else 0)
     dtype = jnp.float32 if args.reduced else jnp.bfloat16
     eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=dtype)
+
+    if args.continuous:
+        extras = {k: v for k, v in batch.items() if k != "tokens"} or None
+        reqs = make_ragged_workload(cfg, n_requests=args.requests,
+                                    prompt_len=args.prompt_len, steps=args.steps,
+                                    seed=args.seed, batch_extras=extras)
+        run_continuous(eng, reqs, slots=args.slots,
+                       temperature=args.temperature, top_k=args.top_k,
+                       seed=args.seed, label="float")
+        if args.quantized or args.packed:
+            scfg = core.SymogConfig(n_bits=args.n_bits, total_steps=1)
+            sst = core.symog_init(params, scfg)
+            if args.packed:
+                qeng = ServeEngine.from_symog(cfg, params, sst, scfg,
+                                              max_len=max_len, compute_dtype=dtype)
+                label = f"packed {args.n_bits}-bit"
+            else:
+                qeng = ServeEngine(cfg, core.quantize_tree(params, sst, scfg),
+                                   max_len=max_len, compute_dtype=dtype)
+                label = f"quantized {args.n_bits}-bit"
+            run_continuous(qeng, reqs, slots=args.slots,
+                           temperature=args.temperature, top_k=args.top_k,
+                           seed=args.seed, label=label)
+        return
+
     t0 = time.time()
     out_float = eng.generate(batch, args.steps)
     dt = time.time() - t0

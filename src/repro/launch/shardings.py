@@ -4,16 +4,14 @@ and full-TrainState sharding trees built from the profile rules.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
-from repro.nn.sharding import ShardingRules, make_rules, shardings_for_tree
+from repro.nn.sharding import make_rules, shardings_for_tree
 from repro.nn.tree import tree_map_with_path
 
 

@@ -12,14 +12,11 @@ cluster drop it and pass ``--mesh 16x16``.
 from __future__ import annotations
 
 import argparse
-import json
-import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import core, optim
 from repro.checkpoint import CheckpointManager
@@ -28,7 +25,7 @@ from repro.data import SyntheticLM, SyntheticLMConfig
 from repro.distributed import StepTimeMonitor
 from repro.launch.shardings import data_shardings, state_shardings
 from repro.models.lm import init_lm
-from repro.train import TrainState, init_train_state, make_train_step
+from repro.train import init_train_state, make_train_step
 
 
 def parse_mesh(spec: str):

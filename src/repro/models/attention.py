@@ -185,13 +185,42 @@ def attn_init_cache(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat1
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def decode_positions(pos, batch: int) -> Tuple[jax.Array, bool]:
+    """Normalize a decode position argument to (B, 1) int32.
+
+    ``pos`` may be a scalar (uniform batch — the classic generate loop) or a
+    (B,) vector (continuous batching: every request sits at its own offset).
+    Returns (positions, per_row) where ``per_row`` is a static flag choosing
+    between the single-slice cache write and the per-row scatter."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((batch, 1), pos, jnp.int32), False
+    return pos[:, None], True
+
+
+def cache_update_rows(cache_leaf, new, pos, *, per_row: bool, axis: int = 1):
+    """Write a one-step cache entry at per-row positions.
+
+    cache_leaf (B, S, ...); new (B, 1, ...); pos scalar or (B,).  The uniform
+    case keeps the cheap single dynamic_update_slice; the ragged case scatters
+    each row at its own offset (vmapped dynamic_update_slice)."""
+    new = cache_write(new, cache_leaf.dtype)
+    if not per_row:
+        return jax.lax.dynamic_update_slice_in_dim(cache_leaf, new, pos, axis)
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis - 1)
+    )(cache_leaf, new, pos)
+
+
 def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=10000.0,
                 compute_dtype=jnp.bfloat16,
                 kv: Optional[Tuple[jax.Array, jax.Array]] = None):
-    """Single-token decode.  x (B,1,D); ``pos`` scalar int32 (uniform batch).
+    """Single-token decode.  x (B,1,D); ``pos`` scalar int32 (uniform batch)
+    or (B,) int32 (per-request positions — continuous batching).
 
-    Self-attn: writes new k/v at ``pos`` and attends to cache[0..pos].
-    Cross-attn (``kv`` given): attends to the fixed encoder context.
+    Self-attn: writes each row's new k/v at its own ``pos`` and attends to
+    cache[0..pos] per row.  Cross-attn (``kv`` given): attends to the fixed
+    encoder context.
     """
     B, T, D = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -199,7 +228,7 @@ def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=100
     q = dense_apply(p["q_proj"], x, compute_dtype=compute_dtype)
     if cfg.qk_norm:
         q = rmsnorm_apply(p["q_norm"], q)
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions, per_row = decode_positions(pos, B)
     if kv is None:
         k_new = dense_apply(p["k_proj"], x, compute_dtype=compute_dtype)
         v_new = dense_apply(p["v_proj"], x, compute_dtype=compute_dtype)
@@ -209,13 +238,13 @@ def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=100
             q = apply_rope(q, positions, rope_base)
             k_new = apply_rope(k_new, positions, rope_base)
         cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], cache_write(k_new, cache["k"].dtype), pos, 1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], cache_write(v_new, cache["v"].dtype), pos, 1),
+            "k": cache_update_rows(cache["k"], k_new, pos, per_row=per_row),
+            "v": cache_update_rows(cache["v"], v_new, pos, per_row=per_row),
         }
         k, v = cache_read(cache["k"], compute_dtype), cache_read(cache["v"], compute_dtype)
         S = k.shape[1]
         kv_pos = jnp.arange(S, dtype=jnp.int32)
-        mask = make_mask(jnp.full((B, 1), pos, jnp.int32), kv_pos[None, :], causal=True, window=window)
+        mask = make_mask(positions, kv_pos[None, :], causal=True, window=window)
         mask = jnp.broadcast_to(mask, (B, 1, S))
     else:
         if cfg.rope:
@@ -313,7 +342,7 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
     """
     B, T, D = x.shape
     H, r = cfg.n_heads, cfg.kv_lora_rank
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions, per_row = decode_positions(pos, B)
 
     cq = rmsnorm_apply(p["q_a_norm"], dense_apply(p["q_a_proj"], x, compute_dtype=compute_dtype))
     q = dense_apply(p["q_b_proj"], cq, compute_dtype=compute_dtype)
@@ -327,13 +356,13 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
     kr_new = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]
     kr_new = apply_rope(kr_new, positions, rope_base)[..., 0, :]
     cache = {
-        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], cache_write(c_new, cache["c_kv"].dtype), pos, 1),
-        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], cache_write(kr_new, cache["k_rope"].dtype), pos, 1),
+        "c_kv": cache_update_rows(cache["c_kv"], c_new, pos, per_row=per_row),
+        "k_rope": cache_update_rows(cache["k_rope"], kr_new, pos, per_row=per_row),
     }
     c_kv, k_rope = cache_read(cache["c_kv"], compute_dtype), cache_read(cache["k_rope"], compute_dtype)
     S = c_kv.shape[1]
     kv_pos = jnp.arange(S, dtype=jnp.int32)
-    mask = (kv_pos <= pos)[None, None, None, :]  # (1,1,1,S)
+    mask = (kv_pos[None, :] <= positions)[:, None, None, :]  # (B,1,1,S)
 
     logits = (
         jnp.einsum("BTHr,BSr->BHTS", q_eff, c_kv)

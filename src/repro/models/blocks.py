@@ -309,7 +309,9 @@ def block_cache_init(batch: int, max_len: int, cfg: ModelConfig, kind: str,
         return mla_init_cache(batch, max_len, _mla_cfg(cfg), dtype)
     if ring and cfg.window and cfg.window < max_len:
         c = attn_init_cache(batch, cfg.window, _attn_cfg(cfg), dtype)
-        c["kv_pos"] = jnp.full((cfg.window,), -1, jnp.int32)
+        # per-row ring positions: continuous batching gives every request its
+        # own write offset, so the occupancy map is (B, W), not (W,)
+        c["kv_pos"] = jnp.full((batch, cfg.window), -1, jnp.int32)
         return c
     return attn_init_cache(batch, max_len, _attn_cfg(cfg), dtype)
 
@@ -319,12 +321,13 @@ def block_cache_init(batch: int, max_len: int, cfg: ModelConfig, kind: str,
 # ---------------------------------------------------------------------------
 def _attn_decode_ring(pa, x, cache, pos, *, cfg: ModelConfig, rope_base, compute_dtype):
     """Ring-buffer local-attention decode: cache size = window W; slot =
-    pos % W; stored kv positions drive the mask (long_500k recurrentgemma)."""
+    pos % W per row; stored kv positions (B, W) drive the mask (long_500k
+    recurrentgemma).  ``pos`` scalar or (B,) — per-request ring offsets."""
     acfg = _attn_cfg(cfg)
     B = x.shape[0]
     H, K, hd = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
     W = cache["k"].shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions, per_row = attn_mod.decode_positions(pos, B)
     q = dense_apply(pa["q_proj"], x, compute_dtype=compute_dtype)
     k_new = dense_apply(pa["k_proj"], x, compute_dtype=compute_dtype)
     v_new = dense_apply(pa["v_proj"], x, compute_dtype=compute_dtype)
@@ -335,13 +338,13 @@ def _attn_decode_ring(pa, x, cache, pos, *, cfg: ModelConfig, rope_base, compute
     k_new = apply_rope(k_new, positions, rope_base)
     slot = jnp.mod(pos, W)
     cache = {
-        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], attn_mod.cache_write(k_new, cache["k"].dtype), slot, 1),
-        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], attn_mod.cache_write(v_new, cache["v"].dtype), slot, 1),
-        "kv_pos": jax.lax.dynamic_update_slice_in_dim(cache["kv_pos"], jnp.full((1,), pos, jnp.int32), slot, 0),
+        "k": attn_mod.cache_update_rows(cache["k"], k_new, slot, per_row=per_row),
+        "v": attn_mod.cache_update_rows(cache["v"], v_new, slot, per_row=per_row),
+        "kv_pos": attn_mod.cache_update_rows(cache["kv_pos"], positions, slot, per_row=per_row),
     }
-    kv_pos = cache["kv_pos"]
-    valid = (kv_pos >= 0) & (kv_pos <= pos) & (pos - kv_pos < W)
-    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, W))
+    kv_pos = cache["kv_pos"]  # (B, W)
+    valid = (kv_pos >= 0) & (kv_pos <= positions) & (positions - kv_pos < W)
+    mask = jnp.broadcast_to(valid[:, None, :], (B, 1, W))
     qh = q.reshape(B, 1, K, H // K, hd)
     out = attn_mod._qk_attn(qh, attn_mod.cache_read(cache["k"], compute_dtype),
                             attn_mod.cache_read(cache["v"], compute_dtype),
@@ -362,6 +365,7 @@ def block_decode(
     rope_base=10000.0,
     compute_dtype=jnp.bfloat16,
     enc_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    dropless_moe: bool = False,
 ) -> Tuple[jax.Array, Any]:
     if kind == "M":
         h = _norm_apply(cfg, p["pre_norm"], x)
@@ -394,8 +398,17 @@ def block_decode(
 
     h = _norm_apply(cfg, p["pre_mlp_norm"], x)
     if kind == "E":
-        # decode capacity: generous per-expert room at tiny token counts
-        cap = max(cfg.top_k, math.ceil(2.0 * x.shape[0] * cfg.top_k / cfg.n_experts))
+        # dropless (scheduler) decode: a token's top-k experts are DISTINCT,
+        # so with B single-token rows an expert sees at most B assignments —
+        # capacity B guarantees no assignment ever drops.  Drop-free routing
+        # makes each row's output independent of who else shares the slot
+        # table: the invariant continuous batching needs for token-exactness
+        # vs per-request static decode.  The classic uniform loop keeps the
+        # bounded capacity (a static batch never mixes unrelated rows).
+        if dropless_moe:
+            cap = x.shape[0]
+        else:
+            cap = max(cfg.top_k, math.ceil(2.0 * x.shape[0] * cfg.top_k / cfg.n_experts))
         y, _ = moe_apply(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype, capacity=cap)
     else:
         y = mlp_apply(p["mlp"], h, cfg=_mlp_cfg(cfg), compute_dtype=compute_dtype)

@@ -10,7 +10,7 @@ single lax.scan (see lm.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 GLOBAL_WINDOW = 2**30  # sentinel: effectively unbounded window
 

@@ -7,13 +7,12 @@ param here changes how it shards.
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.quantized import as_dense, is_packed, packed_dense_apply, packed_take
-from repro.nn.initializers import normal_init, scaled_normal
 
 
 # ---------------------------------------------------------------------------

@@ -24,7 +24,7 @@ from repro.models.blocks import (
     block_init,
     zero_aux,
 )
-from repro.models.config import GLOBAL_WINDOW, ModelConfig
+from repro.models.config import ModelConfig
 from repro.models.quantized import scan_ready
 from repro.models.layers import (
     dense_apply,
@@ -328,19 +328,42 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
 
 
 def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
-              compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Any]:
-    """One decode step.  tokens (B,1); pos scalar int32 (uniform batch).
+              compute_dtype=jnp.bfloat16,
+              active: Optional[jax.Array] = None) -> Tuple[jax.Array, Any]:
+    """One decode step.  tokens (B,1); pos scalar int32 (uniform batch) or
+    (B,) int32 (per-request positions — the continuous-batching contract:
+    row b's token is written into its caches at pos[b] and attends to its
+    own prefix only).  ``active`` (B,) bool marks live slots: inactive rows
+    are zeroed at the embedding and ALL their cache writes are reverted, so
+    an evicted slot is numerically frozen until a new request is admitted.
     Returns (logits (B,1,V), updated caches)."""
     B = tokens.shape[0]
+    # keep `pos` in its caller's rank: scalar keeps the cheap uniform-batch
+    # cache writes (single dynamic_update_slice), a vector takes the
+    # per-row scatter path inside each block's decode
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_v = jnp.broadcast_to(pos[None], (B,)) if pos.ndim == 0 else pos
     x = _embed_tokens(params, cfg, tokens, compute_dtype)
+    if active is not None:
+        x = x * active.astype(x.dtype).reshape(B, 1, 1)
     if cfg.family == "encdec":
         D = cfg.d_model
-        # absolute sinusoidal position of the current step
+        # absolute sinusoidal position of each row's current step
         half = D // 2
         i = jnp.arange(half, dtype=jnp.float32)
-        ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / D)
-        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :].astype(compute_dtype)
+        ang = pos_v[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / D)[None, :]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, None, :].astype(compute_dtype)
         x = x + pe
+
+    def _gate_cache(new_c, old_c):
+        """Revert inactive rows' cache writes (every leaf is batch-leading
+        at this level, incl. recurrent h / conv state and ring kv_pos)."""
+        if active is None:
+            return new_c
+        return jax.tree_util.tree_map(
+            lambda n, o: jnp.where(active.reshape((B,) + (1,) * (n.ndim - 1)), n, o),
+            new_c, old_c,
+        )
 
     new_caches: Dict[str, Any] = {}
     for g in scan_groups(cfg):
@@ -355,11 +378,13 @@ def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
                 enc_kv = None
                 if "cross_k" in cache_j:
                     enc_kv = (cache_j.pop("cross_k"), cache_j.pop("cross_v"))
+                old_j = dict(cache_j)
                 x, cache_j = block_decode(
                     p_u[f"sub{j}"], x, cache_j, pos, cfg=cfg, kind=kind,
                     window=win_u[j], rope_base=rb_u[j], compute_dtype=compute_dtype,
-                    enc_kv=enc_kv,
+                    enc_kv=enc_kv, dropless_moe=active is not None,
                 )
+                cache_j = _gate_cache(cache_j, old_j)
                 if enc_kv is not None:
                     cache_j = dict(cache_j)
                     cache_j["cross_k"], cache_j["cross_v"] = enc_kv
@@ -382,10 +407,15 @@ def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
 
 
 def prefill_lm(params, batch, cfg: ModelConfig, *, max_len: int,
-               compute_dtype=jnp.bfloat16, act_pspec=None) -> Tuple[jax.Array, Any]:
-    """Process the prompt; returns (last-position logits, caches to max_len)."""
+               compute_dtype=jnp.bfloat16, act_pspec=None,
+               last_only: bool = True) -> Tuple[jax.Array, Any]:
+    """Process the prompt; returns (last-position logits, caches to max_len).
+
+    ``last_only=False`` keeps the full (B, T, V) logits (teacher-forced
+    scoring of whole prompts); serving paths leave it True — prompts are
+    fed at exact length, so the last position is the sampling input."""
     out = forward_lm(params, batch, cfg, compute_dtype=compute_dtype,
-                     prefill_len=max_len, last_only=True, act_pspec=act_pspec)
+                     prefill_len=max_len, last_only=last_only, act_pspec=act_pspec)
     caches = out.caches
     if cfg.family == "encdec":
         # compute cross k/v per decoder layer from the encoder output

@@ -22,7 +22,6 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.nn.tree import tree_map_with_path

@@ -11,7 +11,7 @@ live in the trainer (keeps optimizer state mesh-shardable and schedule-free).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

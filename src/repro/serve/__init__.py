@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine, greedy_generate
+from repro.serve.scheduler import Completion, Request, Scheduler
 
-__all__ = ["ServeEngine", "greedy_generate"]
+__all__ = ["Completion", "Request", "Scheduler", "ServeEngine", "greedy_generate"]

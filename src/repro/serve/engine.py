@@ -22,14 +22,15 @@ like any other params; nothing is densified at rest.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Sequence
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.lm import decode_lm, init_caches, prefill_lm
+from repro.models.lm import decode_lm, prefill_lm, scan_groups
 from repro.models.quantized import (
     get_packed_backend,
     resolve_backend,
@@ -65,6 +66,103 @@ class ServeEngine:
         self._prefill = _prefill
         self._decode = _decode
 
+        # --- scheduler support -------------------------------------------
+        # All continuous-batching traces are owned by the ENGINE, not the
+        # Scheduler: serve() builds a fresh Scheduler per call, and a trace
+        # cache per scheduler would recompile the decode step on every
+        # request wave (measured 45x slower than the static loop).
+        groups = scan_groups(cfg)
+
+        @jax.jit
+        def _insert_slot(caches, one, slot):
+            """Scatter a batch-of-one prefill's caches into a slot's rows
+            (batch axis 1 for scan-stacked layer groups, 0 otherwise)."""
+            out = dict(caches)
+            for g in groups:
+                axis = 1 if g.stacked else 0
+
+                def put(dst, src, axis=axis):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        dst, src.astype(dst.dtype), slot, axis)
+
+                out[g.name] = jax.tree_util.tree_map(put, caches[g.name], one[g.name])
+            return out
+
+        self._insert_slot = _insert_slot
+        self._sched_fns: Dict[Any, Any] = {}
+        self._cache_shapes = None
+
+    def prefill_cache_shapes(self):
+        """ShapeDtypeStruct tree of one request's prefill caches (lazy
+        eval_shape, no FLOPs) — the Scheduler widens the batch axis to its
+        slot count.  Memoized: tracing the prefill per serve() call would
+        dominate short workloads."""
+        if self._cache_shapes is None:
+            cfg = self.cfg
+            dummy = {"tokens": jnp.zeros((1, 1), jnp.int32)}
+            if cfg.family == "encdec":
+                dummy["frames"] = jnp.zeros((1, cfg.encoder_len, cfg.d_model), jnp.float32)
+            if cfg.family == "vlm":
+                dummy["patches"] = jnp.zeros((1, cfg.prefix_len, cfg.d_model), jnp.float32)
+            _, self._cache_shapes = jax.eval_shape(self._prefill, self.params, dummy)
+        return self._cache_shapes
+
+    def scheduler_fns(self, *, greedy: bool, top_k: int):
+        """(decode_step, admit_step, sample) jit triple for the continuous-
+        batching loop, memoized per (greedy, top_k) — the only sampling
+        knobs that change the trace; temperature and the PRNG key are
+        traced arguments.  The cache pool is DONATED through decode and
+        admit steps: without aliasing, XLA would copy the whole slot-table
+        KV pool every emitted token.
+
+        ``admit_step`` fuses prefill + cache slot-scatter + first-token
+        sampling into ONE dispatch (admission cost is what decides whether
+        continuous batching beats the static loop on short requests)."""
+        key = (bool(greedy), int(top_k))
+        if key in self._sched_fns:
+            return self._sched_fns[key]
+        cfg, cd = self.cfg, self.compute_dtype
+
+        def _sample(logits, seeds, base_key, temperature):
+            # logits (B, V) fp32; seeds (B,) int32 — stream ids keyed by
+            # (request, step) so slot placement can't change the draw
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            scaled = logits / temperature
+            if top_k > 0:
+                kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+                scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+            keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(seeds)
+            return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+
+        def _decode_step(params, caches, tokens, pos, active, seed0, base_key,
+                         temperature):
+            # tokens (S,) — the previous step's output fed straight back as a
+            # device handle; pos advances on-device (inactive rows frozen)
+            # and seeds derive as seed0 + pos, so the host uploads nothing
+            # per step and downloads only the sampled tokens.
+            logits, caches = decode_lm(params, caches, tokens[:, None], pos, cfg,
+                                       compute_dtype=cd, active=active)
+            nxt = _sample(logits[:, -1, :].astype(jnp.float32), seed0 + pos,
+                          base_key, temperature)
+            return nxt, pos + active.astype(jnp.int32), caches
+
+        def _admit_step(params, batch, caches, slot, seed, base_key, temperature):
+            # last_only prefill: prompts are exact-length (never padded), so
+            # the (B, 1, V) last-position logits ARE the sampling input — no
+            # full (T, V) vocab projection per admission
+            logits, one = self._prefill(params, batch)
+            caches = self._insert_slot(caches, one, slot)
+            first = _sample(logits[:, -1, :].astype(jnp.float32), seed[None],
+                            base_key, temperature)
+            return first[0], caches
+
+        fns = (jax.jit(_decode_step, donate_argnums=(1,)),
+               jax.jit(_admit_step, donate_argnums=(2,)),
+               jax.jit(_sample))
+        self._sched_fns[key] = fns
+        return fns
+
     def _with_backend(self, fn, *args):
         prev = get_packed_backend()
         set_packed_backend(self.backend)
@@ -93,8 +191,48 @@ class ServeEngine:
     def decode(self, caches, tokens, pos):
         return self._with_backend(self._decode, self.params, caches, tokens, pos)
 
+    def serve(self, requests: Sequence[Any], *, n_slots: int = 0,
+              temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+              return_scheduler: bool = False):
+        """Continuous-batching serve: schedule ``requests`` (scheduler.Request)
+        onto ``n_slots`` ragged decode rows (default: min(len, 8)) with EOS
+        early-exit and temperature/top-k sampling.  Returns Completions in
+        submission order (and the drained Scheduler when asked — slot events
+        and step stats for tests/benchmarks)."""
+        from repro.serve.scheduler import serve_requests
+
+        n = n_slots or max(1, min(len(requests), 8))
+        comps, sched = serve_requests(self, requests, n_slots=n,
+                                      temperature=temperature, top_k=top_k,
+                                      seed=seed)
+        return (comps, sched) if return_scheduler else comps
+
     def generate(self, batch: Dict[str, jax.Array], steps: int) -> jax.Array:
-        """Greedy continuation of a batched prompt; returns (B, steps)."""
+        """Greedy continuation of a batched prompt; returns (B, steps).
+
+        Compatibility wrapper over ``serve``: each row becomes one request
+        (fixed ``steps`` budget, no EOS), scheduled onto B slots — so the
+        classic API now exercises the ragged per-request decode path."""
+        from repro.serve.scheduler import Request
+
+        tokens = np.asarray(batch["tokens"])
+        B = tokens.shape[0]
+        reqs = []
+        for b in range(B):
+            extras = {k: np.asarray(v[b : b + 1]) for k, v in batch.items()
+                      if k != "tokens"}
+            reqs.append(Request(tokens=tokens[b], max_new_tokens=steps,
+                                extras=extras or None))
+        comps = self.serve(reqs, n_slots=B)
+        if any(len(c.tokens) != steps for c in comps):
+            raise ValueError(f"max_len={self.max_len} too small for {steps} steps")
+        return jnp.asarray(np.stack([np.asarray(c.tokens, np.int32) for c in comps]))
+
+    def generate_static(self, batch: Dict[str, jax.Array], steps: int) -> jax.Array:
+        """The pre-scheduler static loop: one uniform-position batch, every
+        request decoded for exactly ``steps`` tokens.  Kept as the reference
+        oracle for scheduler token-exactness tests and as the baseline the
+        continuous-batching throughput benchmark is measured against."""
         tokens = batch["tokens"]
         B, T = tokens.shape
         logits, caches = self.prefill(batch)

@@ -1,0 +1,315 @@
+"""Continuous-batching request scheduler over ``ServeEngine``.
+
+The engine's static ``generate`` loop serves one fixed batch at a uniform
+position: every request runs for exactly ``steps`` tokens and finished
+rows burn decode bandwidth until the slowest request ends.  This module
+replaces that with the classic continuous-batching loop (Orca-style
+iteration-level scheduling):
+
+  * a FIFO **request queue** (``submit``) with optional arrival times in
+    decode-step units (synthetic ragged-arrival workloads);
+  * a **slot table** of ``n_slots`` rows.  One jitted decode step serves
+    all slots at once; each slot carries its own position, so the batch is
+    ragged — row b attends to cache[0..pos[b]] and writes at pos[b]
+    (the (B,) position contract threaded through ``decode_lm``);
+  * **admission**: a free slot pops the queue, runs a batch-of-one prefill,
+    and scatters the resulting caches into the slot's rows of the shared
+    cache tree (``dynamic_update_slice`` on the batch axis — axis 1 for
+    scan-stacked layer groups, axis 0 otherwise);
+  * **eviction**: a row that emits ``eos_id`` or reaches its token budget
+    is marked inactive.  Inactive rows are masked at the embedding and all
+    their cache writes are reverted inside ``decode_lm``, so the slot is
+    numerically frozen until reused — and active rows never see evicted
+    neighbours (decode-path MoE routing is drop-free, so row outputs are
+    independent of batch composition);
+  * **sampling**: greedy when ``temperature <= 0``; otherwise temperature /
+    top-k sampling keyed by (request index, step) — NOT by slot — so a
+    fixed seed reproduces token streams regardless of slot placement, and
+    identically across ``quantize_tree`` and ``pack_tree`` params (whose
+    logits are bit-equal on the unpack backend).
+
+Everything device-side runs through two jitted traces per engine (a fused
+prefill+scatter+sample admission step per distinct prompt length, and one
+shared decode step), owned by the ENGINE so repeated serve() calls never
+retrace.  Slot state (tokens/positions/active/seed bases) lives on device;
+the host loop's only download per step is the sampled token vector it
+needs for EOS and budget bookkeeping.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import scan_groups
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``tokens`` is the (T,) prompt."""
+
+    tokens: Any
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never emitted
+    arrival: int = 0  # earliest decode step at which admission may happen
+    extras: Optional[Dict[str, Any]] = None  # encdec: frames (1,S,D); vlm: patches
+
+
+@dataclasses.dataclass
+class Completion:
+    index: int  # submission order
+    tokens: List[int]  # generated ids (incl. the eos token if emitted)
+    prompt_len: int
+    finish_reason: str  # 'eos' | 'length'
+    slot: int
+    admitted_step: int
+    finished_step: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    index: int
+    eos_id: int
+    budget: int  # max tokens this slot may emit (max_len-clamped)
+    prompt_len: int
+    out: List[int]
+    admitted_step: int
+
+
+def _sample_seed(req_index: int, step: int) -> int:
+    """PRNG stream id for the ``step``-th token of request ``req_index``.
+    Keyed by request identity, not slot, so placement can't change samples.
+    The decode step recomputes this on-device as ``seed0 + pos`` (seed0 is
+    written at admission), so keep it affine in ``step``.  The request index
+    wraps at 2048 to stay inside int32 (2047·1e6 + step < 2^31): streams
+    only repeat between requests 2048 apart under the same base seed."""
+    return (req_index % 2048) * 1_000_003 + step
+
+
+class Scheduler:
+    """Continuous-batching loop over a ``ServeEngine``.
+
+    All jitted calls go through ``engine._with_backend`` so the packed
+    dispatch inside the shared decode trace always sees the backend the
+    engine was pinned to at construction (DESIGN.md §4)."""
+
+    def __init__(self, engine, n_slots: int, *, temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.eng = engine
+        self.cfg = cfg = engine.cfg
+        self.n_slots = S = int(n_slots)
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._temp = jnp.float32(max(self.temperature, 1e-6))
+        self._offset = cfg.prefix_len if cfg.family == "vlm" else 0
+        self._groups = scan_groups(cfg)
+        # all traces live on the engine (shared across Scheduler instances —
+        # a per-scheduler jit cache would recompile on every serve() call)
+        self._decode_step, self._admit_step, self._sample = engine.scheduler_fns(
+            greedy=self.temperature <= 0.0, top_k=self.top_k)
+
+        self.caches = self._init_caches()
+        # slot-table state lives ON DEVICE: the per-step loop feeds the
+        # previous step's device handles straight back and only downloads
+        # the sampled tokens (EOS/budget bookkeeping); admission/eviction
+        # touch single rows via .at[slot].set
+        self._tokens = jnp.zeros((S,), jnp.int32)
+        self._pos = jnp.zeros((S,), jnp.int32)
+        self._active = jnp.zeros((S,), bool)
+        self._seed0 = jnp.zeros((S,), jnp.int32)
+        self._slots: List[Optional[_Slot]] = [None] * S
+        self._n_live = 0
+        self._queue: collections.deque = collections.deque()
+        self._n_submitted = 0
+        self._completions: Dict[int, Completion] = {}
+        self.step_count = 0
+        self.stats = {"decode_steps": 0, "idle_steps": 0, "prefills": 0,
+                      "admissions": 0, "evictions": 0, "tokens_emitted": 0}
+        self.events: List[Tuple[int, str, int, int]] = []  # (step, kind, req, slot)
+
+    # ------------------------------------------------------------------
+    # cache pool
+    # ------------------------------------------------------------------
+    def _init_caches(self):
+        """Zero cache pool with exactly the prefill trace's leaf dtypes and
+        shapes, batch axis widened from 1 to n_slots."""
+        shapes = self.eng.prefill_cache_shapes()
+        S = self.n_slots
+        pool = {}
+        for g in self._groups:
+            axis = 1 if g.stacked else 0
+
+            def alloc(sd, axis=axis):
+                shape = sd.shape[:axis] + (S,) + sd.shape[axis + 1:]
+                return jnp.zeros(shape, sd.dtype)
+
+            pool[g.name] = jax.tree_util.tree_map(alloc, shapes[g.name])
+        return pool
+
+    # ------------------------------------------------------------------
+    # queue / admission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Enqueue a request; returns its index (completion order key)."""
+        prompt = np.asarray(req.tokens, np.int32).reshape(-1)
+        budget = min(int(req.max_new_tokens),
+                     self.eng.max_len - self._offset - prompt.shape[0] + 1)
+        if budget < 1:
+            raise ValueError(
+                f"prompt of length {prompt.shape[0]} leaves no room for "
+                f"generation under max_len={self.eng.max_len}")
+        idx = self._n_submitted
+        self._n_submitted += 1
+        self._queue.append((idx, prompt, budget, req))
+        return idx
+
+    def _admit(self) -> None:
+        if self._wave_ready():
+            self._admit_wave()
+            return
+        for slot in range(self.n_slots):
+            if not self._queue or self._slots[slot] is not None:
+                continue
+            if self._queue[0][3].arrival > self.step_count:
+                continue  # FIFO: later requests don't jump an arrival gap
+            idx, prompt, budget, req = self._queue.popleft()
+            self._admit_one(slot, idx, prompt, budget, req)
+
+    def _wave_ready(self) -> bool:
+        """A full uniform wave: every slot idle and the next n_slots queued
+        requests all due, same prompt length, same extras layout — then ONE
+        batched prefill IS the cache pool (no per-slot scatter).  This is
+        the path `engine.generate` (uniform batch, n_slots=B) rides, so the
+        compatibility wrapper costs one prefill like the old static loop."""
+        if self._n_live or len(self._queue) < self.n_slots:
+            return False
+        head = list(self._queue)[: self.n_slots]
+        lp0 = head[0][1].shape[0]
+        ex0 = sorted((head[0][3].extras or {}).keys())
+        return all(
+            req.arrival <= self.step_count and prompt.shape[0] == lp0
+            and sorted((req.extras or {}).keys()) == ex0
+            for _, prompt, _, req in head
+        )
+
+    def _admit_wave(self) -> None:
+        wave = [self._queue.popleft() for _ in range(self.n_slots)]
+        prompts = np.stack([prompt for _, prompt, _, _ in wave])
+        batch = {"tokens": jnp.asarray(prompts)}
+        for key in (wave[0][3].extras or {}):
+            batch[key] = jnp.asarray(
+                np.concatenate([np.asarray(req.extras[key]) for _, _, _, req in wave]))
+        logits, self.caches = self.eng._with_backend(
+            self.eng._prefill, self.eng.params, batch)
+        seeds = jnp.asarray([_sample_seed(idx, 0) for idx, _, _, _ in wave], jnp.int32)
+        firsts = self._sample(logits[:, -1, :].astype(jnp.float32), seeds,
+                              self._base_key, self._temp)
+        self.stats["prefills"] += 1
+        for slot, (idx, prompt, budget, req) in enumerate(wave):
+            self._register(slot, idx, prompt, budget, req, firsts[slot])
+
+    def _admit_one(self, slot: int, idx: int, prompt: np.ndarray, budget: int,
+                   req: Request) -> None:
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        if req.extras:
+            batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        first_t, self.caches = self.eng._with_backend(
+            self._admit_step, self.eng.params, batch, self.caches,
+            jnp.int32(slot), jnp.int32(_sample_seed(idx, 0)),
+            self._base_key, self._temp)
+        self.stats["prefills"] += 1
+        self._register(slot, idx, prompt, budget, req, first_t)
+
+    def _register(self, slot: int, idx: int, prompt: np.ndarray, budget: int,
+                  req: Request, first_t) -> None:
+        """Slot bookkeeping shared by single and wave admission."""
+        first = int(np.asarray(first_t))
+        lp = prompt.shape[0]
+        self.stats["admissions"] += 1
+        self.stats["tokens_emitted"] += 1
+        self.events.append((self.step_count, "admit", idx, slot))
+        state = _Slot(index=idx, eos_id=int(req.eos_id), budget=budget,
+                      prompt_len=lp, out=[first], admitted_step=self.step_count)
+        self._slots[slot] = state
+        self._n_live += 1
+        start = self._offset + lp
+        self._tokens = self._tokens.at[slot].set(first_t)
+        self._pos = self._pos.at[slot].set(start)
+        self._active = self._active.at[slot].set(True)
+        # seed0 + pos == _sample_seed(idx, len(out)) at every future step
+        self._seed0 = self._seed0.at[slot].set(_sample_seed(idx, 1) - start)
+        if first == state.eos_id or len(state.out) >= budget:
+            self._finish(slot, "eos" if first == state.eos_id else "length")
+
+    def _finish(self, slot: int, reason: str) -> None:
+        state = self._slots[slot]
+        self._completions[state.index] = Completion(
+            index=state.index, tokens=list(state.out),
+            prompt_len=state.prompt_len, finish_reason=reason, slot=slot,
+            admitted_step=state.admitted_step, finished_step=self.step_count)
+        self.events.append((self.step_count, "evict", state.index, slot))
+        self.stats["evictions"] += 1
+        self._slots[slot] = None
+        self._n_live -= 1
+        self._active = self._active.at[slot].set(False)
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """Admit what fits, run one ragged decode step over the live slots.
+        Returns False once the queue is drained and every slot is idle."""
+        self._admit()
+        if self._n_live == 0:
+            if not self._queue:
+                return False
+            # all live work done but arrivals are still in the future:
+            # tick time forward (an idle serving step)
+            self.step_count += 1
+            self.stats["idle_steps"] += 1
+            return True
+
+        self._tokens, self._pos, self.caches = self.eng._with_backend(
+            self._decode_step, self.eng.params, self.caches,
+            self._tokens, self._pos, self._active, self._seed0,
+            self._base_key, self._temp)
+        nxt = np.asarray(self._tokens)  # the loop's one host sync
+        self.step_count += 1
+        self.stats["decode_steps"] += 1
+
+        for s, state in enumerate(self._slots):
+            if state is None:
+                continue
+            tok = int(nxt[s])
+            state.out.append(tok)
+            self.stats["tokens_emitted"] += 1
+            if tok == state.eos_id:
+                self._finish(s, "eos")
+            elif len(state.out) >= state.budget:
+                self._finish(s, "length")
+        return bool(self._n_live or self._queue)
+
+    def run(self) -> List[Completion]:
+        """Drain the queue; completions are returned in submission order."""
+        while self.step():
+            pass
+        return [self._completions[i] for i in sorted(self._completions)]
+
+
+def serve_requests(engine, requests: Sequence[Request], *, n_slots: int,
+                   temperature: float = 0.0, top_k: int = 0,
+                   seed: int = 0) -> Tuple[List[Completion], Scheduler]:
+    """One-shot helper: schedule ``requests`` onto ``engine`` and drain."""
+    sched = Scheduler(engine, n_slots, temperature=temperature, top_k=top_k,
+                      seed=seed)
+    for r in requests:
+        sched.submit(r)
+    return sched.run(), sched

@@ -9,7 +9,6 @@ with λ on its exponential schedule and the quantization-error gradient from
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -11,9 +11,8 @@ from repro.models.rglru import (
     rglru_block_apply,
     rglru_block_decode,
     rglru_init,
-    rglru_init_cache,
 )
-from repro.models.ssd import SSDConfig, ssd_block_apply, ssd_block_decode, ssd_init, ssd_init_cache, ssd_scan_ref
+from repro.models.ssd import SSDConfig, ssd_block_apply, ssd_block_decode, ssd_init, ssd_scan_ref
 
 
 # ---------------------------------------------------------------------------

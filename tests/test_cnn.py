@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.cnn import PAPER_CNNS, CNNConfig, cnn_apply, cnn_init, reduced_cnn
+from repro.models.cnn import PAPER_CNNS, cnn_apply, cnn_init, reduced_cnn
 
 
 @pytest.mark.parametrize("name", list(PAPER_CNNS))

@@ -1,6 +1,5 @@
 """Synthetic data pipeline: determinism, host sharding, resumability."""
 import numpy as np
-import pytest
 
 from repro.data import (
     SyntheticImages,

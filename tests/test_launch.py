@@ -1,7 +1,6 @@
 """Launch-layer units: jaxpr cost walker, HLO collective parser, specs."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ARCHS, SHAPES, get_config, input_specs, cell_supported
 from repro.launch.hlo import collective_bytes

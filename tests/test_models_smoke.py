@@ -14,7 +14,6 @@ from repro.models import (
     forward_lm,
     init_caches,
     init_lm,
-    lm_train_loss,
     prefill_lm,
 )
 from repro.train import init_train_state, make_train_step

@@ -1,0 +1,217 @@
+"""Continuous-batching scheduler (repro.serve.scheduler).
+
+The core contract: serving a ragged mix of requests through the shared
+slot table is TOKEN-IDENTICAL to decoding each request alone with the
+static uniform loop — per-request positions, per-row cache scatter, and
+drop-free decode MoE routing make row outputs independent of batch
+composition.  Checked greedily for quantize_tree and pack_tree params on
+an attention, a MoE, and a recurrent family; EOS eviction must free slots
+that later requests reuse; and sampling streams are keyed by (request,
+step), so a fixed seed reproduces across packed vs quantize_tree params.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, core
+from repro.models import decode_lm, init_lm, prefill_lm, set_packed_backend
+from repro.serve import Request, ServeEngine
+
+MAX_LEN = 24
+_ENGINES = {}
+
+
+@pytest.fixture
+def unpack_backend():
+    set_packed_backend("unpack")
+    yield
+    set_packed_backend("auto")
+
+
+def _engines(arch):
+    """(qt_engine, packed_engine) per arch, cached across tests (engine jit
+    traces are the expensive part of this module)."""
+    if arch not in _ENGINES:
+        cfg = configs.get_reduced(arch)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        scfg = core.SymogConfig(n_bits=2, total_steps=1)
+        st = core.symog_init(params, scfg)
+        qt = core.quantize_tree(params, st, scfg)
+        packed = core.pack_tree(params, st, scfg)
+        _ENGINES[arch] = (
+            ServeEngine(cfg, qt, max_len=MAX_LEN, compute_dtype=jnp.float32),
+            ServeEngine(cfg, packed, max_len=MAX_LEN, compute_dtype=jnp.float32),
+        )
+    return _ENGINES[arch]
+
+
+def _ragged_requests(cfg, key, lens=(3, 6, 4, 5, 7), budgets=(5, 3, 6, 4, 2),
+                     **kw):
+    return [
+        Request(
+            tokens=np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                                 (L,), 0, cfg.vocab_size)),
+            max_new_tokens=b, **kw)
+        for i, (L, b) in enumerate(zip(lens, budgets))
+    ]
+
+
+def _static_reference(eng, req):
+    """Per-request static greedy decode (the pre-scheduler loop)."""
+    batch = {"tokens": jnp.asarray(np.asarray(req.tokens)[None])}
+    if req.extras:
+        batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+    return np.asarray(eng.generate_static(batch, req.max_new_tokens))[0]
+
+
+# ---------------------------------------------------------------------------
+# token-exactness: ragged continuous batch == per-request static decode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", [
+    "internlm2-1.8b",  # attention family
+    pytest.param("olmoe-1b-7b", marks=pytest.mark.slow),  # MoE routing
+    pytest.param("recurrentgemma-2b", marks=pytest.mark.slow),  # recurrent
+])
+@pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
+def test_serve_matches_per_request_static(arch, tree, rng, unpack_backend):
+    eng = _engines(arch)[tree == "packed"]
+    reqs = _ragged_requests(eng.cfg, rng)
+    comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
+    assert [c.index for c in comps] == list(range(len(reqs)))
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(
+            np.asarray(comp.tokens), _static_reference(eng, req))
+        assert comp.finish_reason == "length"
+        assert comp.prompt_len == len(req.tokens)
+    # ragged early exit actually saved decode steps vs the static loop
+    static_steps = sum(max(r.max_new_tokens for r in reqs[lo : lo + 2])
+                      for lo in range(0, len(reqs), 2))
+    assert sched.stats["decode_steps"] < static_steps
+
+
+def test_generate_wrapper_matches_static_loop(rng, unpack_backend):
+    """The compatibility wrapper (generate -> serve) reproduces the classic
+    uniform-batch greedy loop token for token."""
+    eng = _engines("internlm2-1.8b")[0]
+    batch = {"tokens": jax.random.randint(rng, (3, 6), 0, eng.cfg.vocab_size)}
+    np.testing.assert_array_equal(np.asarray(eng.generate(batch, 5)),
+                                  np.asarray(eng.generate_static(batch, 5)))
+
+
+# ---------------------------------------------------------------------------
+# eviction / slot reuse
+# ---------------------------------------------------------------------------
+def test_eos_eviction_frees_slots_for_reuse(rng, unpack_backend):
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = _ragged_requests(eng.cfg, rng, lens=(3, 6, 4, 5), budgets=(8, 8, 8, 8))
+    refs = [_static_reference(eng, r) for r in reqs]
+    # pick an eos id the first request emits mid-stream, so its slot frees
+    # early while later requests are still queued
+    eos = int(refs[0][2])
+    reqs = [dataclasses.replace(r, eos_id=eos) for r in reqs]
+    comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
+
+    for ref, comp in zip(refs, comps):
+        hits = np.nonzero(ref == eos)[0]
+        if hits.size:  # truncated at (and including) the first eos
+            expect = ref[: hits[0] + 1]
+            assert comp.finish_reason == "eos"
+        else:
+            expect = ref
+            assert comp.finish_reason == "length"
+        np.testing.assert_array_equal(np.asarray(comp.tokens), expect)
+    assert comps[0].finish_reason == "eos" and len(comps[0].tokens) <= 3
+
+    # a freed slot was reused by a later request
+    admits = [(req, slot) for _, kind, req, slot in sched.events if kind == "admit"]
+    slots_used = [s for _, s in admits]
+    assert len(admits) == len(reqs)
+    assert any(slots_used.count(s) >= 2 for s in set(slots_used))
+    # request 2 (queued behind the first wave) landed on a slot somebody
+    # else vacated
+    first_wave = {s for r, s in admits if r < 2}
+    assert admits[2][1] in first_wave
+
+
+def test_ragged_arrivals_idle_ticks(rng, unpack_backend):
+    """Admission respects arrival times: a gap with no live work shows up as
+    idle steps, and late arrivals still decode token-exactly."""
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = _ragged_requests(eng.cfg, rng, lens=(4, 5), budgets=(3, 4))
+    reqs[1] = dataclasses.replace(reqs[1], arrival=10)
+    comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
+    assert sched.stats["idle_steps"] > 0
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens),
+                                      _static_reference(eng, req))
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+def test_sampling_reproducible_across_packed_and_quantize_tree(rng, unpack_backend):
+    """Same seed -> identical sampled streams on quantize_tree and pack_tree
+    params (bit-equal logits on the unpack backend) — and across runs, and
+    regardless of slot count (streams are keyed by request, not slot)."""
+    e_q, e_p = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_q.cfg, rng)
+    kw = dict(temperature=0.7, top_k=5, seed=123)
+    out_q = [c.tokens for c in e_q.serve(reqs, n_slots=2, **kw)]
+    out_p = [c.tokens for c in e_p.serve(reqs, n_slots=2, **kw)]
+    assert out_q == out_p
+    assert out_q == [c.tokens for c in e_q.serve(reqs, n_slots=2, **kw)]
+    assert out_q == [c.tokens for c in e_q.serve(reqs, n_slots=3, **kw)]
+
+
+# ---------------------------------------------------------------------------
+# decode-stack unit properties
+# ---------------------------------------------------------------------------
+def test_vector_pos_matches_scalar_pos(rng, unpack_backend):
+    """decode_lm with a uniform (B,) position vector is bit-identical to the
+    scalar-pos path (same math, per-row cache scatter)."""
+    eng = _engines("internlm2-1.8b")[0]
+    cfg = eng.cfg
+    B, T = 2, 6
+    batch = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
+    _, caches = prefill_lm(eng.params, batch, cfg, max_len=MAX_LEN,
+                           compute_dtype=jnp.float32)
+    tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
+    l_s, c_s = decode_lm(eng.params, caches, tok, jnp.int32(T), cfg,
+                         compute_dtype=jnp.float32)
+    l_v, c_v = decode_lm(eng.params, caches, tok, jnp.full((B,), T, jnp.int32),
+                         cfg, compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_v))
+    for a, b in zip(jax.tree_util.tree_leaves(c_s), jax.tree_util.tree_leaves(c_v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_active_mask_freezes_evicted_rows(rng, unpack_backend):
+    """active=[1,0]: the inactive row's caches are bit-frozen, and the live
+    row's logits match the all-active batch (row independence)."""
+    eng = _engines("internlm2-1.8b")[0]
+    cfg = eng.cfg
+    B, T = 2, 6
+    batch = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
+    _, caches = prefill_lm(eng.params, batch, cfg, max_len=MAX_LEN,
+                           compute_dtype=jnp.float32)
+    tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
+    pos = jnp.full((B,), T, jnp.int32)
+    l_all, _ = decode_lm(eng.params, caches, tok, pos, cfg,
+                         compute_dtype=jnp.float32,
+                         active=jnp.asarray([True, True]))
+    l_one, c_one = decode_lm(eng.params, caches, tok, pos, cfg,
+                             compute_dtype=jnp.float32,
+                             active=jnp.asarray([True, False]))
+    np.testing.assert_array_equal(np.asarray(l_all[0]), np.asarray(l_one[0]))
+    from repro.models.lm import scan_groups
+
+    for g in scan_groups(cfg):  # batch axis: 1 for scan-stacked groups
+        axis = 1 if g.stacked else 0
+        row = lambda leaf: np.asarray(jnp.take(leaf, jnp.asarray([1]), axis=axis))
+        for old, new in zip(jax.tree_util.tree_leaves(caches[g.name]),
+                            jax.tree_util.tree_leaves(c_one[g.name])):
+            np.testing.assert_array_equal(row(old), row(new))
