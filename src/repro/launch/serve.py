@@ -17,11 +17,13 @@ Reports resident weight bytes vs float and the token agreement with BOTH
 the float and the quantize_tree engines (the latter must be 100% exact).
 
 ``--continuous`` drives a synthetic ragged-arrival workload through the
-continuous-batching scheduler (DESIGN.md §5): ``--requests`` prompts with
-random lengths/budgets arriving over time, scheduled onto ``--slots``
-ragged decode rows with EOS-free early exit at each budget, and compares
-useful-token throughput against the static uniform loop that runs every
-batch to its slowest member.
+continuous-batching scheduler on its paged KV block pool (DESIGN.md §5-6):
+``--requests`` prompts with random lengths/budgets arriving over time,
+scheduled onto ``--slots`` ragged decode rows with EOS-free early exit at
+each budget, and compares useful-token throughput against the static
+uniform loop that runs every batch to its slowest member.  Reports pool
+occupancy (peak slots/blocks, preemptions, admission traces) and
+per-request latency percentiles (queue, ttft, tokens/step).
 """
 from __future__ import annotations
 
@@ -37,7 +39,7 @@ from repro import core
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, get_config, get_reduced
 from repro.models.lm import init_lm
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, latency_stats
 
 
 def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
@@ -81,6 +83,16 @@ def run_continuous(eng: ServeEngine, reqs, *, slots: int,
           f"{sched.stats['decode_steps']} ragged decode steps "
           f"(+{sched.stats['idle_steps']} idle) vs {static_steps} static; "
           f"reasons={ {c.finish_reason for c in comps} }")
+    print(f"  paged pool: peak {sched.stats['peak_live_slots']} live slots, "
+          f"peak {sched.pool.peak_live}/{sched.pool.n_blocks} blocks of "
+          f"{sched.pool.block_size}, {sched.stats['preemptions']} preemptions, "
+          f"{sched.stats['admission_traces']} admission traces")
+    lat = latency_stats(comps)
+    if lat:
+        q, t, tp = lat["queue_steps"], lat["ttft_steps"], lat["tokens_per_step"]
+        print(f"  latency (decode-step units): queue p50={q['p50']:.1f} "
+              f"p99={q['p99']:.1f}; ttft p50={t['p50']:.1f} p99={t['p99']:.1f}; "
+              f"tokens/step p50={tp['p50']:.2f} p99={tp['p99']:.2f}")
 
 
 def main() -> None:

@@ -212,15 +212,54 @@ def cache_update_rows(cache_leaf, new, pos, *, per_row: bool, axis: int = 1):
     )(cache_leaf, new, pos)
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache: a (n_blocks, block, ...) pool shared by every slot, resolved
+# through per-slot block tables (DESIGN.md §6).  Block 0 is a reserved trash
+# block: evicted slots' tables are zeroed host-side, so their per-step writes
+# land in trash instead of needing a revert pass over the pool.
+# ---------------------------------------------------------------------------
+def paged_token_index(block_tables, pos, block: int):
+    """Flat pool index of each row's write position.
+
+    block_tables (B, max_blocks) physical block ids; pos (B,) int32 logical
+    positions.  Returns (B,) indices into the (n_blocks*block, ...) flat pool."""
+    b = jnp.arange(pos.shape[0], dtype=jnp.int32)
+    return block_tables[b, pos // block] * block + pos % block
+
+
+def paged_update(pool, new, idx):
+    """Scatter one decode step into the pool.  pool (n_blocks, block, ...);
+    new (B, ...) one entry per row; idx (B,) flat token indices (rows own
+    disjoint blocks, so only trash indices may collide — garbage either way)."""
+    nb, block = pool.shape[:2]
+    flat = pool.reshape((nb * block,) + pool.shape[2:])
+    flat = flat.at[idx].set(cache_write(new, pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def paged_gather(pool, block_tables):
+    """Per-row logical cache view: (B, max_blocks*block, ...).  Entries whose
+    table slot is trash (or beyond the row's position) are garbage — callers
+    must mask them with kv_pos <= pos, exactly like the dense tail."""
+    nb, block = pool.shape[:2]
+    flat = pool.reshape((nb * block,) + pool.shape[2:])
+    idx = block_tables[:, :, None] * block + jnp.arange(block, dtype=jnp.int32)[None, None, :]
+    return flat[idx.reshape(block_tables.shape[0], -1)]
+
+
 def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=10000.0,
                 compute_dtype=jnp.bfloat16,
-                kv: Optional[Tuple[jax.Array, jax.Array]] = None):
+                kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                block_tables: Optional[jax.Array] = None):
     """Single-token decode.  x (B,1,D); ``pos`` scalar int32 (uniform batch)
     or (B,) int32 (per-request positions — continuous batching).
 
     Self-attn: writes each row's new k/v at its own ``pos`` and attends to
     cache[0..pos] per row.  Cross-attn (``kv`` given): attends to the fixed
-    encoder context.
+    encoder context.  ``block_tables`` (B, max_blocks) switches the cache to
+    the paged layout: ``cache`` leaves are (n_blocks, block, ...) pools, row
+    b resolves pos[b] through its table row (scatter the new entry, gather
+    its logical view) — requires a (B,) ``pos``.
     """
     B, T, D = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -237,11 +276,22 @@ def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=100
         if cfg.rope:
             q = apply_rope(q, positions, rope_base)
             k_new = apply_rope(k_new, positions, rope_base)
-        cache = {
-            "k": cache_update_rows(cache["k"], k_new, pos, per_row=per_row),
-            "v": cache_update_rows(cache["v"], v_new, pos, per_row=per_row),
-        }
-        k, v = cache_read(cache["k"], compute_dtype), cache_read(cache["v"], compute_dtype)
+        if block_tables is not None:
+            if not per_row:
+                raise ValueError("paged decode requires per-row (B,) positions")
+            idx = paged_token_index(block_tables, positions[:, 0], cache["k"].shape[1])
+            cache = {
+                "k": paged_update(cache["k"], k_new[:, 0], idx),
+                "v": paged_update(cache["v"], v_new[:, 0], idx),
+            }
+            k = cache_read(paged_gather(cache["k"], block_tables), compute_dtype)
+            v = cache_read(paged_gather(cache["v"], block_tables), compute_dtype)
+        else:
+            cache = {
+                "k": cache_update_rows(cache["k"], k_new, pos, per_row=per_row),
+                "v": cache_update_rows(cache["v"], v_new, pos, per_row=per_row),
+            }
+            k, v = cache_read(cache["k"], compute_dtype), cache_read(cache["v"], compute_dtype)
         S = k.shape[1]
         kv_pos = jnp.arange(S, dtype=jnp.int32)
         mask = make_mask(positions, kv_pos[None, :], causal=True, window=window)
@@ -333,12 +383,14 @@ def mla_init_cache(batch: int, max_len: int, cfg: MLAConfig, dtype=jnp.bfloat16)
 
 
 def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
-               compute_dtype=jnp.bfloat16):
+               compute_dtype=jnp.bfloat16,
+               block_tables: Optional[jax.Array] = None):
     """Absorbed decode: attention runs in the compressed kv_lora space.
 
     q_eff = q_nope @ kv_b_k   (per-head, rank-space query)
     logits = q_eff·c_kv + q_rope·k_rope ;  out = (probs·c_kv) @ kv_b_v
     Per-step FLOPs O(H·r·S) instead of O(H·(n+v)·r·S) re-expansion.
+    ``block_tables``: paged c_kv/k_rope pools, same contract as attn_decode.
     """
     B, T, D = x.shape
     H, r = cfg.n_heads, cfg.kv_lora_rank
@@ -355,11 +407,22 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
     c_new = rmsnorm_apply(p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype))
     kr_new = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]
     kr_new = apply_rope(kr_new, positions, rope_base)[..., 0, :]
-    cache = {
-        "c_kv": cache_update_rows(cache["c_kv"], c_new, pos, per_row=per_row),
-        "k_rope": cache_update_rows(cache["k_rope"], kr_new, pos, per_row=per_row),
-    }
-    c_kv, k_rope = cache_read(cache["c_kv"], compute_dtype), cache_read(cache["k_rope"], compute_dtype)
+    if block_tables is not None:
+        if not per_row:
+            raise ValueError("paged decode requires per-row (B,) positions")
+        idx = paged_token_index(block_tables, positions[:, 0], cache["c_kv"].shape[1])
+        cache = {
+            "c_kv": paged_update(cache["c_kv"], c_new[:, 0], idx),
+            "k_rope": paged_update(cache["k_rope"], kr_new[:, 0], idx),
+        }
+        c_kv = cache_read(paged_gather(cache["c_kv"], block_tables), compute_dtype)
+        k_rope = cache_read(paged_gather(cache["k_rope"], block_tables), compute_dtype)
+    else:
+        cache = {
+            "c_kv": cache_update_rows(cache["c_kv"], c_new, pos, per_row=per_row),
+            "k_rope": cache_update_rows(cache["k_rope"], kr_new, pos, per_row=per_row),
+        }
+        c_kv, k_rope = cache_read(cache["c_kv"], compute_dtype), cache_read(cache["k_rope"], compute_dtype)
     S = c_kv.shape[1]
     kv_pos = jnp.arange(S, dtype=jnp.int32)
     mask = (kv_pos[None, :] <= positions)[:, None, None, :]  # (B,1,1,S)

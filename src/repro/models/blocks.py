@@ -205,21 +205,30 @@ def block_apply(
     compute_dtype=jnp.bfloat16,
     enc_out: Optional[jax.Array] = None,
     cache_len: int = 0,
+    seq_len=None,
 ) -> Tuple[jax.Array, Dict, Any]:
     """Returns (x, aux, cache).  ``cache_len``>0 pads/records the layer cache
-    (prefill); otherwise cache is None-shaped zeros to keep scan uniform."""
+    (prefill); otherwise cache is None-shaped zeros to keep scan uniform.
+
+    ``seq_len`` (traced scalar): bucketed-prefill valid length — positions
+    >= seq_len are padding.  Causal attention already isolates real
+    positions from a right-padded tail, so only the couplings that are not
+    per-token causal consume it: MoE capacity dispatch, and the recurrent /
+    SSD state+conv caches."""
     aux = zero_aux()
     cache = None
     B, T, _ = x.shape
 
     if kind == "M":
         h = _norm_apply(cfg, p["pre_norm"], x)
-        y, cache = ssd_block_apply(p["ssd"], h, cfg=_ssd_cfg(cfg), compute_dtype=compute_dtype)
+        y, cache = ssd_block_apply(p["ssd"], h, cfg=_ssd_cfg(cfg), compute_dtype=compute_dtype,
+                                   seq_len=seq_len)
         return x + _tag(y, "block_out"), aux, cache
 
     if kind == "R":
         h = _norm_apply(cfg, p["pre_norm"], x)
-        y, cache = rglru_block_apply(p["rglru"], h, cfg=_rglru_cfg(cfg), compute_dtype=compute_dtype)
+        y, cache = rglru_block_apply(p["rglru"], h, cfg=_rglru_cfg(cfg),
+                                     compute_dtype=compute_dtype, seq_len=seq_len)
         x = x + _tag(y, "block_out")
     else:
         h = _norm_apply(cfg, p["pre_norm"], x)
@@ -255,12 +264,19 @@ def block_apply(
     h = _norm_apply(cfg, p["pre_mlp_norm"], x)
     if kind == "E":
         if cfg.moe_impl == "ep":
+            if seq_len is not None:
+                # the shard_map EP dispatch has no padded-token masking yet:
+                # bucket padding would compete for expert capacity and
+                # silently break serve()==generate_static — refuse loudly
+                raise NotImplementedError(
+                    "bucketed prefill (seq_len) is not supported with moe_impl='ep'")
             from repro.models.moe_ep import moe_apply_ep
 
             y, aux = moe_apply_ep(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype,
                                   ep_axes=tuple(cfg.ep_axes))
         else:
-            y, aux = moe_apply(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype)
+            y, aux = moe_apply(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype,
+                               seq_len=seq_len)
     else:
         y = mlp_apply(p["mlp"], h, cfg=_mlp_cfg(cfg), compute_dtype=compute_dtype)
     y = _barrier(_tag(y, "block_out"))
@@ -366,7 +382,12 @@ def block_decode(
     compute_dtype=jnp.bfloat16,
     enc_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
     dropless_moe: bool = False,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Any]:
+    """``block_tables`` (B, max_blocks): paged-cache decode — attention and
+    MLA caches arrive as (n_blocks, block, ...) pools resolved per row.  The
+    recurrent/SSD states and the ring-buffer layout are O(1) per slot and
+    keep their resident per-row layouts regardless (DESIGN.md §6)."""
     if kind == "M":
         h = _norm_apply(cfg, p["pre_norm"], x)
         y, cache = ssd_block_decode(p["ssd"], h, cache, cfg=_ssd_cfg(cfg), compute_dtype=compute_dtype)
@@ -380,13 +401,15 @@ def block_decode(
         h = _norm_apply(cfg, p["pre_norm"], x)
         if cfg.use_mla:
             y, cache = mla_decode(p["attn"], h, cache, pos, cfg=_mla_cfg(cfg),
-                                  rope_base=rope_base, compute_dtype=compute_dtype)
+                                  rope_base=rope_base, compute_dtype=compute_dtype,
+                                  block_tables=block_tables)
         elif "kv_pos" in cache:
             y, cache = _attn_decode_ring(p["attn"], h, cache, pos, cfg=cfg,
                                          rope_base=rope_base, compute_dtype=compute_dtype)
         else:
             y, cache = attn_decode(p["attn"], h, cache, pos, cfg=_attn_cfg(cfg), window=window,
-                                   rope_base=rope_base, compute_dtype=compute_dtype)
+                                   rope_base=rope_base, compute_dtype=compute_dtype,
+                                   block_tables=block_tables)
         if cfg.post_norm:
             y = _norm_apply(cfg, p["post_attn_norm"], y)
         x = x + y

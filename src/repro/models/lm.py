@@ -41,6 +41,15 @@ from repro.models.layers import (
 )
 
 
+# Cache leaves that live in the paged block pool when the serving scheduler
+# provides block tables: the per-token attention streams (standard k/v and
+# MLA's compressed kv).  Everything else — recurrent h / conv windows, SSD
+# state, ring-buffer occupancy maps, encdec cross k/v — is O(1) or fixed-size
+# per slot and stays resident at its per-row layout (DESIGN.md §6).
+PAGED_CACHE_LEAVES = frozenset({"k", "v", "c_kv", "k_rope"})
+_PAGED_KINDS = frozenset({"A", "D", "E"})
+
+
 @dataclasses.dataclass(frozen=True)
 class GroupSpec:
     name: str
@@ -51,6 +60,16 @@ class GroupSpec:
     @property
     def stacked(self) -> bool:
         return self.count > 1
+
+    @property
+    def paged(self) -> Tuple[bool, ...]:
+        """Per-unit-position flag: does this sub-block's cache page?  A
+        per-group property rather than scheduler-side special-casing, so the
+        pool builder and the decode path can never disagree.  True for the
+        attention kinds (their caches grow one entry per token); recurrent
+        ('R') and SSD ('M') states are already O(1) per slot and keep their
+        fixed-size resident layouts behind the same interface."""
+        return tuple(k in _PAGED_KINDS for k in self.unit)
 
 
 def scan_groups(cfg: ModelConfig) -> List[GroupSpec]:
@@ -171,7 +190,7 @@ def _constrain(x, pspec):
 
 def _apply_group(gp, x, spec: GroupSpec, cfg: ModelConfig, *, positions, causal,
                  prefix_len, compute_dtype, enc_out=None, cache_len=0,
-                 act_pspec=None):
+                 act_pspec=None, seq_len=None):
     win, rb = _per_layer_arrays(cfg, spec)
 
     def unit_apply(p_u, x, win_u, rb_u):
@@ -182,7 +201,7 @@ def _apply_group(gp, x, spec: GroupSpec, cfg: ModelConfig, *, positions, causal,
                 p_u[f"sub{j}"], x, cfg=cfg, kind=kind, positions=positions,
                 window=win_u[j], rope_base=rb_u[j], prefix_len=prefix_len,
                 causal=causal, compute_dtype=compute_dtype, enc_out=enc_out,
-                cache_len=cache_len,
+                cache_len=cache_len, seq_len=seq_len,
             )
             x = _constrain(x, act_pspec)
             aux_tot = jax.tree_util.tree_map(jnp.add, aux_tot, aux)
@@ -249,7 +268,13 @@ def _run_encoder(params, cfg: ModelConfig, frames, compute_dtype):
 # ---------------------------------------------------------------------------
 def forward_lm(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
                compute_dtype=jnp.bfloat16, prefill_len: int = 0,
-               last_only: bool = False, act_pspec=None) -> ForwardOut:
+               last_only: bool = False, act_pspec=None, seq_len=None) -> ForwardOut:
+    """``seq_len`` (traced int32 scalar, serving admission): tokens beyond
+    seq_len are bucket padding.  Causal attention keeps real positions exact
+    under right-padding; seq_len additionally masks the non-causal couplings
+    (MoE capacity, recurrent/SSD cache extraction) and redirects the
+    ``last_only`` gather to the last REAL position — one compiled trace
+    serves every prompt length in a power-of-two bucket."""
     tokens = batch["tokens"]
     B, T = tokens.shape
     enc_out = None
@@ -271,12 +296,15 @@ def forward_lm(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
 
     aux = zero_aux()
     caches: Dict[str, Any] = {}
+    # block-level valid length counts the vlm prefix (always real) too
+    group_seq_len = None if seq_len is None else seq_len + prefix_len
     for g in scan_groups(cfg):
         x = _constrain(x, act_pspec)
         x, a, c = _apply_group(params[g.name], x, g, cfg, positions=positions,
                                causal=True, prefix_len=prefix_len,
                                compute_dtype=compute_dtype, enc_out=enc_out,
-                               cache_len=prefill_len, act_pspec=act_pspec)
+                               cache_len=prefill_len, act_pspec=act_pspec,
+                               seq_len=group_seq_len)
         aux = jax.tree_util.tree_map(jnp.add, aux, a)
         if prefill_len:
             caches[g.name] = c
@@ -284,7 +312,12 @@ def forward_lm(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
     if cfg.family == "vlm":
         x = x[:, prefix_len:]
     if last_only:
-        x = x[:, -1:]  # serving prefill: never materialize (B,T,V) logits
+        # serving prefill: never materialize (B,T,V) logits — and under
+        # bucketing the sampling input is the last REAL position, not -1
+        if seq_len is None:
+            x = x[:, -1:]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(x, seq_len - 1, 1, axis=1)
     logits, hidden = _head(params, cfg, x)
     return ForwardOut(logits=logits, aux=aux, caches=(caches if prefill_len else None), hidden=hidden)
 
@@ -329,14 +362,23 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
 
 def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
               compute_dtype=jnp.bfloat16,
-              active: Optional[jax.Array] = None) -> Tuple[jax.Array, Any]:
+              active: Optional[jax.Array] = None,
+              block_tables: Optional[jax.Array] = None) -> Tuple[jax.Array, Any]:
     """One decode step.  tokens (B,1); pos scalar int32 (uniform batch) or
     (B,) int32 (per-request positions — the continuous-batching contract:
     row b's token is written into its caches at pos[b] and attends to its
     own prefix only).  ``active`` (B,) bool marks live slots: inactive rows
-    are zeroed at the embedding and ALL their cache writes are reverted, so
-    an evicted slot is numerically frozen until a new request is admitted.
-    Returns (logits (B,1,V), updated caches)."""
+    are zeroed at the embedding and ALL their resident cache writes are
+    reverted, so an evicted slot is numerically frozen until a new request
+    is admitted.
+
+    ``block_tables`` (B, max_blocks) int32 switches the attention-family
+    caches (GroupSpec.paged) to the paged block-pool layout: those leaves
+    arrive as (n_blocks, block, ...) pools (one more leading layer axis when
+    scan-stacked) and row b resolves pos[b] through its table row.  Paged
+    leaves need no active-gating: the scheduler zeroes an evicted row's
+    table, redirecting its writes into the reserved trash block while its
+    freed blocks return to the pool.  Returns (logits (B,1,V), caches)."""
     B = tokens.shape[0]
     # keep `pos` in its caller's rank: scalar keeps the cheap uniform-batch
     # cache writes (single dynamic_update_slice), a vector takes the
@@ -378,13 +420,21 @@ def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
                 enc_kv = None
                 if "cross_k" in cache_j:
                     enc_kv = (cache_j.pop("cross_k"), cache_j.pop("cross_v"))
+                # ring layouts keep their (B, W) resident form even when the
+                # scheduler pages the full-length attention caches
+                paged_j = (block_tables is not None and g.paged[j]
+                           and "kv_pos" not in cache_j)
                 old_j = dict(cache_j)
                 x, cache_j = block_decode(
                     p_u[f"sub{j}"], x, cache_j, pos, cfg=cfg, kind=kind,
                     window=win_u[j], rope_base=rb_u[j], compute_dtype=compute_dtype,
                     enc_kv=enc_kv, dropless_moe=active is not None,
+                    block_tables=block_tables if paged_j else None,
                 )
-                cache_j = _gate_cache(cache_j, old_j)
+                if not paged_j:
+                    # paged pools are not batch-leading; eviction reverts via
+                    # the zeroed table row (trash block) instead
+                    cache_j = _gate_cache(cache_j, old_j)
                 if enc_kv is not None:
                     cache_j = dict(cache_j)
                     cache_j["cross_k"], cache_j["cross_v"] = enc_kv
@@ -408,14 +458,17 @@ def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
 
 def prefill_lm(params, batch, cfg: ModelConfig, *, max_len: int,
                compute_dtype=jnp.bfloat16, act_pspec=None,
-               last_only: bool = True) -> Tuple[jax.Array, Any]:
+               last_only: bool = True, seq_len=None) -> Tuple[jax.Array, Any]:
     """Process the prompt; returns (last-position logits, caches to max_len).
 
     ``last_only=False`` keeps the full (B, T, V) logits (teacher-forced
-    scoring of whole prompts); serving paths leave it True — prompts are
-    fed at exact length, so the last position is the sampling input."""
+    scoring of whole prompts); serving paths leave it True.  Without
+    ``seq_len`` prompts are fed at exact length and the last position is the
+    sampling input; with it (bucketed admission) the prompt is padded and
+    seq_len marks the real length per forward_lm's contract."""
     out = forward_lm(params, batch, cfg, compute_dtype=compute_dtype,
-                     prefill_len=max_len, last_only=last_only, act_pspec=act_pspec)
+                     prefill_len=max_len, last_only=last_only, act_pspec=act_pspec,
+                     seq_len=seq_len)
     caches = out.caches
     if cfg.family == "encdec":
         # compute cross k/v per decoder layer from the encoder output

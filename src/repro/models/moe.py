@@ -88,9 +88,18 @@ def _route(p, x_flat, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array, jax.Array, 
 
 
 def moe_apply(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
-              capacity: int = 0) -> Tuple[jax.Array, Dict]:
+              capacity: int = 0, seq_len=None) -> Tuple[jax.Array, Dict]:
     """x (B,T,D) -> (B,T,D).  ``capacity`` overrides the computed per-expert
-    buffer (decode paths pass a fixed small capacity for shape stability)."""
+    buffer (decode paths pass a fixed small capacity for shape stability).
+
+    ``seq_len`` (traced scalar): bucketed-prefill contract — only the first
+    ``seq_len`` positions of each row are real.  Padded tokens are excluded
+    from dispatch (zero one-hot, so they never occupy capacity and never
+    shift a real token's buffer slot) and the capacity DROP test uses the
+    real token count, while the buffer stays padded-size for shape
+    stability.  Real tokens therefore route bit-identically to an
+    exact-length trace — the invariant bucketed admission needs to stay
+    token-exact vs `generate_static` (which prefills at exact length)."""
     B, T, D = x.shape
     N, k, E = B * T, cfg.top_k, cfg.n_experts
     x_flat = x.reshape(N, D)
@@ -103,9 +112,22 @@ def moe_apply(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
     token_ids = jnp.tile(jnp.arange(N, dtype=jnp.int32), (k,))
     g_flat = gates.T.reshape(-1).astype(jnp.float32)
     onehot = jax.nn.one_hot(e_ids, E, dtype=jnp.int32)  # (kN, E)
+    if seq_len is not None:
+        valid = (jnp.arange(T, dtype=jnp.int32)[None, :] < seq_len)  # (1,T)
+        valid = jnp.broadcast_to(valid, (B, T)).reshape(N)
+        onehot = onehot * valid[token_ids][:, None]
+        # same formula the exact-length trace evaluates statically; f32 vs
+        # f64 rounding only matters if cf·N·k/E lands exactly on an integer
+        # boundary, which the ×1.25-style factors never do at serving scale
+        c_drop = jnp.maximum(
+            1, jnp.ceil(cfg.capacity_factor * (B * seq_len * k).astype(jnp.float32) / E)
+        ).astype(jnp.int32)
     pos_all = jnp.cumsum(onehot, axis=0) - 1
     pos = jnp.take_along_axis(pos_all, e_ids[:, None], axis=1)[:, 0]  # (kN,)
-    keep = (pos < C).astype(compute_dtype)
+    if seq_len is not None:
+        keep = ((pos < jnp.minimum(c_drop, C)) & valid[token_ids]).astype(compute_dtype)
+    else:
+        keep = (pos < C).astype(compute_dtype)
     pos_c = jnp.minimum(pos, C - 1)
 
     xb = x_flat.astype(compute_dtype)

@@ -74,9 +74,12 @@ def _block_diag_gate(gp, x, H: int, compute_dtype):
     return jax.nn.sigmoid(y.astype(jnp.float32)).reshape(B, T, R)
 
 
-def _conv_causal(kernel, x, state=None):
+def _conv_causal(kernel, x, state=None, seq_len=None):
     """Depthwise causal conv, width W. x (B,T,R); state (B,W-1,R) or None.
-    Returns (y, new_state)."""
+    Returns (y, new_state).  ``seq_len`` (traced scalar): only the first
+    seq_len positions are real (bucketed prefill) — the carried state is then
+    the window ending at seq_len, not at T.  The conv itself is causal, so
+    real outputs never see the padded tail either way."""
     W = kernel.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
@@ -87,7 +90,13 @@ def _conv_causal(kernel, x, state=None):
         xp[:, i : i + x.shape[1], :] * kernel[W - 1 - i].astype(x.dtype)
         for i in range(W)
     )
-    new_state = xp[:, -(W - 1) :, :] if W > 1 else pad
+    if W <= 1:
+        new_state = pad
+    elif seq_len is None:
+        new_state = xp[:, -(W - 1) :, :]
+    else:
+        # inputs seq_len-W+1 .. seq_len-1 == xp[:, seq_len : seq_len+W-1]
+        new_state = jax.lax.dynamic_slice_in_dim(xp, seq_len, W - 1, axis=1)
     return y, new_state
 
 
@@ -102,13 +111,23 @@ def _gates(p, xc, H, compute_dtype):
 
 
 def rglru_block_apply(p, x, *, cfg: RGLRUConfig, compute_dtype=jnp.bfloat16,
-                      h0=None, conv_state=None) -> Tuple[jax.Array, Dict]:
-    """Full-sequence recurrent block.  Returns (y, final_cache)."""
+                      h0=None, conv_state=None, seq_len=None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence recurrent block.  Returns (y, final_cache).
+
+    ``seq_len`` (traced scalar, bucketed prefill): positions >= seq_len are
+    padding.  They become identity recurrence steps (a=1, input 0), so the
+    carried ``h`` is exactly the state after the seq_len-th real token, and
+    the conv window is sliced at seq_len — the cache matches an exact-length
+    prefill bit for bit."""
     B, T, D = x.shape
     xb = dense_apply(p["in_proj_x"], x, compute_dtype=compute_dtype)
     yb = jax.nn.gelu(dense_apply(p["in_proj_y"], x, compute_dtype=compute_dtype))
-    xc, new_conv = _conv_causal(as_dense(p["conv1d"]["kernel"]), xb, conv_state)
+    xc, new_conv = _conv_causal(as_dense(p["conv1d"]["kernel"]), xb, conv_state, seq_len=seq_len)
     a, gated_x = _gates(p, xc, cfg.n_heads, compute_dtype)
+    if seq_len is not None:
+        valid = (jnp.arange(T, dtype=jnp.int32) < seq_len)[None, :, None]
+        a = jnp.where(valid, a, 1.0)
+        gated_x = jnp.where(valid, gated_x, 0.0)
 
     if h0 is not None:
         # fold the carried state in as a virtual step: b_0 = h0, a_0 = 1

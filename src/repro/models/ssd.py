@@ -62,7 +62,7 @@ def ssd_init(key, cfg: SSDConfig, dtype=jnp.float32):
     }
 
 
-def _in_projections(p, u, cfg: SSDConfig, compute_dtype, conv_state=None):
+def _in_projections(p, u, cfg: SSDConfig, compute_dtype, conv_state=None, seq_len=None):
     """Shared by full/decode: projections + causal conv over (x,B,C)."""
     z = dense_apply(p["in_proj_z"], u, compute_dtype=compute_dtype)
     x = dense_apply(p["in_proj_x"], u, compute_dtype=compute_dtype)
@@ -70,10 +70,16 @@ def _in_projections(p, u, cfg: SSDConfig, compute_dtype, conv_state=None):
     Cm = dense_apply(p["in_proj_C"], u, compute_dtype=compute_dtype)
     dt_raw = dense_apply(p["in_proj_dt"], u, compute_dtype=compute_dtype)
     xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
-    xbc, new_conv = _conv_causal(as_dense(p["conv1d"]["kernel"]), jax.nn.silu(xbc), conv_state)
+    xbc, new_conv = _conv_causal(as_dense(p["conv1d"]["kernel"]), jax.nn.silu(xbc), conv_state,
+                                 seq_len=seq_len)
     R, N = cfg.d_inner, cfg.d_state
     x, Bm, Cm = xbc[..., :R], xbc[..., R : R + N], xbc[..., R + N :]
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    if seq_len is not None:
+        # padded steps get dt=0: decay exp(0)=1 and zero input — identity
+        # state updates, same trick the chunk padding below relies on
+        valid = (jnp.arange(u.shape[1], dtype=jnp.int32) < seq_len)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
     return z, x, Bm, Cm, dt, new_conv
 
 
@@ -126,12 +132,17 @@ def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk: int):
 
 
 def ssd_block_apply(p, u, *, cfg: SSDConfig, compute_dtype=jnp.bfloat16,
-                    conv_state=None, h0=None) -> Tuple[jax.Array, Dict]:
-    """Full-sequence mamba2 block. u (B,T,D) -> (y (B,T,D), cache)."""
+                    conv_state=None, h0=None, seq_len=None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence mamba2 block. u (B,T,D) -> (y (B,T,D), cache).
+
+    ``seq_len`` (traced scalar, bucketed prefill): positions >= seq_len are
+    padding; their dt is zeroed (identity state update) and the conv window
+    is sliced at seq_len, so the cache equals an exact-length prefill."""
     del h0  # full pass always starts from zero state (no context carry-over)
     B, T, D = u.shape
     H, P = cfg.n_heads, cfg.head_dim
-    z, x, Bm, Cm, dt, new_conv = _in_projections(p, u, cfg, compute_dtype, conv_state)
+    z, x, Bm, Cm, dt, new_conv = _in_projections(p, u, cfg, compute_dtype, conv_state,
+                                                 seq_len=seq_len)
     A = -jnp.exp(p["A_log"])  # (H,)
     # pad T to a chunk multiple: dt=0 ⇒ decay 1 and zero input — state exact
     Q = min(cfg.chunk, T)

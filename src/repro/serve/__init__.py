@@ -1,4 +1,13 @@
+from repro.serve.blockpool import BlockPool
 from repro.serve.engine import ServeEngine, greedy_generate
-from repro.serve.scheduler import Completion, Request, Scheduler
+from repro.serve.scheduler import Completion, Request, Scheduler, latency_stats
 
-__all__ = ["Completion", "Request", "Scheduler", "ServeEngine", "greedy_generate"]
+__all__ = [
+    "BlockPool",
+    "Completion",
+    "Request",
+    "Scheduler",
+    "ServeEngine",
+    "greedy_generate",
+    "latency_stats",
+]

@@ -1,0 +1,84 @@
+"""Fixed-size KV-cache block allocator for the paged serving scheduler.
+
+The device-resident cache pool is a ``(n_blocks, block_size, ...)`` array
+per attention cache leaf; this module owns the HOST-side bookkeeping over
+its block ids: a LIFO free list (reuse-warm blocks first), per-block
+reference counts, and all-or-nothing multi-block allocation.  Ref counts
+exist so a future prefix cache can pin one block under several requests'
+tables — today every table holds its blocks at refcount 1, and ``free``
+returns a block to the free list the moment its count reaches zero (the
+eviction path: no row freezing, the capacity comes straight back).
+
+Ids here are LOGICAL (0..n_blocks-1).  The scheduler maps them to physical
+pool rows with a +1 shift: physical row 0 is the reserved trash block that
+zeroed block-table rows (evicted slots) write into, so "free + live ==
+n_blocks" stays exact and the allocator never needs to know about trash.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class BlockPool:
+    """Free-list allocator over ``n_blocks`` token blocks of ``block_size``."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1 or block_size < 1:
+            raise ValueError(f"need n_blocks >= 1 and block_size >= 1, got {n_blocks}/{block_size}")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self._free: List[int] = list(range(self.n_blocks - 1, -1, -1))
+        self._refs: List[int] = [0] * self.n_blocks
+        self.peak_live = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """Pop ``n`` blocks at refcount 1, or None (all-or-nothing: a partial
+        grab under pressure would deadlock two growing requests)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        for bid in out:
+            self._refs[bid] = 1
+        self.peak_live = max(self.peak_live, self.n_live)
+        return out
+
+    def incref(self, bid: int) -> None:
+        """Pin a live block under one more owner (prefix-cache sharing)."""
+        if self._refs[bid] <= 0:
+            raise ValueError(f"incref on free block {bid}")
+        self._refs[bid] += 1
+
+    def free(self, bid: int) -> None:
+        """Drop one reference; the block rejoins the free list at zero."""
+        if self._refs[bid] <= 0:
+            raise ValueError(f"double free of block {bid}")
+        self._refs[bid] -= 1
+        if self._refs[bid] == 0:
+            self._free.append(bid)
+
+    def free_all(self, bids: List[int]) -> None:
+        """Return a whole block table (eviction / preemption)."""
+        for bid in bids:
+            self.free(bid)
+
+    def check(self) -> None:
+        """Invariant audit (tests): every id is exactly free or live, and the
+        free list holds no duplicates."""
+        if len(set(self._free)) != len(self._free):
+            raise AssertionError(f"free list duplicates: {sorted(self._free)}")
+        for bid in self._free:
+            if self._refs[bid] != 0:
+                raise AssertionError(f"block {bid} free with refcount {self._refs[bid]}")
+        live = sum(1 for r in self._refs if r > 0)
+        if live + len(self._free) != self.n_blocks:
+            raise AssertionError(f"leak: {live} live + {len(self._free)} free != {self.n_blocks}")

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.lm import decode_lm, prefill_lm, scan_groups
+from repro.models.lm import PAGED_CACHE_LEAVES, decode_lm, prefill_lm, scan_groups
 from repro.models.quantized import (
     get_packed_backend,
     resolve_backend,
@@ -38,6 +38,138 @@ from repro.models.quantized import (
     tree_has_packed,
 )
 from repro.nn.tree import tree_bytes
+
+
+def _scatter_blocks(pool, src, bt_row, axis, p_blocks):
+    """Write a batch-of-one prefill cache into the paged pool.
+
+    pool: (n_blocks, block, feat...) — one more leading layer axis when
+    ``axis`` is 1 (scan-stacked group).  src: the prefill leaf, batch axis of
+    size 1 at ``axis`` and a max_len length axis after it.  bt_row
+    (max_blocks,): the slot's PHYSICAL block ids; only the first
+    ``p_blocks`` (the bucket's span — a static per-trace count) are written,
+    and table entries past the allocated prefix are trash (0), so the
+    bucket's padded tail lands in the trash block instead of real capacity.
+    """
+    block = pool.shape[axis + 1]
+    src = jnp.squeeze(src, axis=axis)  # drop the batch-of-one axis
+    need = p_blocks * block
+    t = src.shape[axis]
+    if need > t:
+        pad = [(0, 0)] * src.ndim
+        pad[axis] = (0, need - t)
+        src = jnp.pad(src, pad)
+    elif need < t:
+        src = jax.lax.slice_in_dim(src, 0, need, axis=axis)
+    src = src.reshape(src.shape[:axis] + (p_blocks, block) + src.shape[axis + 1 :])
+    src = src.astype(pool.dtype)
+    ids = bt_row[:p_blocks]
+    if axis == 0:
+        return pool.at[ids].set(src)
+    return pool.at[:, ids].set(src)
+
+
+class SchedulerFns:
+    """Jitted continuous-batching traces for one (greedy, top_k) sampling
+    config.  Owned by the ENGINE (scheduler_fns memo) — serve() builds a
+    fresh Scheduler per call, and per-scheduler jit caches would recompile
+    the decode step on every request wave.
+
+    ``decode_step`` is the one shared ragged decode dispatch (paged block
+    tables resolve each row's cache).  ``admit_step(bucket, block_size)``
+    returns the fused prefill + block-scatter + first-token-sample admission
+    trace for one power-of-two prompt bucket, compiled on first use and
+    memoized: admission compiles O(log max_len) traces for a workload of
+    arbitrarily many distinct prompt lengths (``admit_compiles`` counts the
+    distinct traces built — the Scheduler surfaces it in stats).
+    """
+
+    def __init__(self, engine: "ServeEngine", *, greedy: bool, top_k: int):
+        self._eng = engine
+        cfg, cd = engine.cfg, engine.compute_dtype
+        self._groups = scan_groups(cfg)
+
+        def _sample(logits, seeds, base_key, temperature):
+            # logits (B, V) fp32; seeds (B,) int32 — stream ids keyed by
+            # (request, step) so slot placement can't change the draw
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            scaled = logits / temperature
+            if top_k > 0:
+                kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+                scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+            keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(seeds)
+            return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+
+        def _decode_step(
+            params, caches, tokens, pos, active, seed0, block_tables, base_key, temperature
+        ):
+            # tokens (S,) — the previous step's output fed straight back as a
+            # device handle; pos advances on-device (inactive rows frozen)
+            # and seeds derive as seed0 + pos, so the host uploads nothing
+            # per step beyond single-row table edits and downloads only the
+            # sampled tokens.  The cache pool is DONATED: without aliasing,
+            # XLA would copy the whole block pool every emitted token.
+            logits, caches = decode_lm(
+                params,
+                caches,
+                tokens[:, None],
+                pos,
+                cfg,
+                compute_dtype=cd,
+                active=active,
+                block_tables=block_tables,
+            )
+            nxt = _sample(logits[:, -1, :].astype(jnp.float32), seed0 + pos, base_key, temperature)
+            return nxt, pos + active.astype(jnp.int32), caches
+
+        self._sample_fn = _sample
+        self.decode_step = jax.jit(_decode_step, donate_argnums=(1,))
+        self._admits: Dict[Any, Any] = {}
+        self.admit_compiles = 0
+
+    def admit_step(self, bucket: int, block_size: int):
+        """The admission trace for one (bucket, block geometry) pair."""
+        key = (int(bucket), int(block_size))
+        if key not in self._admits:
+            self._admits[key] = jax.jit(self._build_admit(*key), donate_argnums=(3,))
+            self.admit_compiles += 1
+        return self._admits[key]
+
+    def _build_admit(self, bucket: int, block_size: int):
+        eng, groups, sample = self._eng, self._groups, self._sample_fn
+        cfg, cd = eng.cfg, eng.compute_dtype
+        offset = cfg.prefix_len if cfg.family == "vlm" else 0
+        p_blocks = -(-(offset + bucket) // block_size)
+
+        def _admit(params, batch, length, caches, bt_row, slot, seed, base_key, temperature):
+            # bucketed prefill: tokens are (1, bucket) right-padded; ``length``
+            # (traced) is the real prompt length, so one trace serves every
+            # length in the bucket, samples at the last REAL position, and
+            # writes only the bucket's blocks (padded tail -> trash block)
+            logits, one = prefill_lm(
+                params, batch, cfg, max_len=eng.max_len, compute_dtype=cd, seq_len=length
+            )
+            out = {}
+            for g in groups:
+                axis = 1 if g.stacked else 0
+                gsub = {}
+                for j in range(len(g.unit)):
+                    dst = dict(caches[g.name][f"sub{j}"])
+                    src = one[g.name][f"sub{j}"]
+                    for name, leaf in src.items():
+                        if g.paged[j] and name in PAGED_CACHE_LEAVES:
+                            dst[name] = _scatter_blocks(dst[name], leaf, bt_row, axis, p_blocks)
+                        else:
+                            dst[name] = jax.lax.dynamic_update_slice_in_dim(
+                                dst[name], leaf.astype(dst[name].dtype), slot, axis
+                            )
+                    gsub[f"sub{j}"] = dst
+                out[g.name] = gsub
+            first = sample(logits[:, -1, :].astype(jnp.float32), seed[None], base_key, temperature)
+            return first[0], out
+
+        return _admit
 
 
 @dataclasses.dataclass
@@ -65,38 +197,14 @@ class ServeEngine:
 
         self._prefill = _prefill
         self._decode = _decode
-
-        # --- scheduler support -------------------------------------------
-        # All continuous-batching traces are owned by the ENGINE, not the
-        # Scheduler: serve() builds a fresh Scheduler per call, and a trace
-        # cache per scheduler would recompile the decode step on every
-        # request wave (measured 45x slower than the static loop).
-        groups = scan_groups(cfg)
-
-        @jax.jit
-        def _insert_slot(caches, one, slot):
-            """Scatter a batch-of-one prefill's caches into a slot's rows
-            (batch axis 1 for scan-stacked layer groups, 0 otherwise)."""
-            out = dict(caches)
-            for g in groups:
-                axis = 1 if g.stacked else 0
-
-                def put(dst, src, axis=axis):
-                    return jax.lax.dynamic_update_slice_in_dim(
-                        dst, src.astype(dst.dtype), slot, axis)
-
-                out[g.name] = jax.tree_util.tree_map(put, caches[g.name], one[g.name])
-            return out
-
-        self._insert_slot = _insert_slot
-        self._sched_fns: Dict[Any, Any] = {}
+        self._sched_fns: Dict[Any, SchedulerFns] = {}
         self._cache_shapes = None
 
     def prefill_cache_shapes(self):
         """ShapeDtypeStruct tree of one request's prefill caches (lazy
-        eval_shape, no FLOPs) — the Scheduler widens the batch axis to its
-        slot count.  Memoized: tracing the prefill per serve() call would
-        dominate short workloads."""
+        eval_shape, no FLOPs) — the Scheduler derives the paged pool and
+        resident slot-table layouts from it.  Memoized: tracing the prefill
+        per serve() call would dominate short workloads."""
         if self._cache_shapes is None:
             cfg = self.cfg
             dummy = {"tokens": jnp.zeros((1, 1), jnp.int32)}
@@ -107,61 +215,14 @@ class ServeEngine:
             _, self._cache_shapes = jax.eval_shape(self._prefill, self.params, dummy)
         return self._cache_shapes
 
-    def scheduler_fns(self, *, greedy: bool, top_k: int):
-        """(decode_step, admit_step, sample) jit triple for the continuous-
-        batching loop, memoized per (greedy, top_k) — the only sampling
-        knobs that change the trace; temperature and the PRNG key are
-        traced arguments.  The cache pool is DONATED through decode and
-        admit steps: without aliasing, XLA would copy the whole slot-table
-        KV pool every emitted token.
-
-        ``admit_step`` fuses prefill + cache slot-scatter + first-token
-        sampling into ONE dispatch (admission cost is what decides whether
-        continuous batching beats the static loop on short requests)."""
+    def scheduler_fns(self, *, greedy: bool, top_k: int) -> SchedulerFns:
+        """Memoized SchedulerFns per (greedy, top_k) — the only sampling
+        knobs that change a trace; temperature and the PRNG key are traced
+        arguments."""
         key = (bool(greedy), int(top_k))
-        if key in self._sched_fns:
-            return self._sched_fns[key]
-        cfg, cd = self.cfg, self.compute_dtype
-
-        def _sample(logits, seeds, base_key, temperature):
-            # logits (B, V) fp32; seeds (B,) int32 — stream ids keyed by
-            # (request, step) so slot placement can't change the draw
-            if greedy:
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            scaled = logits / temperature
-            if top_k > 0:
-                kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
-                scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-            keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(seeds)
-            return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
-
-        def _decode_step(params, caches, tokens, pos, active, seed0, base_key,
-                         temperature):
-            # tokens (S,) — the previous step's output fed straight back as a
-            # device handle; pos advances on-device (inactive rows frozen)
-            # and seeds derive as seed0 + pos, so the host uploads nothing
-            # per step and downloads only the sampled tokens.
-            logits, caches = decode_lm(params, caches, tokens[:, None], pos, cfg,
-                                       compute_dtype=cd, active=active)
-            nxt = _sample(logits[:, -1, :].astype(jnp.float32), seed0 + pos,
-                          base_key, temperature)
-            return nxt, pos + active.astype(jnp.int32), caches
-
-        def _admit_step(params, batch, caches, slot, seed, base_key, temperature):
-            # last_only prefill: prompts are exact-length (never padded), so
-            # the (B, 1, V) last-position logits ARE the sampling input — no
-            # full (T, V) vocab projection per admission
-            logits, one = self._prefill(params, batch)
-            caches = self._insert_slot(caches, one, slot)
-            first = _sample(logits[:, -1, :].astype(jnp.float32), seed[None],
-                            base_key, temperature)
-            return first[0], caches
-
-        fns = (jax.jit(_decode_step, donate_argnums=(1,)),
-               jax.jit(_admit_step, donate_argnums=(2,)),
-               jax.jit(_sample))
-        self._sched_fns[key] = fns
-        return fns
+        if key not in self._sched_fns:
+            self._sched_fns[key] = SchedulerFns(self, greedy=greedy, top_k=top_k)
+        return self._sched_fns[key]
 
     def _with_backend(self, fn, *args):
         prev = get_packed_backend()
@@ -172,13 +233,21 @@ class ServeEngine:
             set_packed_backend(prev)
 
     @classmethod
-    def from_symog(cls, cfg: ModelConfig, params, symog_state, symog_cfg, *,
-                   max_len: int, compute_dtype=jnp.bfloat16) -> "ServeEngine":
+    def from_symog(
+        cls,
+        cfg: ModelConfig,
+        params,
+        symog_state,
+        symog_cfg,
+        *,
+        max_len: int,
+        compute_dtype=jnp.bfloat16,
+    ) -> "ServeEngine":
         """Pack a SYMOG-trained float tree and serve the Packed artifact."""
         from repro.core.symog import pack_tree
 
-        return cls(cfg, pack_tree(params, symog_state, symog_cfg),
-                   max_len=max_len, compute_dtype=compute_dtype)
+        tree = pack_tree(params, symog_state, symog_cfg)
+        return cls(cfg, tree, max_len=max_len, compute_dtype=compute_dtype)
 
     def weight_bytes(self) -> int:
         """Resident param bytes (Packed leaves count their int8 words — the
@@ -191,20 +260,38 @@ class ServeEngine:
     def decode(self, caches, tokens, pos):
         return self._with_backend(self._decode, self.params, caches, tokens, pos)
 
-    def serve(self, requests: Sequence[Any], *, n_slots: int = 0,
-              temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-              return_scheduler: bool = False):
+    def serve(
+        self,
+        requests: Sequence[Any],
+        *,
+        n_slots: int = 0,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        seed: int = 0,
+        block_size: int = 16,
+        n_blocks: int = 0,
+        return_scheduler: bool = False,
+    ):
         """Continuous-batching serve: schedule ``requests`` (scheduler.Request)
-        onto ``n_slots`` ragged decode rows (default: min(len, 8)) with EOS
-        early-exit and temperature/top-k sampling.  Returns Completions in
-        submission order (and the drained Scheduler when asked — slot events
-        and step stats for tests/benchmarks)."""
+        onto ``n_slots`` ragged decode rows (default: min(len, 8)) backed by a
+        paged KV block pool (``block_size`` tokens per block; ``n_blocks``
+        defaults to dense-equivalent capacity, n_slots ceil(max_len/block)
+        blocks) with EOS early-exit and temperature/top-k sampling.  Returns
+        Completions in submission order (and the drained Scheduler when asked
+        — slot events and step stats for tests/benchmarks)."""
         from repro.serve.scheduler import serve_requests
 
         n = n_slots or max(1, min(len(requests), 8))
-        comps, sched = serve_requests(self, requests, n_slots=n,
-                                      temperature=temperature, top_k=top_k,
-                                      seed=seed)
+        comps, sched = serve_requests(
+            self,
+            requests,
+            n_slots=n,
+            temperature=temperature,
+            top_k=top_k,
+            seed=seed,
+            block_size=block_size,
+            n_blocks=n_blocks,
+        )
         return (comps, sched) if return_scheduler else comps
 
     def generate(self, batch: Dict[str, jax.Array], steps: int) -> jax.Array:
@@ -212,27 +299,26 @@ class ServeEngine:
 
         Compatibility wrapper over ``serve``: each row becomes one request
         (fixed ``steps`` budget, no EOS), scheduled onto B slots — so the
-        classic API now exercises the ragged per-request decode path."""
+        classic API now exercises the ragged paged decode path."""
         from repro.serve.scheduler import Request
 
         tokens = np.asarray(batch["tokens"])
         B = tokens.shape[0]
         reqs = []
         for b in range(B):
-            extras = {k: np.asarray(v[b : b + 1]) for k, v in batch.items()
-                      if k != "tokens"}
-            reqs.append(Request(tokens=tokens[b], max_new_tokens=steps,
-                                extras=extras or None))
+            extras = {k: np.asarray(v[b : b + 1]) for k, v in batch.items() if k != "tokens"}
+            reqs.append(Request(tokens=tokens[b], max_new_tokens=steps, extras=extras or None))
         comps = self.serve(reqs, n_slots=B)
         if any(len(c.tokens) != steps for c in comps):
             raise ValueError(f"max_len={self.max_len} too small for {steps} steps")
         return jnp.asarray(np.stack([np.asarray(c.tokens, np.int32) for c in comps]))
 
     def generate_static(self, batch: Dict[str, jax.Array], steps: int) -> jax.Array:
-        """The pre-scheduler static loop: one uniform-position batch, every
-        request decoded for exactly ``steps`` tokens.  Kept as the reference
-        oracle for scheduler token-exactness tests and as the baseline the
-        continuous-batching throughput benchmark is measured against."""
+        """The pre-scheduler static loop: one uniform-position batch with
+        dense per-row caches, every request decoded for exactly ``steps``
+        tokens.  Kept as the reference oracle for scheduler token-exactness
+        tests (paged vs dense) and as the baseline the continuous-batching
+        throughput benchmark is measured against."""
         tokens = batch["tokens"]
         B, T = tokens.shape
         logits, caches = self.prefill(batch)
@@ -246,6 +332,12 @@ class ServeEngine:
         return jnp.concatenate(out, axis=1)
 
 
-def greedy_generate(cfg: ModelConfig, params, batch, steps: int, max_len: int,
-                    compute_dtype=jnp.bfloat16) -> jax.Array:
+def greedy_generate(
+    cfg: ModelConfig,
+    params,
+    batch,
+    steps: int,
+    max_len: int,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
     return ServeEngine(cfg, params, max_len, compute_dtype).generate(batch, steps)

@@ -1,39 +1,56 @@
-"""Continuous-batching request scheduler over ``ServeEngine``.
+"""Continuous-batching request scheduler over ``ServeEngine`` with a paged
+KV-cache block pool.
 
-The engine's static ``generate`` loop serves one fixed batch at a uniform
-position: every request runs for exactly ``steps`` tokens and finished
-rows burn decode bandwidth until the slowest request ends.  This module
-replaces that with the classic continuous-batching loop (Orca-style
-iteration-level scheduling):
+The engine's static ``generate_static`` loop serves one fixed batch at a
+uniform position: every slot owns a dense ``max_len`` cache row, so device
+capacity is bounded by the WORST-CASE request, not the workload.  With
+2-bit packed weights the KV cache dominates resident HBM at serving time,
+which makes that bound the capacity ceiling.  This module is the classic
+continuous-batching loop (Orca-style iteration-level scheduling) on a
+vLLM-style paged cache:
 
   * a FIFO **request queue** (``submit``) with optional arrival times in
-    decode-step units (synthetic ragged-arrival workloads);
-  * a **slot table** of ``n_slots`` rows.  One jitted decode step serves
-    all slots at once; each slot carries its own position, so the batch is
-    ragged — row b attends to cache[0..pos[b]] and writes at pos[b]
-    (the (B,) position contract threaded through ``decode_lm``);
-  * **admission**: a free slot pops the queue, runs a batch-of-one prefill,
-    and scatters the resulting caches into the slot's rows of the shared
-    cache tree (``dynamic_update_slice`` on the batch axis — axis 1 for
-    scan-stacked layer groups, axis 0 otherwise);
-  * **eviction**: a row that emits ``eos_id`` or reaches its token budget
-    is marked inactive.  Inactive rows are masked at the embedding and all
-    their cache writes are reverted inside ``decode_lm``, so the slot is
-    numerically frozen until reused — and active rows never see evicted
-    neighbours (decode-path MoE routing is drop-free, so row outputs are
-    independent of batch composition);
+    decode-step units; admission takes the first DUE request (a
+    not-yet-due head never blocks due requests behind it — FIFO is
+    preserved among due requests);
+  * a **slot table** of ``n_slots`` rows sharing one jitted decode step;
+    each row carries its own position, so the batch is ragged;
+  * a **block pool**: attention-family caches live in shared
+    ``(n_blocks, block, ...)`` pools; row b resolves position t through a
+    device ``(S, max_blocks)`` block table (gather for reads, flat scatter
+    for the per-row write).  Blocks are allocated on demand as a request's
+    position crosses a block boundary, and EVICTION returns them to the
+    free list immediately — capacity scales with live tokens, not with
+    slots × max_len.  Recurrent/SSD states, conv windows, ring buffers and
+    encdec cross-kv keep their fixed-size per-row layouts
+    (``GroupSpec.paged`` decides, not scheduler special-casing);
+  * **admission**: a free slot pops the queue, allocates the prompt's
+    blocks, and runs ONE fused prefill+block-scatter+sample dispatch.
+    Prompts are right-padded to power-of-two **buckets** (a traced real
+    length masks the non-causal couplings), so admission compiles
+    O(log max_len) traces instead of one per distinct prompt length
+    (``stats['admission_traces']`` counts the distinct trace shapes this
+    run used; ``stats['admission_trace_compiles']`` the ones built fresh —
+    0 on a warm engine, traces are engine-memoized);
+  * **preemption**: if the pool is exhausted when a request needs its next
+    block, the YOUNGEST live request is evicted, its blocks freed, and the
+    request requeued at the front for a from-scratch restart.  Restarts
+    are token-exact: greedy decode is deterministic and sampled streams
+    are keyed by (request index, step), so a replay draws the same tokens;
+  * **eviction**: a row that emits ``eos_id`` or exhausts its budget frees
+    its blocks and its block-table row is zeroed — the reserved trash
+    block (physical row 0) absorbs the dead row's writes until the slot is
+    reused, so no pool-wide revert pass is needed;
   * **sampling**: greedy when ``temperature <= 0``; otherwise temperature /
     top-k sampling keyed by (request index, step) — NOT by slot — so a
     fixed seed reproduces token streams regardless of slot placement, and
     identically across ``quantize_tree`` and ``pack_tree`` params (whose
     logits are bit-equal on the unpack backend).
 
-Everything device-side runs through two jitted traces per engine (a fused
-prefill+scatter+sample admission step per distinct prompt length, and one
-shared decode step), owned by the ENGINE so repeated serve() calls never
-retrace.  Slot state (tokens/positions/active/seed bases) lives on device;
-the host loop's only download per step is the sampled token vector it
-needs for EOS and budget bookkeeping.
+Everything device-side runs through engine-owned jitted traces (DESIGN.md
+§6).  Slot state (tokens/positions/active/seed bases/block tables) lives
+on device; the host loop's only download per step is the sampled token
+vector it needs for EOS and budget bookkeeping.
 """
 from __future__ import annotations
 
@@ -46,7 +63,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models.lm import scan_groups
+from repro.models.lm import PAGED_CACHE_LEAVES, scan_groups
+from repro.serve.blockpool import BlockPool
 
 
 @dataclasses.dataclass
@@ -67,7 +85,8 @@ class Completion:
     prompt_len: int
     finish_reason: str  # 'eos' | 'length'
     slot: int
-    admitted_step: int
+    arrival: int
+    admitted_step: int  # last admission (preempted requests restart)
     finished_step: int
 
 
@@ -76,30 +95,80 @@ class _Slot:
     index: int
     eos_id: int
     budget: int  # max tokens this slot may emit (max_len-clamped)
-    prompt_len: int
+    prompt: np.ndarray
+    req: Request  # kept for preemption requeue
     out: List[int]
     admitted_step: int
+    pos: int  # host mirror of the device position (next cache write)
+    blocks: List[int]  # logical block ids, in table order
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
 
 
 def _sample_seed(req_index: int, step: int) -> int:
     """PRNG stream id for the ``step``-th token of request ``req_index``.
-    Keyed by request identity, not slot, so placement can't change samples.
-    The decode step recomputes this on-device as ``seed0 + pos`` (seed0 is
-    written at admission), so keep it affine in ``step``.  The request index
-    wraps at 2048 to stay inside int32 (2047·1e6 + step < 2^31): streams
-    only repeat between requests 2048 apart under the same base seed."""
+    Keyed by request identity, not slot, so placement (and preemption
+    restarts) can't change samples.  The decode step recomputes this
+    on-device as ``seed0 + pos`` (seed0 is written at admission), so keep it
+    affine in ``step``.  The request index wraps at 2048 to stay inside
+    int32 (2047·1e6 + step < 2^31): streams only repeat between requests
+    2048 apart under the same base seed."""
     return (req_index % 2048) * 1_000_003 + step
 
 
+def latency_stats(completions: Sequence[Completion]) -> Dict[str, Dict[str, float]]:
+    """Per-request latency percentiles, in decode-step units.
+
+    queue_steps     — steps spent waiting for a slot (admitted - arrival;
+                      a preempted request counts its restart wait too);
+    ttft_steps      — steps from arrival until the first token exists (the
+                      admission prefill samples it, hence queue + 1);
+    tokens_per_step — emitted tokens over the steps the slot was occupied.
+    """
+    if not completions:
+        return {}
+    queue = np.asarray([c.admitted_step - c.arrival for c in completions], np.float64)
+    ttft = queue + 1.0
+    tps = np.asarray(
+        [len(c.tokens) / max(1, c.finished_step - c.admitted_step + 1) for c in completions],
+        np.float64,
+    )
+
+    def pct(a):
+        return {
+            "p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(np.mean(a)),
+        }
+
+    return {"queue_steps": pct(queue), "ttft_steps": pct(ttft), "tokens_per_step": pct(tps)}
+
+
 class Scheduler:
-    """Continuous-batching loop over a ``ServeEngine``.
+    """Continuous-batching loop over a ``ServeEngine`` (see module docstring).
 
     All jitted calls go through ``engine._with_backend`` so the packed
     dispatch inside the shared decode trace always sees the backend the
-    engine was pinned to at construction (DESIGN.md §4)."""
+    engine was pinned to at construction (DESIGN.md §4).
 
-    def __init__(self, engine, n_slots: int, *, temperature: float = 0.0,
-                 top_k: int = 0, seed: int = 0):
+    ``block_size``: tokens per KV block.  ``n_blocks``: pool capacity in
+    blocks (default: dense-equivalent, n_slots × ceil(max_len/block), so the
+    classic ``generate`` wrapper can never be preempted); at least
+    ceil(max_len/block) so a lone request can always run to completion."""
+
+    def __init__(
+        self,
+        engine,
+        n_slots: int,
+        *,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        seed: int = 0,
+        block_size: int = 16,
+        n_blocks: int = 0,
+    ):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         self.eng = engine
@@ -113,8 +182,21 @@ class Scheduler:
         self._groups = scan_groups(cfg)
         # all traces live on the engine (shared across Scheduler instances —
         # a per-scheduler jit cache would recompile on every serve() call)
-        self._decode_step, self._admit_step, self._sample = engine.scheduler_fns(
-            greedy=self.temperature <= 0.0, top_k=self.top_k)
+        self._fns = engine.scheduler_fns(greedy=self.temperature <= 0.0, top_k=self.top_k)
+        self._compiles0 = self._fns.admit_compiles
+
+        self.block_size = blk = int(block_size)
+        self.max_blocks = -(-engine.max_len // blk)
+        self.n_blocks = int(n_blocks) or S * self.max_blocks
+        if self.n_blocks < self.max_blocks:
+            raise ValueError(
+                f"n_blocks={self.n_blocks} cannot hold one max_len={engine.max_len} "
+                f"request ({self.max_blocks} blocks of {blk})"
+            )
+        self.pool = BlockPool(self.n_blocks, blk)
+        # physical block ids = logical + 1; row 0 of every pool leaf is the
+        # trash block evicted slots write into (their table rows are zeroed)
+        self._block_tables = jnp.zeros((S, self.max_blocks), jnp.int32)
 
         self.caches = self._init_caches()
         # slot-table state lives ON DEVICE: the per-step loop feeds the
@@ -131,28 +213,54 @@ class Scheduler:
         self._n_submitted = 0
         self._completions: Dict[int, Completion] = {}
         self.step_count = 0
-        self.stats = {"decode_steps": 0, "idle_steps": 0, "prefills": 0,
-                      "admissions": 0, "evictions": 0, "tokens_emitted": 0}
+        self._buckets_used: set = set()
+        self.stats = {
+            "decode_steps": 0,
+            "idle_steps": 0,
+            "prefills": 0,
+            "admissions": 0,
+            "evictions": 0,
+            "preemptions": 0,
+            "tokens_emitted": 0,
+            "admission_traces": 0,
+            "admission_trace_compiles": 0,
+            "peak_live_slots": 0,
+        }
         self.events: List[Tuple[int, str, int, int]] = []  # (step, kind, req, slot)
 
     # ------------------------------------------------------------------
     # cache pool
     # ------------------------------------------------------------------
     def _init_caches(self):
-        """Zero cache pool with exactly the prefill trace's leaf dtypes and
-        shapes, batch axis widened from 1 to n_slots."""
+        """Zero cache pool with exactly the prefill trace's leaf dtypes.
+        Paged leaves (GroupSpec.paged ∩ PAGED_CACHE_LEAVES) become shared
+        (n_blocks+1, block, ...) pools — +1 for the trash block — replacing
+        the per-slot max_len rows entirely; everything else keeps its
+        per-row layout with the batch axis widened from 1 to n_slots."""
         shapes = self.eng.prefill_cache_shapes()
-        S = self.n_slots
+        S, blk = self.n_slots, self.block_size
+        n_phys = self.n_blocks + 1
         pool = {}
         for g in self._groups:
             axis = 1 if g.stacked else 0
-
-            def alloc(sd, axis=axis):
-                shape = sd.shape[:axis] + (S,) + sd.shape[axis + 1:]
-                return jnp.zeros(shape, sd.dtype)
-
-            pool[g.name] = jax.tree_util.tree_map(alloc, shapes[g.name])
+            sub_pool = {}
+            for j in range(len(g.unit)):
+                sub = {}
+                for name, sd in shapes[g.name][f"sub{j}"].items():
+                    if g.paged[j] and name in PAGED_CACHE_LEAVES:
+                        shape = sd.shape[:axis] + (n_phys, blk) + sd.shape[axis + 2 :]
+                    else:
+                        shape = sd.shape[:axis] + (S,) + sd.shape[axis + 1 :]
+                    sub[name] = jnp.zeros(shape, sd.dtype)
+                sub_pool[f"sub{j}"] = sub
+            pool[g.name] = sub_pool
         return pool
+
+    def cache_bytes(self) -> int:
+        """Resident KV bytes of the pool (the §6 capacity-math numerator)."""
+        return sum(
+            leaf.size * leaf.dtype.itemsize for leaf in jax.tree_util.tree_leaves(self.caches)
+        )
 
     # ------------------------------------------------------------------
     # queue / admission
@@ -160,87 +268,129 @@ class Scheduler:
     def submit(self, req: Request) -> int:
         """Enqueue a request; returns its index (completion order key)."""
         prompt = np.asarray(req.tokens, np.int32).reshape(-1)
-        budget = min(int(req.max_new_tokens),
-                     self.eng.max_len - self._offset - prompt.shape[0] + 1)
+        budget = min(int(req.max_new_tokens), self.eng.max_len - self._offset - prompt.shape[0] + 1)
         if budget < 1:
             raise ValueError(
                 f"prompt of length {prompt.shape[0]} leaves no room for "
-                f"generation under max_len={self.eng.max_len}")
+                f"generation under max_len={self.eng.max_len}"
+            )
         idx = self._n_submitted
         self._n_submitted += 1
         self._queue.append((idx, prompt, budget, req))
         return idx
 
+    def _bucket(self, lp: int) -> int:
+        """Power-of-two padded prompt length, capped at the cache room."""
+        b = 1
+        while b < lp:
+            b <<= 1
+        return min(b, self.eng.max_len - self._offset)
+
+    def _pop_due(self):
+        """First request whose arrival has passed, preserving FIFO among due
+        requests (a future-dated head must not block due work behind it)."""
+        for i, item in enumerate(self._queue):
+            if item[3].arrival <= self.step_count:
+                del self._queue[i]
+                return item
+        return None
+
     def _admit(self) -> None:
-        if self._wave_ready():
-            self._admit_wave()
-            return
         for slot in range(self.n_slots):
-            if not self._queue or self._slots[slot] is not None:
+            if self._slots[slot] is not None:
                 continue
-            if self._queue[0][3].arrival > self.step_count:
-                continue  # FIFO: later requests don't jump an arrival gap
-            idx, prompt, budget, req = self._queue.popleft()
-            self._admit_one(slot, idx, prompt, budget, req)
+            item = self._pop_due()
+            if item is None:
+                return
+            idx, prompt, budget, req = item
+            lp = prompt.shape[0]
+            # +1 covers the first decode write at pos = offset+lp; clamp to
+            # the table width — a FULL-length prompt (offset+lp == max_len, a
+            # block multiple) has budget 1 and never decodes, so that extra
+            # block doesn't exist and mustn't be demanded
+            need = min((self._offset + lp) // self.block_size + 1, self.max_blocks)
+            blocks = self.pool.alloc(need)
+            if blocks is None:
+                # memory-bound: put the request back at ITS queue position
+                # (front among due) and stop — admitting a smaller later
+                # request instead would starve large prompts
+                self._queue.appendleft(item)
+                return
+            self._admit_one(slot, idx, prompt, budget, req, blocks)
 
-    def _wave_ready(self) -> bool:
-        """A full uniform wave: every slot idle and the next n_slots queued
-        requests all due, same prompt length, same extras layout — then ONE
-        batched prefill IS the cache pool (no per-slot scatter).  This is
-        the path `engine.generate` (uniform batch, n_slots=B) rides, so the
-        compatibility wrapper costs one prefill like the old static loop."""
-        if self._n_live or len(self._queue) < self.n_slots:
-            return False
-        head = list(self._queue)[: self.n_slots]
-        lp0 = head[0][1].shape[0]
-        ex0 = sorted((head[0][3].extras or {}).keys())
-        return all(
-            req.arrival <= self.step_count and prompt.shape[0] == lp0
-            and sorted((req.extras or {}).keys()) == ex0
-            for _, prompt, _, req in head
-        )
-
-    def _admit_wave(self) -> None:
-        wave = [self._queue.popleft() for _ in range(self.n_slots)]
-        prompts = np.stack([prompt for _, prompt, _, _ in wave])
-        batch = {"tokens": jnp.asarray(prompts)}
-        for key in (wave[0][3].extras or {}):
-            batch[key] = jnp.asarray(
-                np.concatenate([np.asarray(req.extras[key]) for _, _, _, req in wave]))
-        logits, self.caches = self.eng._with_backend(
-            self.eng._prefill, self.eng.params, batch)
-        seeds = jnp.asarray([_sample_seed(idx, 0) for idx, _, _, _ in wave], jnp.int32)
-        firsts = self._sample(logits[:, -1, :].astype(jnp.float32), seeds,
-                              self._base_key, self._temp)
-        self.stats["prefills"] += 1
-        for slot, (idx, prompt, budget, req) in enumerate(wave):
-            self._register(slot, idx, prompt, budget, req, firsts[slot])
-
-    def _admit_one(self, slot: int, idx: int, prompt: np.ndarray, budget: int,
-                   req: Request) -> None:
-        batch = {"tokens": jnp.asarray(prompt[None])}
+    def _admit_one(
+        self,
+        slot: int,
+        idx: int,
+        prompt: np.ndarray,
+        budget: int,
+        req: Request,
+        blocks: List[int],
+    ) -> None:
+        lp = prompt.shape[0]
+        bucket = self._bucket(lp)
+        padded = np.zeros(bucket, np.int32)
+        padded[:lp] = prompt
+        batch = {"tokens": jnp.asarray(padded[None])}
         if req.extras:
             batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        row = np.zeros(self.max_blocks, np.int32)
+        row[: len(blocks)] = np.asarray(blocks, np.int32) + 1  # physical ids
+        self._block_tables = self._block_tables.at[slot].set(jnp.asarray(row))
+        admit = self._fns.admit_step(bucket, self.block_size)
         first_t, self.caches = self.eng._with_backend(
-            self._admit_step, self.eng.params, batch, self.caches,
-            jnp.int32(slot), jnp.int32(_sample_seed(idx, 0)),
-            self._base_key, self._temp)
+            admit,
+            self.eng.params,
+            batch,
+            jnp.int32(lp),
+            self.caches,
+            self._block_tables[slot],
+            jnp.int32(slot),
+            jnp.int32(_sample_seed(idx, 0)),
+            self._base_key,
+            self._temp,
+        )
         self.stats["prefills"] += 1
-        self._register(slot, idx, prompt, budget, req, first_t)
+        # admission_traces: distinct bucketed trace shapes THIS run admitted
+        # through (each compiled at most once, engine-memoized across runs);
+        # admission_trace_compiles: traces actually built fresh for this run
+        # (0 on a warm engine)
+        self._buckets_used.add((bucket, self.block_size))
+        self.stats["admission_traces"] = len(self._buckets_used)
+        self.stats["admission_trace_compiles"] = self._fns.admit_compiles - self._compiles0
+        self._register(slot, idx, prompt, budget, req, blocks, first_t)
 
-    def _register(self, slot: int, idx: int, prompt: np.ndarray, budget: int,
-                  req: Request, first_t) -> None:
-        """Slot bookkeeping shared by single and wave admission."""
+    def _register(
+        self,
+        slot: int,
+        idx: int,
+        prompt: np.ndarray,
+        budget: int,
+        req: Request,
+        blocks: List[int],
+        first_t,
+    ) -> None:
+        """Slot bookkeeping after the fused admission dispatch."""
         first = int(np.asarray(first_t))
         lp = prompt.shape[0]
         self.stats["admissions"] += 1
         self.stats["tokens_emitted"] += 1
         self.events.append((self.step_count, "admit", idx, slot))
-        state = _Slot(index=idx, eos_id=int(req.eos_id), budget=budget,
-                      prompt_len=lp, out=[first], admitted_step=self.step_count)
+        start = self._offset + lp
+        state = _Slot(
+            index=idx,
+            eos_id=int(req.eos_id),
+            budget=budget,
+            prompt=prompt,
+            req=req,
+            out=[first],
+            admitted_step=self.step_count,
+            pos=start,
+            blocks=blocks,
+        )
         self._slots[slot] = state
         self._n_live += 1
-        start = self._offset + lp
+        self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"], self._n_live)
         self._tokens = self._tokens.at[slot].set(first_t)
         self._pos = self._pos.at[slot].set(start)
         self._active = self._active.at[slot].set(True)
@@ -249,38 +399,107 @@ class Scheduler:
         if first == state.eos_id or len(state.out) >= budget:
             self._finish(slot, "eos" if first == state.eos_id else "length")
 
-    def _finish(self, slot: int, reason: str) -> None:
+    # ------------------------------------------------------------------
+    # eviction / preemption
+    # ------------------------------------------------------------------
+    def _release(self, slot: int) -> _Slot:
+        """Common teardown: free blocks, zero the table row (all writes of
+        this row now land in the trash block), deactivate."""
         state = self._slots[slot]
-        self._completions[state.index] = Completion(
-            index=state.index, tokens=list(state.out),
-            prompt_len=state.prompt_len, finish_reason=reason, slot=slot,
-            admitted_step=state.admitted_step, finished_step=self.step_count)
-        self.events.append((self.step_count, "evict", state.index, slot))
-        self.stats["evictions"] += 1
+        self.pool.free_all(state.blocks)
+        self._block_tables = self._block_tables.at[slot].set(0)
         self._slots[slot] = None
         self._n_live -= 1
         self._active = self._active.at[slot].set(False)
+        return state
+
+    def _finish(self, slot: int, reason: str) -> None:
+        state = self._release(slot)
+        self._completions[state.index] = Completion(
+            index=state.index,
+            tokens=list(state.out),
+            prompt_len=state.prompt_len,
+            finish_reason=reason,
+            slot=slot,
+            arrival=state.req.arrival,
+            admitted_step=state.admitted_step,
+            finished_step=self.step_count,
+        )
+        self.events.append((self.step_count, "evict", state.index, slot))
+        self.stats["evictions"] += 1
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a live request under pool pressure and requeue it at the
+        front for a from-scratch restart (deterministic / (request,step)-
+        keyed sampling makes the replay token-identical)."""
+        state = self._release(slot)
+        self._queue.appendleft((state.index, state.prompt, state.budget, state.req))
+        self.events.append((self.step_count, "preempt", state.index, slot))
+        self.stats["preemptions"] += 1
+
+    def _grow_tables(self) -> None:
+        """Allocate the next block for every live row whose position crossed
+        a block boundary, oldest request first; exhaustion preempts the
+        YOUNGEST live request (vLLM policy: the oldest always progresses, so
+        the loop terminates)."""
+        order = sorted(
+            (s for s in range(self.n_slots) if self._slots[s] is not None),
+            key=lambda s: (self._slots[s].admitted_step, self._slots[s].index),
+        )
+        for slot in order:
+            state = self._slots[slot]
+            if state is None:  # preempted by an older slot's growth
+                continue
+            bi = state.pos // self.block_size
+            if bi < len(state.blocks):
+                continue
+            while True:
+                got = self.pool.alloc(1)
+                if got is not None:
+                    state.blocks.append(got[0])
+                    self._block_tables = self._block_tables.at[slot, bi].set(got[0] + 1)
+                    break
+                victim = max(
+                    (s for s in range(self.n_slots) if self._slots[s] is not None),
+                    key=lambda s: (self._slots[s].admitted_step, self._slots[s].index),
+                )
+                self._preempt(victim)
+                if victim == slot:
+                    break  # the requester itself was youngest; it restarts
 
     # ------------------------------------------------------------------
     # the loop
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """Admit what fits, run one ragged decode step over the live slots.
+        """Grow live requests' tables, admit what still fits, run one ragged
+        decode step over the live slots.  Growth runs FIRST so live requests
+        reserve their next blocks before admission spends them — otherwise a
+        just-admitted request could be preempted by an older slot's boundary
+        crossing in the same step, wasting its whole admission prefill.
         Returns False once the queue is drained and every slot is idle."""
+        self._grow_tables()
         self._admit()
         if self._n_live == 0:
             if not self._queue:
                 return False
-            # all live work done but arrivals are still in the future:
-            # tick time forward (an idle serving step)
+            # all live work done but arrivals are still in the future (or
+            # the pool can't fit the next prompt yet): tick time forward
             self.step_count += 1
             self.stats["idle_steps"] += 1
             return True
 
         self._tokens, self._pos, self.caches = self.eng._with_backend(
-            self._decode_step, self.eng.params, self.caches,
-            self._tokens, self._pos, self._active, self._seed0,
-            self._base_key, self._temp)
+            self._fns.decode_step,
+            self.eng.params,
+            self.caches,
+            self._tokens,
+            self._pos,
+            self._active,
+            self._seed0,
+            self._block_tables,
+            self._base_key,
+            self._temp,
+        )
         nxt = np.asarray(self._tokens)  # the loop's one host sync
         self.step_count += 1
         self.stats["decode_steps"] += 1
@@ -288,6 +507,7 @@ class Scheduler:
         for s, state in enumerate(self._slots):
             if state is None:
                 continue
+            state.pos += 1  # mirror of the device's pos + active
             tok = int(nxt[s])
             state.out.append(tok)
             self.stats["tokens_emitted"] += 1
@@ -304,12 +524,27 @@ class Scheduler:
         return [self._completions[i] for i in sorted(self._completions)]
 
 
-def serve_requests(engine, requests: Sequence[Request], *, n_slots: int,
-                   temperature: float = 0.0, top_k: int = 0,
-                   seed: int = 0) -> Tuple[List[Completion], Scheduler]:
+def serve_requests(
+    engine,
+    requests: Sequence[Request],
+    *,
+    n_slots: int,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    seed: int = 0,
+    block_size: int = 16,
+    n_blocks: int = 0,
+) -> Tuple[List[Completion], Scheduler]:
     """One-shot helper: schedule ``requests`` onto ``engine`` and drain."""
-    sched = Scheduler(engine, n_slots, temperature=temperature, top_k=top_k,
-                      seed=seed)
+    sched = Scheduler(
+        engine,
+        n_slots,
+        temperature=temperature,
+        top_k=top_k,
+        seed=seed,
+        block_size=block_size,
+        n_blocks=n_blocks,
+    )
     for r in requests:
         sched.submit(r)
     return sched.run(), sched

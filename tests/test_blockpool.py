@@ -1,0 +1,121 @@
+"""Block allocator properties (repro.serve.blockpool).
+
+The paged scheduler's correctness rests on three allocator invariants:
+a block is never handed out twice while live (double-allocation would alias
+two requests' KV), nothing leaks (free + live == n_blocks after ANY
+alloc/free/evict sequence — leaked blocks are capacity that never comes
+back), and evicting a request returns its whole table.  A deterministic
+test pins the API; the hypothesis test drives random operation sequences
+against a model."""
+import pytest
+
+from repro.serve.blockpool import BlockPool
+
+
+def test_alloc_free_roundtrip():
+    pool = BlockPool(8, 16)
+    assert pool.n_free == 8 and pool.n_live == 0
+    a = pool.alloc(3)
+    b = pool.alloc(5)
+    assert sorted(a + b) == list(range(8))  # distinct, exhaustive
+    assert pool.alloc(1) is None  # exhausted: all-or-nothing
+    pool.check()
+    pool.free_all(b)
+    assert pool.n_free == 5 and pool.n_live == 3
+    c = pool.alloc(5)
+    assert set(c) == set(b)  # freed capacity comes straight back
+    pool.check()
+
+
+def test_alloc_is_all_or_nothing():
+    pool = BlockPool(4, 16)
+    assert pool.alloc(5) is None
+    assert pool.n_free == 4  # a failed alloc must not leak a partial grab
+    pool.check()
+
+
+def test_refcount_sharing():
+    """A block pinned under two owners (future prefix cache) survives the
+    first free and returns on the second."""
+    pool = BlockPool(2, 16)
+    (bid,) = pool.alloc(1)
+    pool.incref(bid)
+    pool.free(bid)
+    assert pool.n_live == 1  # still pinned
+    pool.free(bid)
+    assert pool.n_free == 2
+    pool.check()
+    with pytest.raises(ValueError):
+        pool.free(bid)  # double free detected
+    with pytest.raises(ValueError):
+        pool.incref(bid)  # can't pin a free block
+
+
+def test_peak_live_watermark():
+    pool = BlockPool(6, 16)
+    a = pool.alloc(4)
+    pool.free_all(a)
+    pool.alloc(2)
+    assert pool.peak_live == 4
+
+
+# ---------------------------------------------------------------------------
+# property test: random alloc / free / evict sequences vs a model.  Guarded
+# per-test (not module-level importorskip) so the deterministic API tests
+# above still run on minimal installs without the dev deps.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _hyp_cases = given(
+        st.integers(min_value=1, max_value=24),
+        st.lists(st.tuples(st.sampled_from(["alloc", "grow", "evict"]),
+                           st.integers(min_value=0, max_value=7),
+                           st.integers(min_value=1, max_value=6)),
+                 max_size=60),
+    )
+
+    def _hyp(fn):
+        return settings(max_examples=60, deadline=None)(_hyp_cases(fn))
+except ImportError:  # pragma: no cover - exercised on minimal installs only
+    def _hyp(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+
+@_hyp
+def test_random_sequences_never_double_allocate_or_leak(n_blocks, ops):
+    """Any interleaving of request-table alloc, single-block grow, and
+    whole-table evict keeps every block exactly live-or-free, never hands a
+    live block out again, and returns evicted tables in full."""
+    pool = BlockPool(n_blocks, 16)
+    tables = {}  # request id -> list of blocks
+    live = set()
+    for op, rid, n in ops:
+        if op == "alloc" and rid not in tables:
+            got = pool.alloc(n)
+            if got is None:
+                assert pool.n_free < n  # refusal only under real pressure
+                continue
+            assert len(got) == n and not (set(got) & live)  # no double-alloc
+            tables[rid] = got
+            live |= set(got)
+        elif op == "grow" and rid in tables:
+            got = pool.alloc(1)
+            if got is None:
+                assert pool.n_free == 0
+                continue
+            assert got[0] not in live
+            tables[rid] += got
+            live.add(got[0])
+        elif op == "evict" and rid in tables:
+            blocks = tables.pop(rid)
+            pool.free_all(blocks)
+            live -= set(blocks)
+        # the allocator agrees with the model after every operation
+        assert pool.n_live == len(live)
+        assert pool.n_free + pool.n_live == n_blocks  # no leak
+        pool.check()
+    for rid in list(tables):
+        pool.free_all(tables.pop(rid))
+    assert pool.n_free == n_blocks  # all tables fully returned
+    pool.check()

@@ -1,15 +1,21 @@
-"""Continuous-batching scheduler (repro.serve.scheduler).
+"""Continuous-batching scheduler (repro.serve.scheduler) on the paged
+KV-cache block pool.
 
 The core contract: serving a ragged mix of requests through the shared
-slot table is TOKEN-IDENTICAL to decoding each request alone with the
-static uniform loop — per-request positions, per-row cache scatter, and
+paged pool is TOKEN-IDENTICAL to decoding each request alone with the
+static dense-cache loop — per-request positions, block-table-resolved
+cache reads/writes, bucketed (power-of-two padded) admission prefills, and
 drop-free decode MoE routing make row outputs independent of batch
-composition.  Checked greedily for quantize_tree and pack_tree params on
-an attention, a MoE, and a recurrent family; EOS eviction must free slots
-that later requests reuse; and sampling streams are keyed by (request,
-step), so a fixed seed reproduces across packed vs quantize_tree params.
+composition AND of the memory layout.  Checked greedily for quantize_tree
+and pack_tree params on an attention, a MoE, and a recurrent family here
+(all 10 archs in the slow-tier sweep); EOS eviction must return blocks and
+free slots that later requests reuse; preemption restarts must replay the
+same tokens; admission must compile O(log max_len) traces; and sampling
+streams are keyed by (request, step), so a fixed seed reproduces across
+packed vs quantize_tree params.
 """
 import dataclasses
+import math
 
 import numpy as np
 import pytest
@@ -19,7 +25,7 @@ import jax.numpy as jnp
 
 from repro import configs, core
 from repro.models import decode_lm, init_lm, prefill_lm, set_packed_backend
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeEngine, latency_stats
 
 MAX_LEN = 24
 _ENGINES = {}
@@ -148,6 +154,146 @@ def test_ragged_arrivals_idle_ticks(rng, unpack_backend):
     for req, comp in zip(reqs, comps):
         np.testing.assert_array_equal(np.asarray(comp.tokens),
                                       _static_reference(eng, req))
+
+
+def test_due_requests_admit_past_waiting_head(rng, unpack_backend):
+    """Head-of-line regression: a not-yet-due head request must not block
+    due requests queued behind it (FIFO holds among DUE requests only)."""
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = _ragged_requests(eng.cfg, rng, lens=(4, 5, 6), budgets=(3, 4, 3))
+    reqs[0] = dataclasses.replace(reqs[0], arrival=40)  # head, far future
+    comps, sched = eng.serve(reqs, n_slots=1, return_scheduler=True)
+    admit_order = [r for _, kind, r, _ in sched.events if kind == "admit"]
+    assert admit_order[:2] == [1, 2]  # due work ran first, in FIFO order
+    assert admit_order[-1] == 0  # the head still ran once due
+    assert any(step >= 40 for step, kind, r, _ in sched.events
+               if kind == "admit" and r == 0)
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens),
+                                      _static_reference(eng, req))
+
+
+# ---------------------------------------------------------------------------
+# paged pool: bucketed admission, block growth, preemption, latency stats
+# ---------------------------------------------------------------------------
+def test_admission_compiles_log_many_traces(rng, unpack_backend):
+    """16 distinct prompt lengths must bucket into <= log2(max_len)+1
+    admission traces (the per-length trace explosion this refactor kills)."""
+    eng = _engines("internlm2-1.8b")[0]
+    lens = list(range(1, 17))
+    reqs = _ragged_requests(eng.cfg, rng, lens=lens, budgets=[2] * len(lens))
+    comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
+    assert len(comps) == 16
+    assert sched.stats["admission_traces"] <= math.floor(math.log2(MAX_LEN)) + 1
+    # compiles are engine-memoized: never more than the shapes this run used
+    assert (sched.stats["admission_trace_compiles"]
+            <= sched.stats["admission_traces"])
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens),
+                                      _static_reference(eng, req))
+
+
+def test_full_length_prompt_at_block_multiple_admits(rng, unpack_backend):
+    """Regression: a prompt filling the whole cache (offset+lp == max_len, a
+    block_size multiple) has budget 1 and needs exactly max_blocks blocks —
+    admission must not demand the (nonexistent) first-decode block past the
+    table width, which crashed (n_slots>1) or idled forever (pool ==
+    max_blocks)."""
+    cfg = configs.get_reduced("internlm2-1.8b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_len=32, compute_dtype=jnp.float32)
+    prompt = np.asarray(jax.random.randint(rng, (32,), 0, cfg.vocab_size))
+    reqs = [Request(tokens=prompt, max_new_tokens=4)]  # budget clamps to 1
+    for n_slots in (1, 2):  # pool == max_blocks, then the crash shape
+        comps, sched = eng.serve(reqs, n_slots=n_slots, return_scheduler=True)
+        assert len(comps) == 1 and len(comps[0].tokens) == 1
+        assert comps[0].finish_reason == "length"
+        assert sched.pool.n_live == 0
+        np.testing.assert_array_equal(
+            np.asarray(comps[0].tokens),
+            _static_reference(eng, dataclasses.replace(reqs[0], max_new_tokens=1)))
+
+
+def test_small_blocks_grow_tables_token_exact(rng, unpack_backend):
+    """block_size=4 forces mid-decode block allocation (several boundary
+    crossings per request) — still token-identical to the dense oracle."""
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = _ragged_requests(eng.cfg, rng, lens=(3, 6, 4, 5), budgets=(8, 6, 9, 7))
+    comps, sched = eng.serve(reqs, n_slots=2, block_size=4, return_scheduler=True)
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens),
+                                      _static_reference(eng, req))
+    assert sched.pool.peak_live > 2  # growth actually happened
+    assert sched.pool.n_live == 0  # every block returned at drain
+
+
+def test_pool_exhaustion_preempts_and_replays_exactly(rng, unpack_backend):
+    """A pool sized for ~one request forces preemption: the youngest live
+    request is evicted, requeued, and its restart replays the identical
+    token stream (greedy determinism / (request,step)-keyed seeds)."""
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = _ragged_requests(eng.cfg, rng, lens=(8, 8), budgets=(16, 16))
+    comps, sched = eng.serve(reqs, n_slots=2, block_size=4, n_blocks=6,
+                             return_scheduler=True)
+    assert sched.stats["preemptions"] >= 1
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens),
+                                      _static_reference(eng, req))
+        assert comp.finish_reason == "length"
+    assert sched.pool.n_live == 0
+
+
+def test_latency_stats_from_completions(rng, unpack_backend):
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = _ragged_requests(eng.cfg, rng, lens=(4, 5, 6), budgets=(3, 4, 5))
+    reqs[2] = dataclasses.replace(reqs[2], arrival=4)
+    comps = eng.serve(reqs, n_slots=2)
+    stats = latency_stats(comps)
+    assert set(stats) == {"queue_steps", "ttft_steps", "tokens_per_step"}
+    for entry in stats.values():
+        assert entry["p50"] <= entry["p99"]
+    assert stats["queue_steps"]["p50"] >= 0.0
+    assert stats["ttft_steps"]["p50"] == stats["queue_steps"]["p50"] + 1.0
+    assert 0.0 < stats["tokens_per_step"]["p99"] <= 1.0 + 1e-9
+    assert latency_stats([]) == {}
+
+
+# ---------------------------------------------------------------------------
+# slow tier: paged serve() vs dense static oracle, all 10 archs, qt + packed
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", [
+    "internlm2-1.8b", "olmoe-1b-7b", "whisper-large-v3", "recurrentgemma-2b",
+    "mamba2-2.7b", "deepseek-v3-671b", "paligemma-3b", "granite-34b",
+    "gemma2-27b", "gemma3-4b",
+])
+@pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
+def test_paged_serve_matches_dense_static_all_archs(arch, tree, rng, unpack_backend):
+    """The acceptance sweep: the paged block pool (small blocks, growth,
+    bucketed admission) reproduces the dense-cache static loop token for
+    token on every family, for quantize_tree and pack_tree params."""
+    cfg = configs.get_reduced(arch)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    scfg = core.SymogConfig(n_bits=2, total_steps=1)
+    st = core.symog_init(params, scfg)
+    tree_params = (core.pack_tree(params, st, scfg) if tree == "packed"
+                   else core.quantize_tree(params, st, scfg))
+    max_len = MAX_LEN + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    eng = ServeEngine(cfg, tree_params, max_len=max_len, compute_dtype=jnp.float32)
+
+    extras = None
+    if cfg.family == "encdec":
+        extras = {"frames": np.asarray(
+            jax.random.normal(rng, (1, cfg.encoder_len, cfg.d_model)) * 0.1)}
+    if cfg.family == "vlm":
+        extras = {"patches": np.asarray(
+            jax.random.normal(rng, (1, cfg.prefix_len, cfg.d_model)) * 0.1)}
+    reqs = _ragged_requests(cfg, rng, lens=(3, 6, 4), budgets=(5, 3, 6),
+                            extras=extras)
+    comps = eng.serve(reqs, n_slots=2, block_size=4)
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(
+            np.asarray(comp.tokens), _static_reference(eng, req))
 
 
 # ---------------------------------------------------------------------------
