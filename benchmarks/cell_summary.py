@@ -15,10 +15,12 @@ def line(arch, shape, mesh="pod1"):
         return f"{arch} {shape}: {d.get('status')}"
     r = d["roofline"]
     peak = d.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30
-    return (f"{arch:18s} {shape:12s} comp={r['compute_s']:.4g} mem={r['memory_s']:.4g} "
-            f"coll={r['collective_s']:.4g} (raw {r.get('collective_s_raw', 0):.4g}) "
-            f"dom={r['dominant'].replace('_s','')} useful={r['useful_flops_ratio']:.2f} "
-            f"peak={peak:.1f}GiB")
+    return (
+        f"{arch:18s} {shape:12s} comp={r['compute_s']:.4g} mem={r['memory_s']:.4g} "
+        f"coll={r['collective_s']:.4g} (raw {r.get('collective_s_raw', 0):.4g}) "
+        f"dom={r['dominant'].replace('_s','')} useful={r['useful_flops_ratio']:.2f} "
+        f"peak={peak:.1f}GiB"
+    )
 
 
 if __name__ == "__main__":

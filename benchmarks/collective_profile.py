@@ -12,8 +12,7 @@ import re
 from collections import defaultdict
 
 
-def profile(arch: str, shape: str, multi_pod: bool = False, top: int = 14,
-            overrides=None):
+def profile(arch: str, shape: str, multi_pod: bool = False, top: int = 14, overrides=None):
     from repro.launch.dryrun import _lower_cell
     from repro.launch import hlo
 
@@ -66,8 +65,7 @@ def profile(arch: str, shape: str, multi_pod: bool = False, top: int = 14,
         for kind, b, shp, tag in coll:
             agg[(kind, shp, tag)] += b * mult[n]
     total = sum(agg.values())
-    print(f"total wire bytes/device/step: {total/1e9:.2f} GB "
-          f"-> {total/50e9:.3f} s @50GB/s\n")
+    print(f"total wire bytes/device/step: {total/1e9:.2f} GB -> {total/50e9:.3f} s @50GB/s\n")
     for (kind, shp, tag), v in sorted(agg.items(), key=lambda kv: -kv[1])[:top]:
         print(f"{v/1e9:9.2f} GB  {kind:18s} {shp:28s} {tag}")
     return total
@@ -78,8 +76,9 @@ if __name__ == "__main__":
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--set", action="append", default=[],
-                    help="config override key=value (repeatable)")
+    ap.add_argument(
+        "--set", action="append", default=[], help="config override key=value (repeatable)"
+    )
     args = ap.parse_args()
     ov = dict(s.split("=", 1) for s in getattr(args, "set"))
     profile(args.arch, args.shape, args.multi_pod, overrides=ov or None)

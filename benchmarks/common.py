@@ -51,8 +51,13 @@ def run_symog_protocol(
     scfg = core.SymogConfig(n_bits=n_bits, total_steps=symog_steps)
     sst = core.symog_init(st.params, scfg)
     step_s = jax.jit(make_cnn_train_step(cnn_cfg, tx, lr, symog_cfg=scfg))
-    st2 = CNNTrainState(st.params, st.bn_state, tx.init(st.params), sst,
-                        jnp.zeros((), jnp.int32))
+    st2 = CNNTrainState(
+        st.params,
+        st.bn_state,
+        tx.init(st.params),
+        sst,
+        jnp.zeros((), jnp.int32),
+    )
     for _ in range(symog_steps):
         st2, _ = step_s(st2, next(data))
 
@@ -85,15 +90,21 @@ def run_symog_protocol(
 RESULTS: list = []
 
 
-def emit(name: str, us_per_call: float, derived: str, ref_us: float = 0.0,
-         **metrics) -> None:
+def emit(name: str, us_per_call: float, derived: str, ref_us: float = 0.0, **metrics) -> None:
     """The harness CSV contract: name,us_per_call,derived.  Extra numeric
     ``metrics`` ride along into the JSON artifact (e.g. speedup floors).
     ``ref_us``: a reference-workload time measured ADJACENT to this entry —
     the regression gate compares us_per_call/ref_us ratios, which cancels
     shared-runner speed swings (they hit entry and reference alike)."""
-    RESULTS.append({"name": name, "us_per_call": us_per_call,
-                    "derived": derived, "ref_us": ref_us, "metrics": metrics})
+    RESULTS.append(
+        {
+            "name": name,
+            "us_per_call": us_per_call,
+            "derived": derived,
+            "ref_us": ref_us,
+            "metrics": metrics,
+        }
+    )
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
@@ -101,6 +112,5 @@ def write_results_json(path: str) -> None:
     import json
 
     with open(path, "w") as f:
-        json.dump({"entries": {r["name"]: r for r in RESULTS}}, f, indent=2,
-                  sort_keys=True)
+        json.dump({"entries": {r["name"]: r for r in RESULTS}}, f, indent=2, sort_keys=True)
     print(f"wrote {len(RESULTS)} entries to {path}")

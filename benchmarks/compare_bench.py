@@ -1,8 +1,8 @@
 """Gate a kernel_bench JSON artifact against a committed baseline.
 
-    python benchmarks/compare_bench.py \
-        --baseline benchmarks/BENCH_serve.baseline.json \
-        --current BENCH_serve.json [--factor 2.0]
+    python benchmarks/compare_bench.py \\
+        --baseline benchmarks/BENCH_serve.baseline.json \\
+        --current BENCH_serve.json [--factor 2.0] [--summary $GITHUB_STEP_SUMMARY]
 
 Two checks, exit 1 on any violation:
   * timed entries (us_per_call > us-floor in BOTH files) must not regress
@@ -15,9 +15,16 @@ Two checks, exit 1 on any violation:
     function (e.g. an accidental per-call retrace, 10-100x) still trips
     the gate.  Falls back to raw us when either side lacks ref_us;
   * metric floors: any ``metrics`` key in the BASELINE acts as a floor for
-    the same key in the current entry (continuous-batching speedup >= 1.5
-    ships in the committed baseline, so the serve scheduler can't silently
-    fall back to static-loop throughput).
+    the same key in the current entry (continuous-batching speedup and the
+    prefix-cache block-savings/TTFT floors ship in the committed baseline,
+    so the serve stack can't silently fall back to static-loop behavior).
+
+``--summary PATH`` additionally appends a markdown table of every baseline
+entry (current vs baseline normalized time, each metric vs its floor,
+pass/fail) to PATH — CI points it at ``$GITHUB_STEP_SUMMARY`` so a
+regression is readable in the Actions UI without downloading artifacts.
+The summary is written BEFORE the exit code is decided, so a failing gate
+still renders its table.
 
 New entries (in current but not baseline) pass — refresh the baseline in
 the same PR that adds them.
@@ -31,11 +38,86 @@ import sys
 US_FLOOR = 50.0  # entries faster than this are timer noise, not signals
 
 
+def _norm(entry):
+    """(normalized time, unit) — us/ref when the entry carries a reference."""
+    us, ref = entry.get("us_per_call", 0.0), entry.get("ref_us", 0.0)
+    if ref > 0:
+        return us / ref, "x ref"
+    return us, "us"
+
+
+def _compare(base, cur, factor):
+    """Returns (failures, rows): gate violations plus one summary row per
+    baseline entry — (name, current, baseline, metrics text, ok)."""
+    failures, rows = [], []
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from current run")
+            rows.append((name, "missing", "-", "-", False))
+            continue
+        ok = True
+        b_us, c_us = b.get("us_per_call", 0.0), c.get("us_per_call", 0.0)
+        timed = b_us > US_FLOOR and c_us > US_FLOOR
+        b_t, unit = _norm(b)
+        c_t, c_unit = _norm(c)
+        if timed and unit != c_unit:  # one side lacks ref_us: raw comparison
+            b_t, c_t, unit = b_us, c_us, "us"
+        if timed and c_t > factor * b_t:
+            failures.append(
+                f"{name}: {c_t:.2f}{unit} vs baseline {b_t:.2f}{unit} "
+                f"(> {factor:.1f}x regression)"
+            )
+            ok = False
+        metric_cells = []
+        for key, floor in (b.get("metrics") or {}).items():
+            got = (c.get("metrics") or {}).get(key)
+            if got is None or got < floor:
+                failures.append(f"{name}.{key}: {got} below floor {floor}")
+                metric_cells.append(f"{key}={got} < floor {floor} ✗")
+                ok = False
+            else:
+                metric_cells.append(f"{key}={got} ≥ {floor}")
+        rows.append(
+            (
+                name,
+                f"{c_t:.2f} {unit}" if timed else "-",
+                f"{b_t:.2f} {unit}" if timed else "-",
+                "; ".join(metric_cells) or "-",
+                ok,
+            )
+        )
+    return failures, rows
+
+
+def _write_summary(path, rows, factor, n_failures):
+    verdict = "✅ passed" if n_failures == 0 else f"❌ FAILED ({n_failures} violations)"
+    lines = [
+        f"## Bench regression gate: {verdict}",
+        "",
+        f"Timed entries gated at {factor:.1f}x the baseline us/ref ratio; "
+        "baseline metrics are floors.",
+        "",
+        "| entry | current | baseline | metric floors | ok |",
+        "|---|---|---|---|---|",
+    ]
+    for name, cur_t, base_t, metrics, ok in rows:
+        lines.append(f"| {name} | {cur_t} | {base_t} | {metrics} | {'✅' if ok else '❌'} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--factor", type=float, default=2.0)
+    ap.add_argument(
+        "--summary",
+        default="",
+        help="append a markdown table of entries vs baseline to this path "
+        "(CI: $GITHUB_STEP_SUMMARY); written even when the gate fails",
+    )
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -43,35 +125,19 @@ def main() -> int:
     with open(args.current) as f:
         cur = json.load(f)["entries"]
 
-    failures = []
-    for name, b in sorted(base.items()):
-        c = cur.get(name)
-        if c is None:
-            failures.append(f"{name}: missing from current run")
-            continue
-        b_us, c_us = b.get("us_per_call", 0.0), c.get("us_per_call", 0.0)
-        if b_us > US_FLOOR and c_us > US_FLOOR:
-            b_ref, c_ref = b.get("ref_us", 0.0), c.get("ref_us", 0.0)
-            norm = b_ref > 0 and c_ref > 0
-            b_t = b_us / b_ref if norm else b_us
-            c_t = c_us / c_ref if norm else c_us
-            unit = "x ref" if norm else "us"
-            if c_t > args.factor * b_t:
-                failures.append(
-                    f"{name}: {c_t:.2f}{unit} vs baseline {b_t:.2f}{unit} "
-                    f"(> {args.factor:.1f}x regression)")
-        for key, floor in (b.get("metrics") or {}).items():
-            got = (c.get("metrics") or {}).get(key)
-            if got is None or got < floor:
-                failures.append(f"{name}.{key}: {got} below floor {floor}")
+    failures, rows = _compare(base, cur, args.factor)
+    if args.summary:
+        _write_summary(args.summary, rows, args.factor, len(failures))
 
     if failures:
         print("BENCH REGRESSION GATE FAILED:")
         for f_ in failures:
             print(f"  {f_}")
         return 1
-    print(f"bench gate OK: {len(base)} baseline entries within "
-          f"{args.factor:.1f}x, all metric floors met")
+    print(
+        f"bench gate OK: {len(base)} baseline entries within "
+        f"{args.factor:.1f}x, all metric floors met"
+    )
     return 0
 
 

@@ -20,8 +20,9 @@ from repro.train import CNNTrainState, make_cnn_train_step
 
 def run() -> None:
     cfg = PAPER_CNNS["lenet5"]
-    data = SyntheticImages(SyntheticImagesConfig(
-        n_classes=10, hw=28, channels=1, global_batch=64, snr=0.5, seed=41))
+    data = SyntheticImages(
+        SyntheticImagesConfig(n_classes=10, hw=28, channels=1, global_batch=64, snr=0.5, seed=41)
+    )
     params, bn = cnn_init(jax.random.PRNGKey(0), cfg)
     tx = optim.sgd(momentum=0.9, nesterov=True)
     TOTAL = 300
@@ -36,8 +37,7 @@ def run() -> None:
     scfg = core.SymogConfig(n_bits=2, total_steps=TOTAL)
     sst = core.symog_init(st.params, scfg)
     step_s = jax.jit(make_cnn_train_step(cfg, tx, lr, symog_cfg=scfg))
-    st2 = CNNTrainState(st.params, st.bn_state, tx.init(st.params), sst,
-                        jnp.zeros((), jnp.int32))
+    st2 = CNNTrainState(st.params, st.bn_state, tx.init(st.params), sst, jnp.zeros((), jnp.int32))
 
     layer = "conv2/kernel"
     f = sst.f["conv2"]["kernel"]
@@ -52,12 +52,19 @@ def run() -> None:
         s = core.metrics.mode_stats(w, delta, 2)
         counts = np.asarray(s["count"], int).tolist()
         stds = np.round(np.asarray(s["std"]), 4).tolist()
-        emit(f"fig3_{layer.replace('/', '_')}_step{step}", 0.0,
-             f"delta={delta};counts={counts};stds={stds}")
-    final_std = float(np.max(np.asarray(core.metrics.mode_stats(
-        st2.params["conv2"]["kernel"], delta, 2)["std"])))
-    emit("fig3_modes_collapsed", 0.0,
-         f"max_mode_std={final_std:.5f};delta={delta};pass={final_std < delta / 8}")
+        emit(
+            f"fig3_{layer.replace('/', '_')}_step{step}",
+            0.0,
+            f"delta={delta};counts={counts};stds={stds}",
+        )
+    final_std = float(
+        np.max(np.asarray(core.metrics.mode_stats(st2.params["conv2"]["kernel"], delta, 2)["std"]))
+    )
+    emit(
+        "fig3_modes_collapsed",
+        0.0,
+        f"max_mode_std={final_std:.5f};delta={delta};pass={final_std < delta / 8}",
+    )
 
 
 if __name__ == "__main__":

@@ -26,8 +26,9 @@ def run() -> None:
     # pressure and weights never leave their modes; measured — see §Perf
     # methodology notes).  Reduced-width VGG11 on the 100-class stream.
     cfg = reduced_cnn("vgg11", 0.125)
-    data = SyntheticImages(SyntheticImagesConfig(
-        n_classes=100, hw=32, channels=3, global_batch=32, snr=1.0, seed=51))
+    data = SyntheticImages(
+        SyntheticImagesConfig(n_classes=100, hw=32, channels=3, global_batch=32, snr=1.0, seed=51)
+    )
     key = jax.random.PRNGKey(0)
     params, bn = cnn_init(key, cfg)
     tx = optim.sgd(momentum=0.9, nesterov=True)
@@ -64,8 +65,11 @@ def run() -> None:
     emit("fig4_switch_rate_clip_late", 0.0, f"rate={late_c:.4f}")
     emit("fig4_switch_rate_noclip_early", 0.0, f"rate={early_n:.4f}")
     emit("fig4_switch_rate_noclip_late", 0.0, f"rate={late_n:.4f}")
-    emit("fig4_claim_C3", 0.0,
-         f"clip_gt_noclip={early_c > early_n};ratio={early_c / max(early_n, 1e-9):.2f}")
+    emit(
+        "fig4_claim_C3",
+        0.0,
+        f"clip_gt_noclip={early_c > early_n};ratio={early_c / max(early_n, 1e-9):.2f}",
+    )
 
 
 if __name__ == "__main__":

@@ -76,8 +76,11 @@ def run() -> None:
     for mesh in ("pod1", "pod2"):
         for rec in load(mesh):
             if rec.get("status") != "OK":
-                emit(f"roofline_{mesh}_{rec['arch']}_{rec['shape']}", 0.0,
-                     f"status={rec.get('status')}")
+                emit(
+                    f"roofline_{mesh}_{rec['arch']}_{rec['shape']}",
+                    0.0,
+                    f"status={rec.get('status')}",
+                )
                 continue
             frac = fraction(rec)
             r = rec["roofline"]
@@ -92,8 +95,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod1", choices=("pod1", "pod2"))
     args = ap.parse_args()
-    print(f"## Roofline — mesh {args.mesh} "
-          f"({'16x16 (256 chips)' if args.mesh == 'pod1' else '2x16x16 (512 chips)'})\n")
+    print(
+        f"## Roofline — mesh {args.mesh} "
+        f"({'16x16 (256 chips)' if args.mesh == 'pod1' else '2x16x16 (512 chips)'})\n"
+    )
     print(table(args.mesh))
 
 

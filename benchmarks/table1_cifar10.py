@@ -21,18 +21,24 @@ def run() -> None:
         cfg = reduced_cnn(name, wm)
         r = run_symog_protocol(
             cfg,
-            data_cfg=SyntheticImagesConfig(n_classes=10, hw=32, channels=3,
-                                           global_batch=16, snr=0.8, seed=21),
+            data_cfg=SyntheticImagesConfig(
+                n_classes=10, hw=32, channels=3, global_batch=16, snr=0.8, seed=21
+            ),
             pretrain_steps=steps,
             symog_steps=qsteps,
             lr0=0.01,
         )
-        emit(f"table1_cifar10_{name}_float_err", r["seconds"] * 1e6,
-             f"err={r['err_float']:.4f}")
-        emit(f"table1_cifar10_{name}_symog2bit_err", r["seconds"] * 1e6,
-             f"err={r['err_symog_q']:.4f};rel_qerr={r['rel_qerr_symog']:.2e}")
-        emit(f"table1_cifar10_{name}_naive2bit_err", r["seconds"] * 1e6,
-             f"err={r['err_naive_q']:.4f};rel_qerr={r['rel_qerr_naive']:.2e}")
+        emit(f"table1_cifar10_{name}_float_err", r["seconds"] * 1e6, f"err={r['err_float']:.4f}")
+        emit(
+            f"table1_cifar10_{name}_symog2bit_err",
+            r["seconds"] * 1e6,
+            f"err={r['err_symog_q']:.4f};rel_qerr={r['rel_qerr_symog']:.2e}",
+        )
+        emit(
+            f"table1_cifar10_{name}_naive2bit_err",
+            r["seconds"] * 1e6,
+            f"err={r['err_naive_q']:.4f};rel_qerr={r['rel_qerr_naive']:.2e}",
+        )
 
 
 if __name__ == "__main__":

@@ -16,18 +16,24 @@ def run() -> None:
     cfg = reduced_cnn("vgg11", 0.125)
     r = run_symog_protocol(
         cfg,
-        data_cfg=SyntheticImagesConfig(n_classes=100, hw=32, channels=3,
-                                       global_batch=16, snr=1.5, seed=31),
+        data_cfg=SyntheticImagesConfig(
+            n_classes=100, hw=32, channels=3, global_batch=16, snr=1.5, seed=31
+        ),
         pretrain_steps=120,
         symog_steps=320,
         lr0=0.01,
     )
-    emit("table1_cifar100_vgg11_float_err", r["seconds"] * 1e6,
-         f"err={r['err_float']:.4f}")
-    emit("table1_cifar100_vgg11_symog2bit_err", r["seconds"] * 1e6,
-         f"err={r['err_symog_q']:.4f};rel_qerr={r['rel_qerr_symog']:.2e}")
-    emit("table1_cifar100_vgg11_naive2bit_err", r["seconds"] * 1e6,
-         f"err={r['err_naive_q']:.4f};rel_qerr={r['rel_qerr_naive']:.2e}")
+    emit("table1_cifar100_vgg11_float_err", r["seconds"] * 1e6, f"err={r['err_float']:.4f}")
+    emit(
+        "table1_cifar100_vgg11_symog2bit_err",
+        r["seconds"] * 1e6,
+        f"err={r['err_symog_q']:.4f};rel_qerr={r['rel_qerr_symog']:.2e}",
+    )
+    emit(
+        "table1_cifar100_vgg11_naive2bit_err",
+        r["seconds"] * 1e6,
+        f"err={r['err_naive_q']:.4f};rel_qerr={r['rel_qerr_naive']:.2e}",
+    )
 
 
 if __name__ == "__main__":

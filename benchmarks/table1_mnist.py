@@ -14,20 +14,24 @@ from repro.models.cnn import PAPER_CNNS
 def run() -> None:
     r = run_symog_protocol(
         PAPER_CNNS["lenet5"],
-        data_cfg=SyntheticImagesConfig(n_classes=10, hw=28, channels=1,
-                                       global_batch=64, snr=0.5, seed=11),
+        data_cfg=SyntheticImagesConfig(
+            n_classes=10, hw=28, channels=1, global_batch=64, snr=0.5, seed=11
+        ),
         pretrain_steps=150,
         symog_steps=250,
     )
-    emit("table1_mnist_float_err", r["seconds"] * 1e6,
-         f"err={r['err_float']:.4f}")
-    emit("table1_mnist_symog2bit_err", r["seconds"] * 1e6,
-         f"err={r['err_symog_q']:.4f};rel_qerr={r['rel_qerr_symog']:.2e}")
-    emit("table1_mnist_naive2bit_err", r["seconds"] * 1e6,
-         f"err={r['err_naive_q']:.4f};rel_qerr={r['rel_qerr_naive']:.2e}")
-    ok = (r["err_symog_q"] <= r["err_naive_q"]) and (
-        r["err_symog_q"] <= r["err_float"] + 0.05
+    emit("table1_mnist_float_err", r["seconds"] * 1e6, f"err={r['err_float']:.4f}")
+    emit(
+        "table1_mnist_symog2bit_err",
+        r["seconds"] * 1e6,
+        f"err={r['err_symog_q']:.4f};rel_qerr={r['rel_qerr_symog']:.2e}",
     )
+    emit(
+        "table1_mnist_naive2bit_err",
+        r["seconds"] * 1e6,
+        f"err={r['err_naive_q']:.4f};rel_qerr={r['rel_qerr_naive']:.2e}",
+    )
+    ok = (r["err_symog_q"] <= r["err_naive_q"]) and (r["err_symog_q"] <= r["err_float"] + 0.05)
     emit("table1_mnist_claim_C1", 0.0, f"pass={ok}")
 
 

@@ -43,17 +43,26 @@ from repro.serve import Request, ServeEngine, latency_stats
 
 
 def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
-                         seed: int, batch_extras=None):
+                         seed: int, batch_extras=None, system_len: int = 0):
     """Synthetic ragged-arrival workload: uniform prompt length (so the
     static baseline can batch them), ragged generation budgets in
-    [2, steps], arrivals spread over time in decode-step units."""
+    [2, steps], arrivals spread over time in decode-step units.
+
+    ``system_len`` > 0 prepends ONE shared random system prompt to every
+    request (total prompt = system_len + prompt_len) — the shape where the
+    --prefix-cache radix index turns refcounts into capacity and TTFT wins
+    (DESIGN.md §7)."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.integers(0, 3, size=n_requests))
     key = jax.random.PRNGKey(seed + 2)
+    system = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 10_000), (system_len,), 0, cfg.vocab_size))
     reqs = []
     for i in range(n_requests):
         toks = np.asarray(jax.random.randint(
             jax.random.fold_in(key, i), (prompt_len,), 0, cfg.vocab_size))
+        if system_len:
+            toks = np.concatenate([system, toks])
         extras = None
         if batch_extras is not None:
             extras = {k: np.asarray(v[:1]) for k, v in batch_extras.items()}
@@ -63,15 +72,17 @@ def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
 
 
 def run_continuous(eng: ServeEngine, reqs, *, slots: int,
-                   temperature: float, top_k: int, seed: int, label: str) -> None:
+                   temperature: float, top_k: int, seed: int, label: str,
+                   prefix_cache: bool = False) -> None:
     useful = sum(r.max_new_tokens for r in reqs)
     # warm the traces with the SAME sampling config (greedy and sampled
     # decode/admit steps are different traces — scheduler_fns memo key)
     eng.serve(reqs[:1], n_slots=slots, temperature=temperature, top_k=top_k,
-              seed=seed)
+              seed=seed, prefix_cache=prefix_cache)
     t0 = time.time()
     comps, sched = eng.serve(reqs, n_slots=slots, temperature=temperature,
-                             top_k=top_k, seed=seed, return_scheduler=True)
+                             top_k=top_k, seed=seed, prefix_cache=prefix_cache,
+                             return_scheduler=True)
     dt = time.time() - t0
     # static loop: batches of `slots` in arrival order, each run to the max
     # budget in the batch (finished rows burn decode steps)
@@ -87,6 +98,13 @@ def run_continuous(eng: ServeEngine, reqs, *, slots: int,
           f"peak {sched.pool.peak_live}/{sched.pool.n_blocks} blocks of "
           f"{sched.pool.block_size}, {sched.stats['preemptions']} preemptions, "
           f"{sched.stats['admission_traces']} admission traces")
+    if sched.prefix is not None:
+        s = sched.stats
+        print(f"  prefix cache: {s['prefix_hits']} hits / {s['prefix_misses']} misses, "
+              f"{s['prefix_hit_tokens']} cached tokens reused, "
+              f"{s['prefix_cow_copies']} COW copies, "
+              f"{s['prefix_evicted_blocks']} blocks evicted, "
+              f"{sched.pool.total_allocs} blocks allocated")
     lat = latency_stats(comps)
     if lat:
         q, t, tp = lat["queue_steps"], lat["ttft_steps"], lat["tokens_per_step"]
@@ -117,6 +135,13 @@ def main() -> None:
                     help="--continuous: sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="--continuous: top-k sampling cutoff (0 = off)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="--continuous: automatic prefix caching over the "
+                         "paged pool (DESIGN.md §7; fully-paged archs only)")
+    ap.add_argument("--system-prompt-len", type=int, default=0,
+                    help="--continuous: prepend one shared system prompt of "
+                         "this many tokens to every request (the workload "
+                         "--prefix-cache deduplicates)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -136,7 +161,8 @@ def main() -> None:
     if cfg.family == "vlm":
         batch["patches"] = jax.random.normal(key, (args.batch, cfg.prefix_len, cfg.d_model)) * 0.1
 
-    max_len = args.prompt_len + args.steps + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    max_len = (args.prompt_len + args.steps + args.system_prompt_len
+               + (cfg.prefix_len if cfg.family == "vlm" else 0))
     dtype = jnp.float32 if args.reduced else jnp.bfloat16
     eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=dtype)
 
@@ -144,10 +170,12 @@ def main() -> None:
         extras = {k: v for k, v in batch.items() if k != "tokens"} or None
         reqs = make_ragged_workload(cfg, n_requests=args.requests,
                                     prompt_len=args.prompt_len, steps=args.steps,
-                                    seed=args.seed, batch_extras=extras)
+                                    seed=args.seed, batch_extras=extras,
+                                    system_len=args.system_prompt_len)
         run_continuous(eng, reqs, slots=args.slots,
                        temperature=args.temperature, top_k=args.top_k,
-                       seed=args.seed, label="float")
+                       seed=args.seed, label="float",
+                       prefix_cache=args.prefix_cache)
         if args.quantized or args.packed:
             scfg = core.SymogConfig(n_bits=args.n_bits, total_steps=1)
             sst = core.symog_init(params, scfg)
@@ -161,7 +189,8 @@ def main() -> None:
                 label = f"quantized {args.n_bits}-bit"
             run_continuous(qeng, reqs, slots=args.slots,
                            temperature=args.temperature, top_k=args.top_k,
-                           seed=args.seed, label=label)
+                           seed=args.seed, label=label,
+                           prefix_cache=args.prefix_cache)
         return
 
     t0 = time.time()

@@ -247,6 +247,65 @@ def paged_gather(pool, block_tables):
     return flat[idx.reshape(block_tables.shape[0], -1)]
 
 
+def attn_prefill_paged(
+    p,
+    x,
+    cache,
+    bt_row,
+    positions,
+    *,
+    cfg: AttnConfig,
+    seq_len,
+    window=None,
+    rope_base=10000.0,
+    compute_dtype=jnp.bfloat16,
+):
+    """Prefix-cache tail prefill (DESIGN.md §7): attend a batch-of-one tail
+    bucket against the paged pool, starting at a traced offset.
+
+    x (1, T, D) is the right-padded TAIL of a prompt whose first
+    ``positions[0, 0]`` tokens are already cached in the pool blocks named
+    by ``bt_row``; ``seq_len`` (traced) is the real tail length.  Each real
+    tail token writes its k/v into the pool at its global position first
+    (rows past ``seq_len`` are redirected to the trash block), THEN the
+    layer gathers the whole table row — so every position inside a query's
+    causal horizon reads real KV (cached prefix or just-written tail) and
+    junk only ever sits beyond it, exactly like decode.  With the pool
+    storing at compute dtype this is bit-identical to the full-prompt
+    prefill the miss path runs (`tests/test_prefix_cache.py`)."""
+    B, T, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    q = dense_apply(p["q_proj"], x, compute_dtype=compute_dtype)
+    k_new = dense_apply(p["k_proj"], x, compute_dtype=compute_dtype)
+    v_new = dense_apply(p["v_proj"], x, compute_dtype=compute_dtype)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k_new = rmsnorm_apply(p["k_norm"], k_new)
+    if cfg.rope:
+        q = apply_rope(q, positions, rope_base)
+        k_new = apply_rope(k_new, positions, rope_base)
+    block = cache["k"].shape[1]
+    pos_t = positions[0]  # (T,) global positions of the tail bucket
+    idx = bt_row[pos_t // block] * block + pos_t % block
+    idx = jnp.where(jnp.arange(T, dtype=jnp.int32) < seq_len, idx, 0)  # pads -> trash
+    cache = {
+        "k": paged_update(cache["k"], k_new[0], idx),
+        "v": paged_update(cache["v"], v_new[0], idx),
+    }
+    k = cache_read(paged_gather(cache["k"], bt_row[None]), compute_dtype)
+    v = cache_read(paged_gather(cache["v"], bt_row[None]), compute_dtype)
+    S = k.shape[1]
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    mask = make_mask(positions, kv_pos[None, :], causal=True, window=window)
+    q = q.reshape(B, T, K, G, hd)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd**-0.5
+    out = _qk_attn(q, k, v, mask, scale=scale, cap=cfg.softcap)
+    out = out.reshape(B, T, H, hd)
+    y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+    return y, cache
+
+
 def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=10000.0,
                 compute_dtype=jnp.bfloat16,
                 kv: Optional[Tuple[jax.Array, jax.Array]] = None,

@@ -27,6 +27,7 @@ from repro.models.attention import (
     attn_decode,
     attn_init,
     attn_init_cache,
+    attn_prefill_paged,
     mla_apply,
     mla_decode,
     mla_init,
@@ -297,7 +298,11 @@ def _attn_prefill_cache(pa, h, cfg: ModelConfig, cache_len: int, positions, rope
     pad = cache_len - T
     k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
     v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    dt = jnp.int8 if cfg.kv_cache_dtype == "int8_fp" else jnp.bfloat16
+    # float caches store at COMPUTE dtype (bf16 in production; f32 when the
+    # engine computes f32), so cached k/v is bit-identical to the values
+    # prefill attention consumed — the prefix-cache tail prefill (DESIGN.md
+    # §7) attends cached prefix KV and must match the full-prefill oracle
+    dt = jnp.int8 if cfg.kv_cache_dtype == "int8_fp" else jnp.dtype(compute_dtype)
     return {"k": attn_mod.cache_write(k, dt), "v": attn_mod.cache_write(v, dt)}
 
 
@@ -308,8 +313,55 @@ def _mla_prefill_cache(pa, h, cfg: ModelConfig, cache_len: int, positions, rope_
     pad = cache_len - h.shape[1]
     c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
     k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
-    dt = jnp.int8 if cfg.kv_cache_dtype == "int8_fp" else jnp.bfloat16
+    dt = jnp.int8 if cfg.kv_cache_dtype == "int8_fp" else jnp.dtype(compute_dtype)
     return {"c_kv": attn_mod.cache_write(c_kv, dt), "k_rope": attn_mod.cache_write(k_rope, dt)}
+
+
+def block_prefill_paged(
+    p,
+    x,
+    cache,
+    bt_row,
+    positions,
+    *,
+    cfg: ModelConfig,
+    window=None,
+    rope_base=10000.0,
+    seq_len=None,
+    compute_dtype=jnp.bfloat16,
+):
+    """Prefix-cache tail prefill for an attention ('A') block (DESIGN.md §7).
+
+    Same per-token math as ``block_apply`` kind 'A', but attention runs
+    against the paged pool through ``attn_prefill_paged`` — cached prefix
+    blocks provide the keys below the traced start offset and the tail's
+    own k/v is scattered into the pool in place of the dense prefill-cache
+    extraction.  Only the fully-paged tier uses this (no MoE / recurrent /
+    SSD / ring / cross state exists to replay), so the FFN is always the
+    dense MLP."""
+    h = _norm_apply(cfg, p["pre_norm"], x)
+    y, cache = attn_prefill_paged(
+        p["attn"],
+        h,
+        cache,
+        bt_row,
+        positions,
+        cfg=_attn_cfg(cfg),
+        seq_len=seq_len,
+        window=window,
+        rope_base=rope_base,
+        compute_dtype=compute_dtype,
+    )
+    y = _barrier(_tag(y, "block_out"))
+    if cfg.post_norm:
+        y = _norm_apply(cfg, p["post_attn_norm"], y)
+    x = x + y
+    h = _norm_apply(cfg, p["pre_mlp_norm"], x)
+    y = mlp_apply(p["mlp"], h, cfg=_mlp_cfg(cfg), compute_dtype=compute_dtype)
+    y = _barrier(_tag(y, "block_out"))
+    if cfg.post_norm:
+        y = _norm_apply(cfg, p["post_mlp_norm"], y)
+    return x + y, cache
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,7 @@ from repro.models.blocks import (
     block_cache_init,
     block_decode,
     block_init,
+    block_prefill_paged,
     zero_aux,
 )
 from repro.models.config import ModelConfig
@@ -493,6 +494,98 @@ def prefill_lm(params, batch, cfg: ModelConfig, *, max_len: int,
         for g in scan_groups(cfg):
             add_cross(params[g.name], caches[g.name], g)
     return out.logits, caches
+
+
+def prefill_prefix_lm(params, batch, caches, bt_row, start, cfg: ModelConfig, *,
+                      seq_len, compute_dtype=jnp.bfloat16) -> Tuple[jax.Array, Any]:
+    """Prefix-cache TAIL prefill (DESIGN.md §7): process only the uncached
+    suffix of a prompt whose first ``start`` tokens already sit in the paged
+    pool blocks named by ``bt_row``.
+
+    ``batch['tokens']`` is the (1, bucket) right-padded tail; ``start``
+    (traced int32) is the prefix offset and ``seq_len`` (traced) the real
+    tail length — one compiled trace serves every (offset, length) pair in
+    a power-of-two tail bucket.  Per layer, the tail's k/v is scattered
+    into the pool at global positions ``start + i`` BEFORE the attention
+    gather, so each query's causal horizon reads only real KV (cached
+    prefix below ``start``, own tail at/above it) and the result is
+    bit-identical to the full-prompt bucketed prefill of the miss path.
+
+    Only the fully-paged tier is supported — an all-attention decoder with
+    every cache leaf in the block pool.  Architectures with non-paged
+    per-row state cannot take this path: recurrent (R) and SSD (M) states,
+    conv windows, ring buffers and encdec cross-kv are per-slot tensors the
+    pool cannot share, and MoE capacity competition couples a token's
+    output to the whole prompt, so those families re-prefill from scratch
+    (the scheduler never routes them here; this guard is the backstop)."""
+    if cfg.family != "decoder" or cfg.moe or cfg.use_mla:
+        raise NotImplementedError(
+            "prefix-cache tail prefill supports only fully-paged all-attention "
+            f"decoders (got family={cfg.family!r}, moe={cfg.moe}, mla={cfg.use_mla})"
+        )
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    positions = jnp.asarray(start, jnp.int32) + jnp.arange(T, dtype=jnp.int32)[None]
+    x = _embed_tokens(params, cfg, tokens, compute_dtype)
+
+    new_caches: Dict[str, Any] = {}
+    for g in scan_groups(cfg):
+        gp, gc = params[g.name], caches[g.name]
+        win, rb = _per_layer_arrays(cfg, g)
+
+        def unit_apply(p_u, c_u, x, win_u, rb_u, row_u):
+            new_c = {}
+            for j, kind in enumerate(g.unit):
+                if kind != "A" or not g.paged[j]:
+                    raise NotImplementedError(f"non-paged kind {kind!r} in prefix tail prefill")
+                x, cache_j = block_prefill_paged(
+                    p_u[f"sub{j}"], x, c_u[f"sub{j}"], row_u, positions, cfg=cfg,
+                    window=win_u[j], rope_base=rb_u[j], seq_len=seq_len,
+                    compute_dtype=compute_dtype,
+                )
+                new_c[f"sub{j}"] = cache_j
+            return x, new_c
+
+        if not g.stacked:
+            x, nc = unit_apply(gp, gc, x, win[0], rb[0], bt_row)
+        else:
+            # UNROLLED over layers, not lax.scan: scanning the pool through
+            # the cache as scan ys would materialize a fresh copy of every
+            # paged leaf per admission (the pool cannot alias a scan output)
+            # — a decode-step's worth of HBM traffic that would erase the
+            # prefix hit's latency win.  Instead each stacked leaf is viewed
+            # as one flat (L*n_phys, block, ...) pool and layer i addresses
+            # it through a +i*n_phys-shifted table row, so every write is an
+            # in-place scatter on the donated buffer (physical row i*n_phys
+            # is layer i's trash row — the shift preserves trash semantics).
+            n_phys = None
+            flat = {}
+            for j in range(len(g.unit)):
+                sub = {}
+                for name, leaf in gc[f"sub{j}"].items():
+                    n_phys = leaf.shape[1]
+                    sub[name] = leaf.reshape((leaf.shape[0] * n_phys,) + leaf.shape[2:])
+                flat[f"sub{j}"] = sub
+            gp_s = scan_ready(gp, g.count)
+            for i in range(g.count):
+                p_i = jax.tree_util.tree_map(lambda l: l[i], gp_s)
+                c_i = {k: dict(v) for k, v in flat.items()}
+                x, c_i = unit_apply(p_i, c_i, x, win[i], rb[i], bt_row + i * n_phys)
+                flat = c_i
+            nc = {}
+            for j in range(len(g.unit)):
+                sub = {}
+                for name, leaf in flat[f"sub{j}"].items():
+                    orig = gc[f"sub{j}"][name]
+                    sub[name] = leaf.reshape(orig.shape)
+                nc[f"sub{j}"] = sub
+        new_caches[g.name] = nc
+
+    # sample at the last REAL tail position (mirrors forward_lm's bucketed
+    # last_only gather — never materialize (1, T, V) logits)
+    x = jax.lax.dynamic_slice_in_dim(x, seq_len - 1, 1, axis=1)
+    logits, _ = _head(params, cfg, x)
+    return logits, new_caches
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,12 @@
 from repro.serve.blockpool import BlockPool
 from repro.serve.engine import ServeEngine, greedy_generate
+from repro.serve.prefixcache import PrefixCache
 from repro.serve.scheduler import Completion, Request, Scheduler, latency_stats
 
 __all__ = [
     "BlockPool",
     "Completion",
+    "PrefixCache",
     "Request",
     "Scheduler",
     "ServeEngine",

@@ -30,7 +30,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.lm import PAGED_CACHE_LEAVES, decode_lm, prefill_lm, scan_groups
+from repro.models.lm import (
+    PAGED_CACHE_LEAVES,
+    decode_lm,
+    prefill_lm,
+    prefill_prefix_lm,
+    scan_groups,
+)
 from repro.models.quantized import (
     get_packed_backend,
     resolve_backend,
@@ -126,7 +132,9 @@ class SchedulerFns:
         self._sample_fn = _sample
         self.decode_step = jax.jit(_decode_step, donate_argnums=(1,))
         self._admits: Dict[Any, Any] = {}
+        self._admits_prefix: Dict[Any, Any] = {}
         self.admit_compiles = 0
+        self.cow_copy = jax.jit(self._build_cow(), donate_argnums=(0,))
 
     def admit_step(self, bucket: int, block_size: int):
         """The admission trace for one (bucket, block geometry) pair."""
@@ -135,6 +143,67 @@ class SchedulerFns:
             self._admits[key] = jax.jit(self._build_admit(*key), donate_argnums=(3,))
             self.admit_compiles += 1
         return self._admits[key]
+
+    def admit_prefix_step(self, bucket: int, block_size: int):
+        """The prefix-hit admission trace (tail-bucket prefill, DESIGN.md §7)
+        for one (tail bucket, block geometry) pair — the traced start offset
+        and real tail length keep this O(log max_len) traces like the miss
+        path (both count into ``admit_compiles``)."""
+        key = (int(bucket), int(block_size))
+        if key not in self._admits_prefix:
+            self._admits_prefix[key] = jax.jit(
+                self._build_admit_prefix(*key), donate_argnums=(4,)
+            )
+            self.admit_compiles += 1
+        return self._admits_prefix[key]
+
+    def _build_cow(self):
+        """Copy-on-write block clone: duplicate one physical pool row (every
+        paged leaf, every layer) from ``src`` to ``dst``.  The scheduler
+        invokes it when a prefix hit ends inside a partially-filled cached
+        block: the new request gets a private copy it may append into while
+        the source block keeps serving the cache (rows past the matched
+        fill are junk in the copy — masked by the causal horizon until the
+        owner overwrites them)."""
+        groups = self._groups
+
+        def _cow(caches, src, dst):
+            out = {}
+            for g in groups:
+                axis = 1 if g.stacked else 0
+                gsub = {}
+                for j in range(len(g.unit)):
+                    sub = {}
+                    for name, leaf in caches[g.name][f"sub{j}"].items():
+                        if g.paged[j] and name in PAGED_CACHE_LEAVES:
+                            if axis == 0:
+                                leaf = leaf.at[dst].set(leaf[src])
+                            else:
+                                leaf = leaf.at[:, dst].set(leaf[:, src])
+                        sub[name] = leaf
+                    gsub[f"sub{j}"] = sub
+                out[g.name] = gsub
+            return out
+
+        return _cow
+
+    def _build_admit_prefix(self, bucket: int, block_size: int):
+        eng, sample = self._eng, self._sample_fn
+        cfg, cd = eng.cfg, eng.compute_dtype
+
+        def _admit(params, batch, length, start, caches, bt_row, seed, base_key, temperature):
+            # tail-bucket prefill: tokens are the (1, bucket) right-padded
+            # UNCACHED suffix; ``start`` (traced) is the cached-prefix
+            # length, ``length`` the real tail length.  The tail's KV lands
+            # in the pool inside the trace (paged scatter at start+i), so no
+            # separate block scatter step exists on this path.
+            logits, out = prefill_prefix_lm(
+                params, batch, caches, bt_row, start, cfg, seq_len=length, compute_dtype=cd
+            )
+            first = sample(logits[:, -1, :].astype(jnp.float32), seed[None], base_key, temperature)
+            return first[0], out
+
+        return _admit
 
     def _build_admit(self, bucket: int, block_size: int):
         eng, groups, sample = self._eng, self._groups, self._sample_fn
@@ -199,6 +268,29 @@ class ServeEngine:
         self._decode = _decode
         self._sched_fns: Dict[Any, SchedulerFns] = {}
         self._cache_shapes = None
+        self._fingerprint = None
+
+    def params_fingerprint(self) -> str:
+        """Within-process identity of the served artifact, namespacing the
+        prefix cache (DESIGN.md §7).  quantize_tree and pack_tree params
+        produce different KV bytes from the same tokens, so their cached
+        blocks must never cross-share: the fingerprint hashes the pytree
+        structure (``Packed`` nodes appear in the treedef), per-leaf
+        shapes/dtypes, and the tree's object identity — deliberately
+        conservative (two numerically equal trees fingerprint apart; a
+        false split only costs cache hits, a false merge would corrupt
+        generations)."""
+        if self._fingerprint is None:
+            import hashlib
+
+            leaves, treedef = jax.tree_util.tree_flatten(self.params)
+            h = hashlib.sha1()
+            h.update(repr(treedef).encode())
+            h.update(f"packed={self.packed} id={id(self.params)}".encode())
+            for leaf in leaves:
+                h.update(f"{getattr(leaf, 'shape', ())}/{getattr(leaf, 'dtype', '')};".encode())
+            self._fingerprint = h.hexdigest()[:16]
+        return self._fingerprint
 
     def prefill_cache_shapes(self):
         """ShapeDtypeStruct tree of one request's prefill caches (lazy
@@ -270,13 +362,17 @@ class ServeEngine:
         seed: int = 0,
         block_size: int = 16,
         n_blocks: int = 0,
+        prefix_cache: bool = False,
+        time_admissions: bool = False,
         return_scheduler: bool = False,
     ):
         """Continuous-batching serve: schedule ``requests`` (scheduler.Request)
         onto ``n_slots`` ragged decode rows (default: min(len, 8)) backed by a
         paged KV block pool (``block_size`` tokens per block; ``n_blocks``
         defaults to dense-equivalent capacity, n_slots ceil(max_len/block)
-        blocks) with EOS early-exit and temperature/top-k sampling.  Returns
+        blocks) with EOS early-exit and temperature/top-k sampling.
+        ``prefix_cache`` enables automatic prefix caching (DESIGN.md §7) on
+        the fully-paged architecture tier — a no-op elsewhere.  Returns
         Completions in submission order (and the drained Scheduler when asked
         — slot events and step stats for tests/benchmarks)."""
         from repro.serve.scheduler import serve_requests
@@ -291,6 +387,8 @@ class ServeEngine:
             seed=seed,
             block_size=block_size,
             n_blocks=n_blocks,
+            prefix_cache=prefix_cache,
+            time_admissions=time_admissions,
         )
         return (comps, sched) if return_scheduler else comps
 

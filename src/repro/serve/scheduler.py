@@ -45,7 +45,20 @@ vLLM-style paged cache:
     top-k sampling keyed by (request index, step) — NOT by slot — so a
     fixed seed reproduces token streams regardless of slot placement, and
     identically across ``quantize_tree`` and ``pack_tree`` params (whose
-    logits are bit-equal on the unpack backend).
+    logits are bit-equal on the unpack backend);
+  * **prefix cache** (``prefix_cache=True``, DESIGN.md §7): admission first
+    matches the prompt against a radix index of cached prompt blocks
+    (``serve/prefixcache.py``).  A hit ACQUIRES the matched blocks into the
+    new table (refcounted sharing, no recompute, no new allocation), COWs a
+    partially-matched boundary block, and prefills only the uncached tail
+    bucket with a traced start offset.  Only the fully-paged tier shares —
+    an all-attention decoder whose every cache leaf lives in the block pool
+    — because non-paged per-row state (recurrent h / conv, SSD state, ring
+    buffers, cross-kv) cannot be pinned under two slots, and MoE capacity
+    competition couples tokens across the whole prompt; other families
+    silently bypass (every request is a miss, nothing is indexed).
+    Eviction order under pressure: cached-but-idle blocks are reclaimed
+    (LRU, inside ``BlockPool.alloc``) BEFORE any live request is preempted.
 
 Everything device-side runs through engine-owned jitted traces (DESIGN.md
 §6).  Slot state (tokens/positions/active/seed bases/block tables) lives
@@ -56,6 +69,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -65,6 +79,7 @@ import jax.numpy as jnp
 
 from repro.models.lm import PAGED_CACHE_LEAVES, scan_groups
 from repro.serve.blockpool import BlockPool
+from repro.serve.prefixcache import PrefixCache
 
 
 @dataclasses.dataclass
@@ -168,6 +183,8 @@ class Scheduler:
         seed: int = 0,
         block_size: int = 16,
         n_blocks: int = 0,
+        prefix_cache: bool = False,
+        time_admissions: bool = False,
     ):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
@@ -198,6 +215,19 @@ class Scheduler:
         # trash block evicted slots write into (their table rows are zeroed)
         self._block_tables = jnp.zeros((S, self.max_blocks), jnp.int32)
 
+        # prefix cache (DESIGN.md §7): only the fully-paged tier can share —
+        # every cache leaf of every group must live in the block pool, which
+        # holds exactly for all-attention decoders (no MoE capacity coupling,
+        # no MLA absorbed state quirks, no int8 KV re-rounding splitting the
+        # tail-prefill numerics from the full-prefill oracle).  Elsewhere the
+        # flag is accepted and the cache is structurally inert.
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache and self._prefix_eligible():
+            self.prefix = PrefixCache(self.pool, blk, engine.params_fingerprint())
+            self.pool.set_reclaimer(self.prefix.reclaim)
+        self._time_admissions = bool(time_admissions)
+        self.admit_times: List[Tuple[int, float, int]] = []  # (req, seconds, hit_tokens)
+
         self.caches = self._init_caches()
         # slot-table state lives ON DEVICE: the per-step loop feeds the
         # previous step's device handles straight back and only downloads
@@ -225,8 +255,36 @@ class Scheduler:
             "admission_traces": 0,
             "admission_trace_compiles": 0,
             "peak_live_slots": 0,
+            "prefix_hits": 0,
+            "prefix_misses": 0,
+            "prefix_hit_tokens": 0,
+            "prefix_cow_copies": 0,
+            "prefix_evicted_blocks": 0,
         }
         self.events: List[Tuple[int, str, int, int]] = []  # (step, kind, req, slot)
+
+    def _prefix_eligible(self) -> bool:
+        """True iff EVERY cache leaf of every group pages into the pool (the
+        structural precondition for prefix sharing) and the paged KV stores
+        at compute precision (int8 KV re-rounds, splitting tail-prefill
+        numerics from the full-prefill oracle).  vlm's per-request patch
+        prefix (``self._offset``) and MoE/MLA/recurrent families fail this."""
+        cfg = self.cfg
+        if (
+            cfg.family != "decoder"
+            or cfg.moe
+            or cfg.use_mla
+            or self._offset
+            or cfg.kv_cache_dtype == "int8_fp"
+        ):
+            return False
+        shapes = self.eng.prefill_cache_shapes()
+        for g in self._groups:
+            for j in range(len(g.unit)):
+                for name in shapes[g.name][f"sub{j}"]:
+                    if not (g.paged[j] and name in PAGED_CACHE_LEAVES):
+                        return False
+        return True
 
     # ------------------------------------------------------------------
     # cache pool
@@ -295,6 +353,17 @@ class Scheduler:
                 return item
         return None
 
+    def _match_prefix(self, prompt: np.ndarray, req: Request) -> Tuple[int, List[int]]:
+        """Cached-prefix match for admission: ``(matched, path_bids)`` where
+        ``path_bids`` cover the first ceil(matched/block) prompt blocks.
+        Capped at ``lp - 1`` so a hit always leaves >= 1 tail token to
+        prefill (the admission must sample a first token)."""
+        if self.prefix is None or req.extras:
+            return 0, []
+        return self.prefix.match(
+            prompt, self.eng.params_fingerprint(), max_match=prompt.shape[0] - 1
+        )
+
     def _admit(self) -> None:
         for slot in range(self.n_slots):
             if self._slots[slot] is not None:
@@ -309,14 +378,41 @@ class Scheduler:
             # block multiple) has budget 1 and never decodes, so that extra
             # block doesn't exist and mustn't be demanded
             need = min((self._offset + lp) // self.block_size + 1, self.max_blocks)
-            blocks = self.pool.alloc(need)
-            if blocks is None:
-                # memory-bound: put the request back at ITS queue position
-                # (front among due) and stop — admitting a smaller later
-                # request instead would starve large prompts
+            matched, path = self._match_prefix(prompt, req)
+            m_full, m_part = divmod(matched, self.block_size)
+            # pin the matched path FIRST: alloc's cached-free reclaim (LRU
+            # trie eviction) must not recycle the very blocks we matched
+            shared, src = path[:m_full], (path[m_full] if m_part else None)
+            for bid in shared:
+                self.pool.acquire(bid)
+            if src is not None:
+                self.pool.acquire(src)
+            fresh = self.pool.alloc(need - m_full)
+            if fresh is None:
+                # memory-bound: undo the pins, put the request back at ITS
+                # queue position (front among due) and stop — admitting a
+                # smaller later request instead would starve large prompts
+                for bid in shared:
+                    self.pool.free(bid)
+                if src is not None:
+                    self.pool.free(src)
                 self._queue.appendleft(item)
                 return
-            self._admit_one(slot, idx, prompt, budget, req, blocks)
+            if src is not None:
+                # copy-on-write: the hit ends INSIDE a cached block — clone
+                # its physical row so this request can append into a private
+                # copy while the source keeps serving the cache
+                self.caches = self.eng._with_backend(
+                    self._fns.cow_copy, self.caches, jnp.int32(src + 1), jnp.int32(fresh[0] + 1)
+                )
+                self.pool.free(src)
+                self.stats["prefix_cow_copies"] += 1
+            if matched:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hit_tokens"] += matched
+            elif self.prefix is not None and not req.extras:
+                self.stats["prefix_misses"] += 1
+            self._admit_one(slot, idx, prompt, budget, req, shared + fresh, start=matched)
 
     def _admit_one(
         self,
@@ -326,38 +422,69 @@ class Scheduler:
         budget: int,
         req: Request,
         blocks: List[int],
+        start: int = 0,
     ) -> None:
         lp = prompt.shape[0]
-        bucket = self._bucket(lp)
-        padded = np.zeros(bucket, np.int32)
-        padded[:lp] = prompt
-        batch = {"tokens": jnp.asarray(padded[None])}
-        if req.extras:
-            batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        t0 = time.perf_counter() if self._time_admissions else 0.0
         row = np.zeros(self.max_blocks, np.int32)
         row[: len(blocks)] = np.asarray(blocks, np.int32) + 1  # physical ids
         self._block_tables = self._block_tables.at[slot].set(jnp.asarray(row))
-        admit = self._fns.admit_step(bucket, self.block_size)
-        first_t, self.caches = self.eng._with_backend(
-            admit,
-            self.eng.params,
-            batch,
-            jnp.int32(lp),
-            self.caches,
-            self._block_tables[slot],
-            jnp.int32(slot),
-            jnp.int32(_sample_seed(idx, 0)),
-            self._base_key,
-            self._temp,
-        )
+        if start:
+            # prefix hit: prefill only the uncached tail, traced start offset
+            tail = lp - start
+            bucket = self._bucket(tail)
+            padded = np.zeros(bucket, np.int32)
+            padded[:tail] = prompt[start:]
+            admit = self._fns.admit_prefix_step(bucket, self.block_size)
+            first_t, self.caches = self.eng._with_backend(
+                admit,
+                self.eng.params,
+                {"tokens": jnp.asarray(padded[None])},
+                jnp.int32(tail),
+                jnp.int32(start),
+                self.caches,
+                self._block_tables[slot],
+                jnp.int32(_sample_seed(idx, 0)),
+                self._base_key,
+                self._temp,
+            )
+            self._buckets_used.add(("prefix", bucket, self.block_size))
+        else:
+            bucket = self._bucket(lp)
+            padded = np.zeros(bucket, np.int32)
+            padded[:lp] = prompt
+            batch = {"tokens": jnp.asarray(padded[None])}
+            if req.extras:
+                batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+            admit = self._fns.admit_step(bucket, self.block_size)
+            first_t, self.caches = self.eng._with_backend(
+                admit,
+                self.eng.params,
+                batch,
+                jnp.int32(lp),
+                self.caches,
+                self._block_tables[slot],
+                jnp.int32(slot),
+                jnp.int32(_sample_seed(idx, 0)),
+                self._base_key,
+                self._temp,
+            )
+            self._buckets_used.add((bucket, self.block_size))
         self.stats["prefills"] += 1
         # admission_traces: distinct bucketed trace shapes THIS run admitted
         # through (each compiled at most once, engine-memoized across runs);
         # admission_trace_compiles: traces actually built fresh for this run
         # (0 on a warm engine)
-        self._buckets_used.add((bucket, self.block_size))
         self.stats["admission_traces"] = len(self._buckets_used)
         self.stats["admission_trace_compiles"] = self._fns.admit_compiles - self._compiles0
+        if self.prefix is not None and not req.extras:
+            # index every prompt block (shared levels dedupe onto existing
+            # nodes) while the blocks are still pinned by this table
+            self.prefix.insert(prompt, blocks, self.eng.params_fingerprint())
+            self.stats["prefix_evicted_blocks"] = self.prefix.stats["evicted_blocks"]
+        if self._time_admissions:
+            first_t.block_until_ready()
+            self.admit_times.append((idx, time.perf_counter() - t0, start))
         self._register(slot, idx, prompt, budget, req, blocks, first_t)
 
     def _register(
@@ -479,6 +606,8 @@ class Scheduler:
         Returns False once the queue is drained and every slot is idle."""
         self._grow_tables()
         self._admit()
+        if self.prefix is not None:
+            self.stats["prefix_evicted_blocks"] = self.prefix.stats["evicted_blocks"]
         if self._n_live == 0:
             if not self._queue:
                 return False
@@ -534,6 +663,8 @@ def serve_requests(
     seed: int = 0,
     block_size: int = 16,
     n_blocks: int = 0,
+    prefix_cache: bool = False,
+    time_admissions: bool = False,
 ) -> Tuple[List[Completion], Scheduler]:
     """One-shot helper: schedule ``requests`` onto ``engine`` and drain."""
     sched = Scheduler(
@@ -544,6 +675,8 @@ def serve_requests(
         seed=seed,
         block_size=block_size,
         n_blocks=n_blocks,
+        prefix_cache=prefix_cache,
+        time_admissions=time_admissions,
     )
     for r in requests:
         sched.submit(r)

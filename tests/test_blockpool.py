@@ -1,12 +1,15 @@
 """Block allocator properties (repro.serve.blockpool).
 
-The paged scheduler's correctness rests on three allocator invariants:
+The paged scheduler's correctness rests on the allocator invariants:
 a block is never handed out twice while live (double-allocation would alias
-two requests' KV), nothing leaks (free + live == n_blocks after ANY
-alloc/free/evict sequence — leaked blocks are capacity that never comes
-back), and evicting a request returns its whole table.  A deterministic
-test pins the API; the hypothesis test drives random operation sequences
-against a model."""
+two requests' KV), nothing leaks (free + live + cached-free == n_blocks
+after ANY alloc/free/evict sequence — leaked blocks are capacity that never
+comes back), evicting a request returns its whole table, and — since the
+prefix cache — every table reference is backed by exactly one refcount
+(``acquire`` is the only way a block enters a second table) and cached
+blocks park instead of recycling until ``uncache``.  Deterministic tests
+pin the API; the hypothesis test drives random operation sequences,
+including share/release interleavings, against a model."""
 import pytest
 
 from repro.serve.blockpool import BlockPool
@@ -24,7 +27,7 @@ def test_alloc_free_roundtrip():
     assert pool.n_free == 5 and pool.n_live == 3
     c = pool.alloc(5)
     assert set(c) == set(b)  # freed capacity comes straight back
-    pool.check()
+    pool.check([a, c])
 
 
 def test_alloc_is_all_or_nothing():
@@ -35,11 +38,12 @@ def test_alloc_is_all_or_nothing():
 
 
 def test_refcount_sharing():
-    """A block pinned under two owners (future prefix cache) survives the
+    """A block pinned under two owners (prefix-cache sharing) survives the
     first free and returns on the second."""
     pool = BlockPool(2, 16)
     (bid,) = pool.alloc(1)
-    pool.incref(bid)
+    pool.acquire(bid)
+    pool.check([[bid], [bid]])  # two tables, refcount 2
     pool.free(bid)
     assert pool.n_live == 1  # still pinned
     pool.free(bid)
@@ -48,7 +52,64 @@ def test_refcount_sharing():
     with pytest.raises(ValueError):
         pool.free(bid)  # double free detected
     with pytest.raises(ValueError):
-        pool.incref(bid)  # can't pin a free block
+        pool.acquire(bid)  # can't revive a free uncached block
+
+
+def test_check_catches_share_without_acquire():
+    """The §7 aliasing bug: a block in two tables at refcount 1 must fail
+    the audit — sharing is legal only through acquire()."""
+    pool = BlockPool(4, 16)
+    (bid,) = pool.alloc(1)
+    with pytest.raises(AssertionError):
+        pool.check([[bid], [bid]])
+    pool.acquire(bid)
+    pool.check([[bid], [bid]])
+    with pytest.raises(AssertionError):
+        pool.check([[bid]])  # leaked reference: refcount 2, one table
+
+
+def test_cached_free_tier_parks_and_revives():
+    """mark_cached parks a freed block (contents stay valid for prefix
+    hits), acquire revives it, uncache recycles it."""
+    pool = BlockPool(2, 16)
+    (bid,) = pool.alloc(1)
+    pool.mark_cached(bid)
+    pool.free(bid)
+    assert pool.n_free == 1 and pool.n_cached_free == 1 and pool.n_live == 0
+    pool.check()
+    pool.acquire(bid)  # prefix hit revives the parked block
+    assert pool.refcount(bid) == 1 and pool.n_cached_free == 0
+    pool.check([[bid]])
+    pool.free(bid)
+    pool.uncache(bid)  # trie eviction: now it really recycles
+    assert pool.n_free == 2
+    pool.check()
+
+
+def test_alloc_reclaims_cached_free_before_failing():
+    """Eviction ordering: a short free list drains the cached-free tier
+    (via the registered reclaimer) before alloc reports exhaustion."""
+    pool = BlockPool(2, 16)
+    parked = []
+
+    def reclaimer(n):
+        freed = 0
+        while parked and freed < n:
+            pool.uncache(parked.pop())
+            freed += 1
+        return freed
+
+    pool.set_reclaimer(reclaimer)
+    a = pool.alloc(2)
+    for bid in a:
+        pool.mark_cached(bid)
+    pool.free_all(a)
+    parked.extend(a)
+    assert pool.n_free == 0 and pool.n_cached_free == 2
+    got = pool.alloc(2)  # must reclaim both parked blocks
+    assert got is not None and sorted(got) == sorted(a)
+    assert pool.n_cached_free == 0
+    pool.check([got])
 
 
 def test_peak_live_watermark():
@@ -57,65 +118,114 @@ def test_peak_live_watermark():
     pool.free_all(a)
     pool.alloc(2)
     assert pool.peak_live == 4
+    assert pool.total_allocs == 6
 
 
 # ---------------------------------------------------------------------------
-# property test: random alloc / free / evict sequences vs a model.  Guarded
-# per-test (not module-level importorskip) so the deterministic API tests
-# above still run on minimal installs without the dev deps.
+# property test: random alloc / grow / evict / share / release / cache
+# sequences vs a model.  Guarded per-test (not module-level importorskip) so
+# the deterministic API tests above still run on minimal installs.
 # ---------------------------------------------------------------------------
 try:
     from hypothesis import given, settings, strategies as st
 
     _hyp_cases = given(
         st.integers(min_value=1, max_value=24),
-        st.lists(st.tuples(st.sampled_from(["alloc", "grow", "evict"]),
-                           st.integers(min_value=0, max_value=7),
-                           st.integers(min_value=1, max_value=6)),
-                 max_size=60),
+        st.lists(
+            st.tuples(
+                st.sampled_from(["alloc", "grow", "evict", "share", "release", "cache"]),
+                st.integers(min_value=0, max_value=7),
+                st.integers(min_value=1, max_value=6),
+            ),
+            max_size=80,
+        ),
     )
 
     def _hyp(fn):
-        return settings(max_examples=60, deadline=None)(_hyp_cases(fn))
+        return settings(max_examples=80, deadline=None)(_hyp_cases(fn))
 except ImportError:  # pragma: no cover - exercised on minimal installs only
+
     def _hyp(fn):
         return pytest.mark.skip(reason="hypothesis not installed")(fn)
 
 
 @_hyp
 def test_random_sequences_never_double_allocate_or_leak(n_blocks, ops):
-    """Any interleaving of request-table alloc, single-block grow, and
-    whole-table evict keeps every block exactly live-or-free, never hands a
-    live block out again, and returns evicted tables in full."""
+    """Any interleaving of request-table alloc, single-block grow,
+    whole-table evict, cross-table SHARE (acquire), single-block release,
+    and cache-parking keeps every block exactly free-or-live-or-parked,
+    never hands a live block out again, matches per-table refcounts, and
+    returns evicted tables in full."""
     pool = BlockPool(n_blocks, 16)
-    tables = {}  # request id -> list of blocks
-    live = set()
+    cached = set()  # model of the trie's pins
+
+    def reclaimer(n):
+        freed = 0
+        for bid in sorted(cached):
+            if freed >= n:
+                break
+            if pool.refcount(bid) == 0:
+                pool.uncache(bid)
+                cached.discard(bid)
+                freed += 1
+        return freed
+
+    pool.set_reclaimer(reclaimer)
+    tables = {}  # request id -> list of blocks (with multiplicity)
+    refs = {}  # block id -> model refcount
+
+    def audit():
+        assert pool.n_live == sum(1 for r in refs.values() if r > 0)
+        parked = sum(1 for b in cached if refs.get(b, 0) == 0)
+        assert pool.n_free + pool.n_live + parked == n_blocks
+        pool.check(tables.values())
+
     for op, rid, n in ops:
         if op == "alloc" and rid not in tables:
             got = pool.alloc(n)
             if got is None:
-                assert pool.n_free < n  # refusal only under real pressure
+                assert pool.n_free + sum(1 for b in cached if refs.get(b, 0) == 0) < n
                 continue
-            assert len(got) == n and not (set(got) & live)  # no double-alloc
-            tables[rid] = got
-            live |= set(got)
+            assert len(got) == n and all(refs.get(b, 0) == 0 for b in got)
+            cached -= set(got)  # reclaimed parked blocks lose their pin
+            tables[rid] = list(got)
+            for b in got:
+                refs[b] = 1
         elif op == "grow" and rid in tables:
             got = pool.alloc(1)
             if got is None:
-                assert pool.n_free == 0
                 continue
-            assert got[0] not in live
-            tables[rid] += got
-            live.add(got[0])
+            assert refs.get(got[0], 0) == 0
+            cached.discard(got[0])
+            tables[rid].append(got[0])
+            refs[got[0]] = 1
+        elif op == "share" and rid in tables and tables[rid]:
+            # pin one of rid's blocks into another table via acquire()
+            donor = tables[rid][n % len(tables[rid])]
+            other = (rid + 1) % 8
+            tables.setdefault(other, [])
+            if donor in tables[other]:
+                continue  # one reference per table in this model
+            pool.acquire(donor)
+            tables[other].append(donor)
+            refs[donor] += 1
+        elif op == "release" and rid in tables and tables[rid]:
+            bid = tables[rid].pop(n % len(tables[rid]))
+            pool.free(bid)
+            refs[bid] -= 1
+        elif op == "cache" and rid in tables and tables[rid]:
+            bid = tables[rid][n % len(tables[rid])]
+            if bid not in cached:
+                pool.mark_cached(bid)
+                cached.add(bid)
         elif op == "evict" and rid in tables:
-            blocks = tables.pop(rid)
-            pool.free_all(blocks)
-            live -= set(blocks)
-        # the allocator agrees with the model after every operation
-        assert pool.n_live == len(live)
-        assert pool.n_free + pool.n_live == n_blocks  # no leak
-        pool.check()
+            for bid in tables.pop(rid):
+                pool.free(bid)
+                refs[bid] -= 1
+        audit()
     for rid in list(tables):
-        pool.free_all(tables.pop(rid))
-    assert pool.n_free == n_blocks  # all tables fully returned
-    pool.check()
+        for bid in tables.pop(rid):
+            pool.free(bid)
+            refs[bid] -= 1
+    assert pool.n_live == 0
+    audit()

@@ -6,12 +6,7 @@ import pytest
 
 from repro.models.attention import AttnConfig, attend, attn_apply, attn_init
 from repro.models.moe import MoEConfig, moe_apply, moe_apply_dense_ref, moe_init
-from repro.models.rglru import (
-    RGLRUConfig,
-    rglru_block_apply,
-    rglru_block_decode,
-    rglru_init,
-)
+from repro.models.rglru import RGLRUConfig, rglru_block_apply, rglru_block_decode, rglru_init
 from repro.models.ssd import SSDConfig, ssd_block_apply, ssd_block_decode, ssd_init, ssd_scan_ref
 
 
@@ -22,8 +17,9 @@ from repro.models.ssd import SSDConfig, ssd_block_apply, ssd_block_decode, ssd_i
 def test_moe_dispatch_matches_dense_ref(rng, router):
     """Scatter/gather dispatch == dense per-token reference when capacity is
     ample (no drops)."""
-    cfg = MoEConfig(d_model=16, n_experts=8, top_k=2, d_ff_expert=8,
-                    router=router, capacity_factor=8.0)
+    cfg = MoEConfig(
+        d_model=16, n_experts=8, top_k=2, d_ff_expert=8, router=router, capacity_factor=8.0
+    )
     p = moe_init(rng, cfg)
     x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 12, 16)) * 0.5
     y, aux = moe_apply(p, x, cfg=cfg, compute_dtype=jnp.float32)
@@ -33,8 +29,9 @@ def test_moe_dispatch_matches_dense_ref(rng, router):
 
 
 def test_moe_shared_expert(rng):
-    cfg = MoEConfig(d_model=16, n_experts=4, top_k=2, d_ff_expert=8,
-                    n_shared_experts=2, capacity_factor=8.0)
+    cfg = MoEConfig(
+        d_model=16, n_experts=4, top_k=2, d_ff_expert=8, n_shared_experts=2, capacity_factor=8.0
+    )
     p = moe_init(rng, cfg)
     x = jax.random.normal(jax.random.fold_in(rng, 1), (1, 6, 16)) * 0.5
     y, _ = moe_apply(p, x, cfg=cfg, compute_dtype=jnp.float32)
@@ -89,16 +86,14 @@ def test_ssd_chunked_matches_sequential(rng, T, chunk):
 
 def test_ssd_decode_continues_full(rng):
     """decode(T+1) from the full pass's final state == full pass over T+1."""
-    cfg = SSDConfig(d_model=16, d_inner=32, n_heads=4, head_dim=8, d_state=8,
-                    conv_width=4, chunk=4)
+    cfg = SSDConfig(d_model=16, d_inner=32, n_heads=4, head_dim=8, d_state=8, conv_width=4, chunk=4)
     p = ssd_init(rng, cfg)
     u = jax.random.normal(jax.random.fold_in(rng, 1), (2, 9, 16)) * 0.5
     y_full, _ = ssd_block_apply(p, u, cfg=cfg, compute_dtype=jnp.float32)
     # run first 8 steps (chunk-aligned), then decode step 9
     y8, cache = ssd_block_apply(p, u[:, :8], cfg=cfg, compute_dtype=jnp.float32)
     y9, _ = ssd_block_decode(p, u[:, 8:9], cache, cfg=cfg, compute_dtype=jnp.float32)
-    np.testing.assert_allclose(np.asarray(y9), np.asarray(y_full[:, 8:9]),
-                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y9), np.asarray(y_full[:, 8:9]), rtol=1e-4, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -111,10 +106,8 @@ def test_rglru_decode_continues_full(rng):
     y_full, _ = rglru_block_apply(p, x, cfg=cfg, compute_dtype=jnp.float32)
     y6, cache = rglru_block_apply(p, x[:, :6], cfg=cfg, compute_dtype=jnp.float32)
     y7, _ = rglru_block_decode(p, x[:, 6:7], cache, cfg=cfg, compute_dtype=jnp.float32)
-    np.testing.assert_allclose(np.asarray(y7), np.asarray(y_full[:, 6:7]),
-                               rtol=1e-4, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(y6), np.asarray(y_full[:, :6]),
-                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y7), np.asarray(y_full[:, 6:7]), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y6), np.asarray(y_full[:, :6]), rtol=1e-4, atol=1e-5)
 
 
 def test_rglru_stability(rng):
@@ -151,8 +144,7 @@ def test_window_masks_restrict_attention(rng):
     k = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, K, hd))
     v = jax.random.normal(jax.random.fold_in(rng, 2), (B, T, K, hd))
     pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
-    out = attend(q, k, v, pos, pos, causal=True, window=jnp.int32(1),
-                 scale=1.0, cap=0.0, q_chunk=0)
+    out = attend(q, k, v, pos, pos, causal=True, window=jnp.int32(1), scale=1.0, cap=0.0, q_chunk=0)
     np.testing.assert_allclose(np.asarray(out[:, :, :, 0]), np.asarray(v), rtol=1e-5)
 
 

@@ -57,8 +57,9 @@ def test_async_save_then_restore(tmp_path, tree):
     mgr.wait()
     restored, meta, step = mgr.restore(jax.eval_shape(lambda: tree))
     assert step == 5 and meta["data"]["step"] == 5
-    np.testing.assert_array_equal(np.asarray(restored["a"]["kernel"]),
-                                  np.asarray(tree["a"]["kernel"]))
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]["kernel"]), np.asarray(tree["a"]["kernel"])
+    )
 
 
 def test_restore_with_shardings(tmp_path, tree):
@@ -67,13 +68,12 @@ def test_restore_with_shardings(tmp_path, tree):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, tree, blocking=True)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    sh = jax.tree_util.tree_map(
-        lambda x: NamedSharding(mesh, P()), jax.eval_shape(lambda: tree)
-    )
+    sh = jax.tree_util.tree_map(lambda x: NamedSharding(mesh, P()), jax.eval_shape(lambda: tree))
     restored, _, _ = mgr.restore(jax.eval_shape(lambda: tree), shardings=sh)
     assert restored["a"]["kernel"].sharding.mesh.shape["data"] == 1
-    np.testing.assert_array_equal(np.asarray(restored["a"]["kernel"]),
-                                  np.asarray(tree["a"]["kernel"]))
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]["kernel"]), np.asarray(tree["a"]["kernel"])
+    )
 
 
 def test_shape_mismatch_raises(tmp_path, tree):

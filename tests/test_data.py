@@ -1,12 +1,7 @@
 """Synthetic data pipeline: determinism, host sharding, resumability."""
 import numpy as np
 
-from repro.data import (
-    SyntheticImages,
-    SyntheticImagesConfig,
-    SyntheticLM,
-    SyntheticLMConfig,
-)
+from repro.data import SyntheticImages, SyntheticImagesConfig, SyntheticLM, SyntheticLMConfig
 
 
 def test_lm_deterministic_in_step_and_seed():
@@ -66,14 +61,15 @@ def test_images_deterministic_templates():
 
 def test_images_class_signal():
     """Same-class images correlate via the shared template."""
-    cfg = SyntheticImagesConfig(n_classes=3, hw=16, channels=1, global_batch=64,
-                                seed=0, snr=3.0)
+    cfg = SyntheticImagesConfig(n_classes=3, hw=16, channels=1, global_batch=64, seed=0, snr=3.0)
     ds = SyntheticImages(cfg)
     batch = ds.peek(0)
     x, y = batch["images"].reshape(64, -1), batch["labels"]
     # mean intra-class cosine similarity > inter-class
     xc = x - x.mean(0)
-    sim = (xc @ xc.T) / (np.linalg.norm(xc, axis=1)[:, None] * np.linalg.norm(xc, axis=1)[None] + 1e-9)
+    sim = (xc @ xc.T) / (
+        np.linalg.norm(xc, axis=1)[:, None] * np.linalg.norm(xc, axis=1)[None] + 1e-9
+    )
     same = sim[y[:, None] == y[None, :]].mean()
     diff = sim[y[:, None] != y[None, :]].mean()
     assert same > diff + 0.1

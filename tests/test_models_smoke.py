@@ -9,13 +9,7 @@ import numpy as np
 import pytest
 
 from repro import configs, core, optim
-from repro.models import (
-    decode_lm,
-    forward_lm,
-    init_caches,
-    init_lm,
-    prefill_lm,
-)
+from repro.models import decode_lm, forward_lm, init_caches, init_lm, prefill_lm
 from repro.train import init_train_state, make_train_step
 
 ARCHS = list(configs.ARCHS)
@@ -46,8 +40,7 @@ def test_train_step_runs(arch, rng):
     params = init_lm(rng, cfg)
     tx = optim.sgd(momentum=0.9)
     scfg = core.SymogConfig(n_bits=2, total_steps=10)
-    step = make_train_step(cfg, tx, core.constant(0.01), symog_cfg=scfg,
-                           compute_dtype=jnp.float32)
+    step = make_train_step(cfg, tx, core.constant(0.01), symog_cfg=scfg, compute_dtype=jnp.float32)
     state = init_train_state(params, tx, scfg)
     state, metrics = jax.jit(step)(state, _batch(cfg, rng))
     assert np.isfinite(float(metrics["loss"]))
@@ -65,15 +58,23 @@ def test_decode_step(arch, rng):
     B, MAX = 2, 32
     caches = init_caches(cfg, B, MAX)
     tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
-    logits, caches = decode_lm(params, caches, tok, jnp.int32(0), cfg,
-                               compute_dtype=jnp.float32)
+    logits, caches = decode_lm(params, caches, tok, jnp.int32(0), cfg, compute_dtype=jnp.float32)
     assert logits.shape == (B, 1, cfg.vocab_size)
     assert not bool(jnp.any(jnp.isnan(logits)))
 
 
-@pytest.mark.parametrize("arch", ["internlm2-1.8b", "mamba2-2.7b", "recurrentgemma-2b",
-                                  "olmoe-1b-7b", "deepseek-v3-671b", "whisper-large-v3",
-                                  "paligemma-3b"])
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "internlm2-1.8b",
+        "mamba2-2.7b",
+        "recurrentgemma-2b",
+        "olmoe-1b-7b",
+        "deepseek-v3-671b",
+        "whisper-large-v3",
+        "paligemma-3b",
+    ],
+)
 def test_prefill_decode_matches_forward(arch, rng):
     """decode(t | prefill(0..t-1)) ≈ forward(0..t)[t] — cache correctness."""
     cfg = configs.get_reduced(arch)
@@ -84,8 +85,8 @@ def test_prefill_decode_matches_forward(arch, rng):
     pbatch["tokens"] = batch["tokens"][:, : T - 1]
     _, caches = prefill_lm(params, pbatch, cfg, max_len=MAX, compute_dtype=jnp.float32)
     pos = T - 1 + (cfg.prefix_len if cfg.family == "vlm" else 0)
-    dl, _ = decode_lm(params, caches, batch["tokens"][:, T - 1 : T], jnp.int32(pos),
-                      cfg, compute_dtype=jnp.float32)
+    tok = batch["tokens"][:, T - 1 : T]
+    dl, _ = decode_lm(params, caches, tok, jnp.int32(pos), cfg, compute_dtype=jnp.float32)
     ref = forward_lm(params, batch, cfg, compute_dtype=jnp.float32).logits[:, T - 1 : T]
     np.testing.assert_allclose(np.asarray(dl), np.asarray(ref), rtol=0.2, atol=2e-2)
 

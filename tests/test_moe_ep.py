@@ -43,7 +43,7 @@ _SCRIPT = textwrap.dedent("""
         def loss(p, x):
             y, _ = moe_apply_ep(p, x, cfg=cfg, compute_dtype=jnp.float32,
                                 capacity_mult=8.0)
-            return jnp.sum(y ** 2)
+            return jnp.sum(y**2)
         g = jax.grad(loss)(p_sh, x_sh)
         gnorm = sum(float(jnp.abs(v).sum()) for v in jax.tree_util.tree_leaves(g))
         assert np.isfinite(gnorm) and gnorm > 0

@@ -56,19 +56,22 @@ def _prompts(cfg, rng, B=2, T=8):
 # ---------------------------------------------------------------------------
 _SWEEP = pytest.mark.slow  # per-arch serving sweep: the slow CI job's bread
 
-@pytest.mark.parametrize("arch,n_bits", [
-    ("internlm2-1.8b", 2),  # fast tier keeps one end-to-end packed engine
-    ("internlm2-1.8b", 4),
-    pytest.param("olmoe-1b-7b", 2, marks=_SWEEP),
-    pytest.param("whisper-large-v3", 2, marks=_SWEEP),
-    pytest.param("recurrentgemma-2b", 2, marks=_SWEEP),
-    pytest.param("mamba2-2.7b", 2, marks=_SWEEP),
-    pytest.param("deepseek-v3-671b", 2, marks=_SWEEP),
-    pytest.param("paligemma-3b", 2, marks=_SWEEP),
-    pytest.param("granite-34b", 2, marks=_SWEEP),
-    pytest.param("gemma2-27b", 2, marks=_SWEEP),
-    pytest.param("gemma3-4b", 2, marks=_SWEEP),
-])
+@pytest.mark.parametrize(
+    "arch,n_bits",
+    [
+        ("internlm2-1.8b", 2),  # fast tier keeps one end-to-end packed engine
+        ("internlm2-1.8b", 4),
+        pytest.param("olmoe-1b-7b", 2, marks=_SWEEP),
+        pytest.param("whisper-large-v3", 2, marks=_SWEEP),
+        pytest.param("recurrentgemma-2b", 2, marks=_SWEEP),
+        pytest.param("mamba2-2.7b", 2, marks=_SWEEP),
+        pytest.param("deepseek-v3-671b", 2, marks=_SWEEP),
+        pytest.param("paligemma-3b", 2, marks=_SWEEP),
+        pytest.param("granite-34b", 2, marks=_SWEEP),
+        pytest.param("gemma2-27b", 2, marks=_SWEEP),
+        pytest.param("gemma3-4b", 2, marks=_SWEEP),
+    ],
+)
 def test_engine_packed_token_exact(arch, n_bits, rng, unpack_backend):
     cfg = configs.get_reduced(arch)
     qt, packed, _ = _pack_and_quant(cfg, rng, n_bits)
@@ -159,8 +162,9 @@ def test_packed_dense_kernel_matches_unpack(rng, n_bits):
     finally:
         set_packed_backend("auto")
     assert y_k.shape == (2, 5, 4, 8) and y_k.dtype == jnp.bfloat16
-    np.testing.assert_allclose(np.asarray(y_k, np.float32),
-                               np.asarray(y_ref, np.float32), atol=0.05, rtol=0.05)
+    np.testing.assert_allclose(
+        np.asarray(y_k, np.float32), np.asarray(y_ref, np.float32), atol=0.05, rtol=0.05
+    )
 
 
 @pytest.mark.parametrize("n_bits", [2, 4])
@@ -207,7 +211,5 @@ def test_packed_scan_slicing_roundtrip(rng):
     def body(carry, pk_l):
         return carry, core.unpack(pk_l, jnp.float32)
 
-    _, per_layer = jax.lax.scan(
-        body, 0, pk, length=L
-    )
+    _, per_layer = jax.lax.scan(body, 0, pk, length=L)
     np.testing.assert_array_equal(np.asarray(per_layer), np.asarray(core.unpack(pk)))

@@ -1,0 +1,261 @@
+"""Automatic prefix cache (repro.serve.prefixcache) over the paged pool.
+
+The §7 contract: enabling ``prefix_cache`` NEVER changes tokens.  A request
+whose prompt prefix is cached pins the existing blocks (refcounted via
+``acquire``), copy-on-writes a partially-matched boundary block, and
+prefills only the uncached tail at a traced start offset — and the result
+is token-identical to the dense ``generate_static`` oracle for both
+``quantize_tree`` and ``pack_tree`` params.  Sharing is restricted to the
+fully-paged tier (all-attention decoders): families with non-paged
+per-row state (recurrent/SSD/ring/cross-kv) or MoE capacity coupling take
+the miss path unchanged, so the flag is a structural no-op there.
+Eviction ordering: cached-but-idle blocks are reclaimed (LRU) before any
+live request is preempted.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, core
+from repro.models.lm import init_lm
+from repro.models.quantized import set_packed_backend
+from repro.serve import Request, ServeEngine
+
+MAX_LEN = 24
+_ENGINES = {}
+
+
+@pytest.fixture
+def unpack_backend():
+    set_packed_backend("unpack")
+    yield
+    set_packed_backend("auto")
+
+
+def _engines(arch):
+    if arch not in _ENGINES:
+        cfg = configs.get_reduced(arch)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        scfg = core.SymogConfig(n_bits=2, total_steps=1)
+        st = core.symog_init(params, scfg)
+        qt = core.quantize_tree(params, st, scfg)
+        packed = core.pack_tree(params, st, scfg)
+        _ENGINES[arch] = (
+            ServeEngine(cfg, qt, max_len=MAX_LEN, compute_dtype=jnp.float32),
+            ServeEngine(cfg, packed, max_len=MAX_LEN, compute_dtype=jnp.float32),
+        )
+    return _ENGINES[arch]
+
+
+def _static_reference(eng, req):
+    batch = {"tokens": jnp.asarray(np.asarray(req.tokens)[None])}
+    if req.extras:
+        batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+    return np.asarray(eng.generate_static(batch, req.max_new_tokens))[0]
+
+
+def _assert_exact(eng, reqs, comps):
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
+
+
+def _prompt(key, n, vocab):
+    return np.asarray(jax.random.randint(key, (n,), 0, vocab), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# correctness sweep: identical prompts, non-aligned overlap, COW divergence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
+def test_identical_prompts_share_and_match_static(tree, rng, unpack_backend):
+    """Two requests with the SAME prompt: the second pins the first's
+    blocks (one fresh block + COW instead of a full table) and both decode
+    token-identically to the dense oracle."""
+    eng = _engines("internlm2-1.8b")[tree == "packed"]
+    prompt = _prompt(rng, 8, eng.cfg.vocab_size)
+    reqs = [Request(tokens=prompt, max_new_tokens=6), Request(tokens=prompt, max_new_tokens=6)]
+    comps, sched = eng.serve(
+        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+    )
+    _assert_exact(eng, reqs, comps)
+    assert sched.stats["prefix_hits"] == 1 and sched.stats["prefix_misses"] == 1
+    assert sched.stats["prefix_hit_tokens"] == 7  # capped at lp-1: one tail token
+    # the hit attached 1 full block and COW'd the boundary block: strictly
+    # fewer fresh allocations than the same workload without sharing
+    _, sched_off = eng.serve(
+        reqs, n_slots=2, block_size=4, prefix_cache=False, return_scheduler=True
+    )
+    assert sched.pool.total_allocs < sched_off.pool.total_allocs
+    sched.pool.check()
+
+
+@pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
+def test_partial_overlap_non_block_aligned(tree, rng, unpack_backend):
+    """Prompts sharing a 9-token prefix with block_size=4: the match ends
+    mid-block (9 = 2 blocks + 1 row), forcing a COW of the third block —
+    both streams stay token-identical to the oracle."""
+    eng = _engines("internlm2-1.8b")[tree == "packed"]
+    base = _prompt(rng, 14, eng.cfg.vocab_size)
+    other = np.concatenate([base[:9], (base[9:12] + 1) % eng.cfg.vocab_size]).astype(np.int32)
+    reqs = [Request(tokens=base, max_new_tokens=5), Request(tokens=other, max_new_tokens=5)]
+    comps, sched = eng.serve(
+        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+    )
+    _assert_exact(eng, reqs, comps)
+    assert sched.stats["prefix_hits"] == 1
+    assert sched.stats["prefix_hit_tokens"] == 9
+    assert sched.stats["prefix_cow_copies"] == 1
+    sched.pool.check()
+
+
+@pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
+def test_cow_divergence_mid_block(tree, rng, unpack_backend):
+    """COW divergence: both requests share a partially-filled block, then
+    append different tokens into their own copies mid-block.  Serving
+    CONCURRENTLY (2 slots) means the writes interleave step by step — any
+    aliasing between the copies would corrupt one stream."""
+    eng = _engines("internlm2-1.8b")[tree == "packed"]
+    prompt = _prompt(rng, 6, eng.cfg.vocab_size)  # 1 full block + 2 rows at block 4
+    reqs = [
+        Request(tokens=prompt, max_new_tokens=8),
+        Request(tokens=prompt, max_new_tokens=8),
+    ]
+    comps, sched = eng.serve(
+        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+    )
+    _assert_exact(eng, reqs, comps)
+    assert sched.stats["prefix_cow_copies"] == 1
+    # identical greedy prompts diverge only if sampling does — with greedy
+    # decode both emit the same stream; the COW guarantee under test is
+    # that the SHARED rows fed both requests while each wrote its own copy
+    assert comps[0].tokens == comps[1].tokens
+    sched.pool.check()
+
+
+def test_cow_divergence_with_sampling(rng, unpack_backend):
+    """Same mid-block COW shape, but temperature sampling makes the two
+    streams actually diverge (request-keyed seeds) — each must match its
+    own single-request replay, proving the copies never alias."""
+    eng = _engines("internlm2-1.8b")[0]
+    prompt = _prompt(rng, 6, eng.cfg.vocab_size)
+    reqs = [Request(tokens=prompt, max_new_tokens=8) for _ in range(2)]
+    kw = dict(n_slots=2, block_size=4, temperature=0.9, top_k=7, seed=11)
+    comps, sched = eng.serve(reqs, prefix_cache=True, return_scheduler=True, **kw)
+    assert sched.stats["prefix_cow_copies"] == 1
+    assert comps[0].tokens != comps[1].tokens  # request-keyed streams diverged
+    # oracle: the same workload with the cache off (per-request exactness
+    # of the scheduler without sharing is proven in test_scheduler.py)
+    ref = eng.serve(reqs, prefix_cache=False, **kw)
+    assert [c.tokens for c in comps] == [c.tokens for c in ref]
+    sched.pool.check()
+
+
+def test_eviction_runs_before_preemption(rng, unpack_backend):
+    """A pool sized for ~one request serving distinct prompts one slot at a
+    time: every admission needs the whole pool, so cached-but-idle blocks
+    from finished requests must be LRU-evicted — and because reclaim runs
+    inside alloc, NO preemption ever fires."""
+    eng = _engines("internlm2-1.8b")[0]
+    prompts = [_prompt(jax.random.fold_in(rng, i), 8, eng.cfg.vocab_size) for i in range(5)]
+    reqs = [Request(tokens=p, max_new_tokens=6) for p in prompts]
+    comps, sched = eng.serve(
+        reqs, n_slots=1, block_size=4, n_blocks=6, prefix_cache=True, return_scheduler=True
+    )
+    _assert_exact(eng, reqs, comps)
+    assert sched.stats["prefix_evicted_blocks"] > 0
+    assert sched.stats["preemptions"] == 0
+    sched.pool.check()
+
+
+def test_hit_after_owner_finished_revives_parked_blocks(rng, unpack_backend):
+    """Cached-free revival: the first request finishes (blocks parked at
+    refcount 0), then an identical prompt arrives later and re-pins the
+    parked blocks instead of re-prefilling them."""
+    eng = _engines("internlm2-1.8b")[0]
+    prompt = _prompt(rng, 8, eng.cfg.vocab_size)
+    reqs = [
+        Request(tokens=prompt, max_new_tokens=3),
+        Request(tokens=prompt, max_new_tokens=5, arrival=10),
+    ]
+    comps, sched = eng.serve(
+        reqs, n_slots=1, block_size=4, prefix_cache=True, return_scheduler=True
+    )
+    _assert_exact(eng, reqs, comps)
+    assert sched.stats["prefix_hits"] == 1
+    assert sched.stats["idle_steps"] > 0  # the second request really came later
+    sched.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# tier boundaries
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["olmoe-1b-7b", "recurrentgemma-2b", "mamba2-2.7b"])
+def test_ineligible_families_bypass(arch, rng, unpack_backend):
+    """MoE / hybrid-ring / SSM families cannot share (non-paged per-row
+    state, capacity coupling): the flag must be structurally inert and the
+    output unchanged."""
+    eng = _engines(arch)[0]
+    prompt = _prompt(rng, 8, eng.cfg.vocab_size)
+    reqs = [Request(tokens=prompt, max_new_tokens=4) for _ in range(2)]
+    comps, sched = eng.serve(
+        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+    )
+    assert sched.prefix is None
+    assert sched.stats["prefix_hits"] == 0 and sched.stats["prefix_misses"] == 0
+    _assert_exact(eng, reqs, comps)
+
+
+def test_fingerprints_split_artifacts(unpack_backend):
+    """quantize_tree and pack_tree artifacts must never cross-share: their
+    fingerprints differ, and a cache keyed to one rejects the other."""
+    e_q, e_p = _engines("internlm2-1.8b")
+    assert e_q.params_fingerprint() != e_p.params_fingerprint()
+    assert e_q.params_fingerprint() == e_q.params_fingerprint()  # stable
+    from repro.serve import BlockPool, PrefixCache
+
+    cache = PrefixCache(BlockPool(4, 4), 4, e_q.params_fingerprint())
+    with pytest.raises(ValueError):
+        cache.match([1, 2, 3, 4], e_p.params_fingerprint())
+
+
+def test_preempted_restart_hits_its_own_blocks(rng, unpack_backend):
+    """A preempted request's blocks park in the cache; its from-scratch
+    restart re-attaches them (or re-prefills if reclaimed) and still
+    replays the identical stream."""
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = [
+        Request(
+            tokens=_prompt(jax.random.fold_in(rng, i), 8, eng.cfg.vocab_size),
+            max_new_tokens=16,
+        )
+        for i in range(2)
+    ]
+    comps, sched = eng.serve(
+        reqs, n_slots=2, block_size=4, n_blocks=6, prefix_cache=True, return_scheduler=True
+    )
+    assert sched.stats["preemptions"] >= 1
+    _assert_exact(eng, reqs, comps)
+    sched.pool.check()
+
+
+def test_admission_timing_surfaces_hits(rng, unpack_backend):
+    """time_admissions records per-admission wall time and hit offsets —
+    the serve_prefix_cache bench's TTFT source."""
+    eng = _engines("internlm2-1.8b")[0]
+    prompt = _prompt(rng, 8, eng.cfg.vocab_size)
+    reqs = [Request(tokens=prompt, max_new_tokens=3) for _ in range(3)]
+    comps, sched = eng.serve(
+        reqs,
+        n_slots=3,
+        block_size=4,
+        prefix_cache=True,
+        time_admissions=True,
+        return_scheduler=True,
+    )
+    _assert_exact(eng, reqs, comps)
+    assert len(sched.admit_times) == 3
+    assert sched.admit_times[0][2] == 0  # first admission was a miss
+    assert all(start > 0 for _, _, start in sched.admit_times[1:])
+    assert all(dt > 0 for _, dt, _ in sched.admit_times)

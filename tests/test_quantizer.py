@@ -88,9 +88,7 @@ def test_ste_gradient_identity():
     x = jnp.array([0.3, -0.8, 1.7])
     g = jax.grad(lambda v: core.quantize_ste(v, 0.5, 2).sum())(x)
     np.testing.assert_allclose(g, jnp.ones_like(x))
-    np.testing.assert_allclose(
-        core.quantize_ste(x, 0.5, 2), core.quantize(x, 0.5, 2)
-    )
+    np.testing.assert_allclose(core.quantize_ste(x, 0.5, 2), core.quantize(x, 0.5, 2))
 
 
 def test_reg_grad_is_scaled_error():
@@ -100,7 +98,5 @@ def test_reg_grad_is_scaled_error():
     g = core.layer_reg_grad(w, d, 2)
     np.testing.assert_allclose(g, (2.0 / w.size) * (w - core.quantize(w, d, 2)), rtol=1e-6)
     # matches autodiff of R with stop_gradient on Q
-    r = lambda w: (1.0 / w.size) * jnp.sum(
-        (w - jax.lax.stop_gradient(core.quantize(w, d, 2))) ** 2
-    )
+    r = lambda w: (1.0 / w.size) * jnp.sum((w - jax.lax.stop_gradient(core.quantize(w, d, 2))) ** 2)
     np.testing.assert_allclose(g, jax.grad(r)(w), rtol=1e-6)

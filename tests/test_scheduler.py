@@ -55,8 +55,7 @@ def _engines(arch):
     return _ENGINES[arch]
 
 
-def _ragged_requests(cfg, key, lens=(3, 6, 4, 5, 7), budgets=(5, 3, 6, 4, 2),
-                     **kw):
+def _ragged_requests(cfg, key, lens=(3, 6, 4, 5, 7), budgets=(5, 3, 6, 4, 2), **kw):
     return [
         Request(
             tokens=np.asarray(jax.random.randint(jax.random.fold_in(key, i),
@@ -77,11 +76,14 @@ def _static_reference(eng, req):
 # ---------------------------------------------------------------------------
 # token-exactness: ragged continuous batch == per-request static decode
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("arch", [
-    "internlm2-1.8b",  # attention family
-    pytest.param("olmoe-1b-7b", marks=pytest.mark.slow),  # MoE routing
-    pytest.param("recurrentgemma-2b", marks=pytest.mark.slow),  # recurrent
-])
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "internlm2-1.8b",  # attention family
+        pytest.param("olmoe-1b-7b", marks=pytest.mark.slow),  # MoE routing
+        pytest.param("recurrentgemma-2b", marks=pytest.mark.slow),  # recurrent
+    ],
+)
 @pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
 def test_serve_matches_per_request_static(arch, tree, rng, unpack_backend):
     eng = _engines(arch)[tree == "packed"]
@@ -89,13 +91,13 @@ def test_serve_matches_per_request_static(arch, tree, rng, unpack_backend):
     comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
     assert [c.index for c in comps] == list(range(len(reqs)))
     for req, comp in zip(reqs, comps):
-        np.testing.assert_array_equal(
-            np.asarray(comp.tokens), _static_reference(eng, req))
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
         assert comp.finish_reason == "length"
         assert comp.prompt_len == len(req.tokens)
     # ragged early exit actually saved decode steps vs the static loop
-    static_steps = sum(max(r.max_new_tokens for r in reqs[lo : lo + 2])
-                      for lo in range(0, len(reqs), 2))
+    static_steps = sum(
+        max(r.max_new_tokens for r in reqs[lo : lo + 2]) for lo in range(0, len(reqs), 2)
+    )
     assert sched.stats["decode_steps"] < static_steps
 
 
@@ -104,8 +106,9 @@ def test_generate_wrapper_matches_static_loop(rng, unpack_backend):
     uniform-batch greedy loop token for token."""
     eng = _engines("internlm2-1.8b")[0]
     batch = {"tokens": jax.random.randint(rng, (3, 6), 0, eng.cfg.vocab_size)}
-    np.testing.assert_array_equal(np.asarray(eng.generate(batch, 5)),
-                                  np.asarray(eng.generate_static(batch, 5)))
+    np.testing.assert_array_equal(
+        np.asarray(eng.generate(batch, 5)), np.asarray(eng.generate_static(batch, 5))
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -152,8 +155,7 @@ def test_ragged_arrivals_idle_ticks(rng, unpack_backend):
     comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
     assert sched.stats["idle_steps"] > 0
     for req, comp in zip(reqs, comps):
-        np.testing.assert_array_equal(np.asarray(comp.tokens),
-                                      _static_reference(eng, req))
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
 
 
 def test_due_requests_admit_past_waiting_head(rng, unpack_backend):
@@ -166,11 +168,9 @@ def test_due_requests_admit_past_waiting_head(rng, unpack_backend):
     admit_order = [r for _, kind, r, _ in sched.events if kind == "admit"]
     assert admit_order[:2] == [1, 2]  # due work ran first, in FIFO order
     assert admit_order[-1] == 0  # the head still ran once due
-    assert any(step >= 40 for step, kind, r, _ in sched.events
-               if kind == "admit" and r == 0)
+    assert any(step >= 40 for step, kind, r, _ in sched.events if kind == "admit" and r == 0)
     for req, comp in zip(reqs, comps):
-        np.testing.assert_array_equal(np.asarray(comp.tokens),
-                                      _static_reference(eng, req))
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
 
 
 # ---------------------------------------------------------------------------
@@ -186,11 +186,9 @@ def test_admission_compiles_log_many_traces(rng, unpack_backend):
     assert len(comps) == 16
     assert sched.stats["admission_traces"] <= math.floor(math.log2(MAX_LEN)) + 1
     # compiles are engine-memoized: never more than the shapes this run used
-    assert (sched.stats["admission_trace_compiles"]
-            <= sched.stats["admission_traces"])
+    assert sched.stats["admission_trace_compiles"] <= sched.stats["admission_traces"]
     for req, comp in zip(reqs, comps):
-        np.testing.assert_array_equal(np.asarray(comp.tokens),
-                                      _static_reference(eng, req))
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
 
 
 def test_full_length_prompt_at_block_multiple_admits(rng, unpack_backend):
@@ -211,7 +209,8 @@ def test_full_length_prompt_at_block_multiple_admits(rng, unpack_backend):
         assert sched.pool.n_live == 0
         np.testing.assert_array_equal(
             np.asarray(comps[0].tokens),
-            _static_reference(eng, dataclasses.replace(reqs[0], max_new_tokens=1)))
+            _static_reference(eng, dataclasses.replace(reqs[0], max_new_tokens=1)),
+        )
 
 
 def test_small_blocks_grow_tables_token_exact(rng, unpack_backend):
@@ -221,8 +220,7 @@ def test_small_blocks_grow_tables_token_exact(rng, unpack_backend):
     reqs = _ragged_requests(eng.cfg, rng, lens=(3, 6, 4, 5), budgets=(8, 6, 9, 7))
     comps, sched = eng.serve(reqs, n_slots=2, block_size=4, return_scheduler=True)
     for req, comp in zip(reqs, comps):
-        np.testing.assert_array_equal(np.asarray(comp.tokens),
-                                      _static_reference(eng, req))
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
     assert sched.pool.peak_live > 2  # growth actually happened
     assert sched.pool.n_live == 0  # every block returned at drain
 
@@ -233,12 +231,10 @@ def test_pool_exhaustion_preempts_and_replays_exactly(rng, unpack_backend):
     token stream (greedy determinism / (request,step)-keyed seeds)."""
     eng = _engines("internlm2-1.8b")[0]
     reqs = _ragged_requests(eng.cfg, rng, lens=(8, 8), budgets=(16, 16))
-    comps, sched = eng.serve(reqs, n_slots=2, block_size=4, n_blocks=6,
-                             return_scheduler=True)
+    comps, sched = eng.serve(reqs, n_slots=2, block_size=4, n_blocks=6, return_scheduler=True)
     assert sched.stats["preemptions"] >= 1
     for req, comp in zip(reqs, comps):
-        np.testing.assert_array_equal(np.asarray(comp.tokens),
-                                      _static_reference(eng, req))
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
         assert comp.finish_reason == "length"
     assert sched.pool.n_live == 0
 
@@ -262,38 +258,62 @@ def test_latency_stats_from_completions(rng, unpack_backend):
 # slow tier: paged serve() vs dense static oracle, all 10 archs, qt + packed
 # ---------------------------------------------------------------------------
 @pytest.mark.slow
-@pytest.mark.parametrize("arch", [
-    "internlm2-1.8b", "olmoe-1b-7b", "whisper-large-v3", "recurrentgemma-2b",
-    "mamba2-2.7b", "deepseek-v3-671b", "paligemma-3b", "granite-34b",
-    "gemma2-27b", "gemma3-4b",
-])
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "internlm2-1.8b",
+        "olmoe-1b-7b",
+        "whisper-large-v3",
+        "recurrentgemma-2b",
+        "mamba2-2.7b",
+        "deepseek-v3-671b",
+        "paligemma-3b",
+        "granite-34b",
+        "gemma2-27b",
+        "gemma3-4b",
+    ],
+)
 @pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
 def test_paged_serve_matches_dense_static_all_archs(arch, tree, rng, unpack_backend):
     """The acceptance sweep: the paged block pool (small blocks, growth,
-    bucketed admission) reproduces the dense-cache static loop token for
-    token on every family, for quantize_tree and pack_tree params."""
+    bucketed admission) — WITH the prefix cache enabled — reproduces the
+    dense-cache static loop token for token on every family, for
+    quantize_tree and pack_tree params.  The workload repeats one prompt
+    and shares a partial prefix so the fully-paged tier actually exercises
+    attach + COW + tail prefill; non-eligible families bypass structurally
+    (tests/test_prefix_cache.py pins that) and must stay exact too."""
     cfg = configs.get_reduced(arch)
     params = init_lm(jax.random.PRNGKey(0), cfg)
     scfg = core.SymogConfig(n_bits=2, total_steps=1)
     st = core.symog_init(params, scfg)
-    tree_params = (core.pack_tree(params, st, scfg) if tree == "packed"
-                   else core.quantize_tree(params, st, scfg))
+    if tree == "packed":
+        tree_params = core.pack_tree(params, st, scfg)
+    else:
+        tree_params = core.quantize_tree(params, st, scfg)
     max_len = MAX_LEN + (cfg.prefix_len if cfg.family == "vlm" else 0)
     eng = ServeEngine(cfg, tree_params, max_len=max_len, compute_dtype=jnp.float32)
 
     extras = None
     if cfg.family == "encdec":
-        extras = {"frames": np.asarray(
-            jax.random.normal(rng, (1, cfg.encoder_len, cfg.d_model)) * 0.1)}
+        frames = jax.random.normal(rng, (1, cfg.encoder_len, cfg.d_model)) * 0.1
+        extras = {"frames": np.asarray(frames)}
     if cfg.family == "vlm":
-        extras = {"patches": np.asarray(
-            jax.random.normal(rng, (1, cfg.prefix_len, cfg.d_model)) * 0.1)}
-    reqs = _ragged_requests(cfg, rng, lens=(3, 6, 4), budgets=(5, 3, 6),
-                            extras=extras)
-    comps = eng.serve(reqs, n_slots=2, block_size=4)
+        patches = jax.random.normal(rng, (1, cfg.prefix_len, cfg.d_model)) * 0.1
+        extras = {"patches": np.asarray(patches)}
+    reqs = _ragged_requests(cfg, rng, lens=(3, 6, 4), budgets=(5, 3, 6), extras=extras)
+    # prefix-sharing shapes: an exact repeat of request 1's prompt and a
+    # 5-token partial overlap with it (non-block-aligned at block_size=4)
+    reqs.append(dataclasses.replace(reqs[1], max_new_tokens=4))
+    overlap = np.concatenate([np.asarray(reqs[1].tokens)[:5], np.asarray([3], np.int32)])
+    reqs.append(dataclasses.replace(reqs[1], tokens=overlap, max_new_tokens=5))
+    comps, sched = eng.serve(
+        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+    )
     for req, comp in zip(reqs, comps):
-        np.testing.assert_array_equal(
-            np.asarray(comp.tokens), _static_reference(eng, req))
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
+    if sched.prefix is not None:  # the fully-paged tier really shared
+        assert sched.stats["prefix_hits"] >= 2
+        assert sched.stats["prefix_cow_copies"] >= 1
 
 
 # ---------------------------------------------------------------------------
@@ -323,13 +343,12 @@ def test_vector_pos_matches_scalar_pos(rng, unpack_backend):
     cfg = eng.cfg
     B, T = 2, 6
     batch = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
-    _, caches = prefill_lm(eng.params, batch, cfg, max_len=MAX_LEN,
-                           compute_dtype=jnp.float32)
+    _, caches = prefill_lm(eng.params, batch, cfg, max_len=MAX_LEN, compute_dtype=jnp.float32)
     tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
-    l_s, c_s = decode_lm(eng.params, caches, tok, jnp.int32(T), cfg,
-                         compute_dtype=jnp.float32)
-    l_v, c_v = decode_lm(eng.params, caches, tok, jnp.full((B,), T, jnp.int32),
-                         cfg, compute_dtype=jnp.float32)
+    l_s, c_s = decode_lm(eng.params, caches, tok, jnp.int32(T), cfg, compute_dtype=jnp.float32)
+    l_v, c_v = decode_lm(
+        eng.params, caches, tok, jnp.full((B,), T, jnp.int32), cfg, compute_dtype=jnp.float32
+    )
     np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_v))
     for a, b in zip(jax.tree_util.tree_leaves(c_s), jax.tree_util.tree_leaves(c_v)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -342,22 +361,34 @@ def test_active_mask_freezes_evicted_rows(rng, unpack_backend):
     cfg = eng.cfg
     B, T = 2, 6
     batch = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
-    _, caches = prefill_lm(eng.params, batch, cfg, max_len=MAX_LEN,
-                           compute_dtype=jnp.float32)
+    _, caches = prefill_lm(eng.params, batch, cfg, max_len=MAX_LEN, compute_dtype=jnp.float32)
     tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
     pos = jnp.full((B,), T, jnp.int32)
-    l_all, _ = decode_lm(eng.params, caches, tok, pos, cfg,
-                         compute_dtype=jnp.float32,
-                         active=jnp.asarray([True, True]))
-    l_one, c_one = decode_lm(eng.params, caches, tok, pos, cfg,
-                             compute_dtype=jnp.float32,
-                             active=jnp.asarray([True, False]))
+    l_all, _ = decode_lm(
+        eng.params,
+        caches,
+        tok,
+        pos,
+        cfg,
+        compute_dtype=jnp.float32,
+        active=jnp.asarray([True, True]),
+    )
+    l_one, c_one = decode_lm(
+        eng.params,
+        caches,
+        tok,
+        pos,
+        cfg,
+        compute_dtype=jnp.float32,
+        active=jnp.asarray([True, False]),
+    )
     np.testing.assert_array_equal(np.asarray(l_all[0]), np.asarray(l_one[0]))
     from repro.models.lm import scan_groups
 
     for g in scan_groups(cfg):  # batch axis: 1 for scan-stacked groups
         axis = 1 if g.stacked else 0
         row = lambda leaf: np.asarray(jnp.take(leaf, jnp.asarray([1]), axis=axis))
-        for old, new in zip(jax.tree_util.tree_leaves(caches[g.name]),
-                            jax.tree_util.tree_leaves(c_one[g.name])):
+        leaves_old = jax.tree_util.tree_leaves(caches[g.name])
+        leaves_new = jax.tree_util.tree_leaves(c_one[g.name])
+        for old, new in zip(leaves_old, leaves_new):
             np.testing.assert_array_equal(row(old), row(new))

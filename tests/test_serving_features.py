@@ -18,21 +18,28 @@ def _run(cfg, rng, T=8, MAX=32):
     pb = dict(batch)
     pb["tokens"] = batch["tokens"][:, : T - 1]
     _, caches = prefill_lm(params, pb, cfg, max_len=MAX, compute_dtype=jnp.float32)
-    dl, _ = decode_lm(params, caches, batch["tokens"][:, T - 1 : T], jnp.int32(T - 1),
-                      cfg, compute_dtype=jnp.float32)
+    tok = batch["tokens"][:, T - 1 : T]
+    dl, _ = decode_lm(params, caches, tok, jnp.int32(T - 1), cfg, compute_dtype=jnp.float32)
     ref = forward_lm(params, batch, cfg, compute_dtype=jnp.float32).logits[:, T - 1 : T]
     return np.asarray(dl), np.asarray(ref)
 
 
-@pytest.mark.parametrize("arch", [
-    "gemma3-4b",
-    "internlm2-1.8b",
-    pytest.param("deepseek-v3-671b", marks=pytest.mark.xfail(
-        strict=False,
-        reason="pre-seed failure: MLA absorbed decode amplifies the int8 "
-        "fixed-point KV error past the 0.25·scale logit bound; tracked "
-        "since the seed commit")),
-])
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "gemma3-4b",
+        "internlm2-1.8b",
+        pytest.param(
+            "deepseek-v3-671b",
+            marks=pytest.mark.xfail(
+                strict=False,
+                reason="pre-seed failure: MLA absorbed decode amplifies the int8 "
+                "fixed-point KV error past the 0.25·scale logit bound; tracked "
+                "since the seed commit",
+            ),
+        ),
+    ],
+)
 def test_int8_fp_kv_cache_decode(arch, rng):
     """int8 fixed-point KV cache: argmax-identical, small logit error."""
     cfg = dataclasses.replace(configs.get_reduced(arch), kv_cache_dtype="int8_fp")
@@ -71,11 +78,11 @@ def test_ring_decode_matches_forward_past_window(rng):
     caches = init_caches(cfg, B, T)
     outs = []
     for t in range(T):
-        logits, caches = decode_lm(params, caches, toks[:, t : t + 1], jnp.int32(t),
-                                   cfg, compute_dtype=jnp.float32)
+        logits, caches = decode_lm(
+            params, caches, toks[:, t : t + 1], jnp.int32(t), cfg, compute_dtype=jnp.float32
+        )
         outs.append(np.asarray(logits[:, 0]))
-    ref = np.asarray(forward_lm(params, {"tokens": toks}, cfg,
-                                compute_dtype=jnp.float32).logits)
+    ref = np.asarray(forward_lm(params, {"tokens": toks}, cfg, compute_dtype=jnp.float32).logits)
     np.testing.assert_allclose(np.stack(outs, 1), ref, rtol=0.05, atol=5e-3)
 
 
@@ -89,7 +96,9 @@ def test_packed_params_tree_decode(rng):
     packed = core.pack_tree(params, st, scfg)
     unpacked = jax.tree_util.tree_map(
         lambda l: core.unpack(l, jnp.float32) if isinstance(l, core.Packed) else l,
-        packed, is_leaf=lambda l: isinstance(l, core.Packed))
+        packed,
+        is_leaf=lambda l: isinstance(l, core.Packed),
+    )
     qt = core.quantize_tree(params, st, scfg)
     B = 2
     toks = jax.random.randint(rng, (B, 4), 0, cfg.vocab_size)

@@ -85,8 +85,9 @@ def test_quantize_then_pack_consistent(params):
     )
     # quantized values are exact fixed points of the quantizer
     qt2 = core.quantize_tree(qt, st, cfg)
-    np.testing.assert_array_equal(np.asarray(qt2["dense"]["kernel"]),
-                                  np.asarray(qt["dense"]["kernel"]))
+    np.testing.assert_array_equal(
+        np.asarray(qt2["dense"]["kernel"]), np.asarray(qt["dense"]["kernel"])
+    )
 
 
 def test_symog_state_is_pytree(params):

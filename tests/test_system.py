@@ -11,12 +11,7 @@ import numpy as np
 import pytest
 
 from repro import core, optim
-from repro.data import (
-    SyntheticImages,
-    SyntheticImagesConfig,
-    SyntheticLM,
-    SyntheticLMConfig,
-)
+from repro.data import SyntheticImages, SyntheticImagesConfig, SyntheticLM, SyntheticLMConfig
 from repro.models.cnn import CNNConfig, cnn_init
 from repro.models.lm import init_lm
 from repro.nn.tree import flatten_with_paths
@@ -33,9 +28,9 @@ from repro.train import (
 def lenet_run():
     """Pretrain float LeNet on synthetic digits, then SYMOG-finetune."""
     cfg = CNNConfig("lenet", "lenet5", in_channels=1, n_classes=10, input_hw=28)
-    data = SyntheticImages(SyntheticImagesConfig(
-        n_classes=10, hw=28, channels=1, global_batch=64, snr=0.6, seed=1
-    ))
+    data = SyntheticImages(
+        SyntheticImagesConfig(n_classes=10, hw=28, channels=1, global_batch=64, snr=0.6, seed=1)
+    )
     key = jax.random.PRNGKey(0)
     params, bn = cnn_init(key, cfg)
     tx = optim.sgd(momentum=0.9, nesterov=True)
@@ -52,13 +47,11 @@ def lenet_run():
     scfg = core.SymogConfig(n_bits=2, total_steps=TOTAL)
     sst = core.symog_init(st.params, scfg)
     step_s = jax.jit(make_cnn_train_step(cfg, tx, lr, symog_cfg=scfg))
-    st2 = CNNTrainState(st.params, st.bn_state, tx.init(st.params), sst,
-                        jnp.zeros((), jnp.int32))
+    st2 = CNNTrainState(st.params, st.bn_state, tx.init(st.params), sst, jnp.zeros((), jnp.int32))
     switch0 = core.mode_tree(st2.params, sst, scfg)
     for _ in range(TOTAL):
         st2, _ = step_s(st2, next(data))
-    return dict(cfg=cfg, data=data, float_st=st, symog_st=st2, scfg=scfg, sst=sst,
-                switch0=switch0)
+    return dict(cfg=cfg, data=data, float_st=st, symog_st=st2, scfg=scfg, sst=sst, switch0=switch0)
 
 
 def _acc(cfg, params, bn, data, n=10):
@@ -151,15 +144,16 @@ def test_lm_symog_training_loss_decreases(rng):
     from repro import configs
 
     cfg = configs.get_reduced("internlm2-1.8b")
-    data = SyntheticLM(SyntheticLMConfig(
-        vocab_size=cfg.vocab_size, seq_len=32, global_batch=16, noise=0.02
-    ))
+    data = SyntheticLM(
+        SyntheticLMConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=16, noise=0.02)
+    )
     params = init_lm(rng, cfg)
     tx = optim.chain(optim.clip_by_global_norm(1.0), optim.sgd(momentum=0.9))
     TOTAL = 220
     scfg = core.SymogConfig(n_bits=2, total_steps=TOTAL, lambda0=1.0)
-    step = jax.jit(make_train_step(cfg, tx, core.constant(0.05),
-                                   symog_cfg=scfg, compute_dtype=jnp.float32))
+    step = jax.jit(
+        make_train_step(cfg, tx, core.constant(0.05), symog_cfg=scfg, compute_dtype=jnp.float32)
+    )
     state = init_train_state(params, tx, scfg)
     losses = []
     for _ in range(TOTAL):
