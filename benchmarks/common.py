@@ -4,7 +4,7 @@ Every Table-1 benchmark runs the same three-way comparison the paper runs:
   float baseline  vs  SYMOG N-bit (train→post-quantize)  vs  naive post-quant
 on a deterministic synthetic stand-in for the dataset (offline container).
 Numbers are RELATIVE reproductions — the ordering/gap pattern is the claim
-under test, not absolute CIFAR error rates (DESIGN.md §8).
+under test, not absolute CIFAR error rates.
 """
 from __future__ import annotations
 
@@ -90,18 +90,32 @@ def run_symog_protocol(
 RESULTS: list = []
 
 
-def emit(name: str, us_per_call: float, derived: str, ref_us: float = 0.0, **metrics) -> None:
+def emit(
+    name: str,
+    us_per_call: float,
+    derived: str,
+    ref_us: float = 0.0,
+    repeats: int = 0,
+    spread=None,
+    **metrics,
+) -> None:
     """The harness CSV contract: name,us_per_call,derived.  Extra numeric
     ``metrics`` ride along into the JSON artifact (e.g. speedup floors).
     ``ref_us``: a reference-workload time measured ADJACENT to this entry —
     the regression gate compares us_per_call/ref_us ratios, which cancels
-    shared-runner speed swings (they hit entry and reference alike)."""
+    shared-runner speed swings (they hit entry and reference alike).
+    ``repeats``/``spread``: gated entries report the median of N repeated
+    measurements plus the observed min/max, so a flaky floor can be triaged
+    from the JSON artifact instead of re-running the bench (they are
+    informational — compare_bench gates on ``metrics`` only)."""
     RESULTS.append(
         {
             "name": name,
             "us_per_call": us_per_call,
             "derived": derived,
             "ref_us": ref_us,
+            "repeats": repeats,
+            "spread": spread or {},
             "metrics": metrics,
         }
     )

@@ -154,6 +154,7 @@ def run() -> None:
     run_serve_bench()
     run_capacity_bench()
     run_prefix_cache_bench()
+    run_speculative_bench()
 
 
 def run_serve_bench() -> None:
@@ -228,29 +229,38 @@ def run_serve_bench() -> None:
 
         run_static()  # warm both trace sets
         run_continuous()
-        # INTERLEAVED best-of-3: a co-tenant burst spanning one arm's runs
-        # would skew the gated speedup ratio; alternating S,C,S,C,S,C puts
-        # both arms in the same noise regime, and min-of-3 drops the bursts
+        # INTERLEAVED median-of-5: a co-tenant burst spanning one arm's runs
+        # would skew the gated speedup ratio; alternating S,C,S,C,... puts
+        # both arms in the same noise regime, per-round PAIRED ratios keep
+        # them there, and the median drops the burst rounds entirely (the
+        # min-of-3 this replaces still let one lucky/unlucky pairing set
+        # the gated number — the repeated floor re-commits of PR 3-4)
+        n_rep = 5
         ts, tc = [], []
-        for _ in range(3):
+        for _ in range(n_rep):
             ts.append(timed(run_static))
             tc.append(timed(run_continuous))
-        t_static, t_cont = min(ts), min(tc)
+        ratios = sorted(s / c for s, c in zip(ts, tc))
+        speedup = ratios[n_rep // 2]
+        t_static, t_cont = float(np.median(ts)), float(np.median(tc))
         r_static = r_cont = _ref_us()
-        speedup = t_static / t_cont
         emit(
             f"serve_static_ragged_{label}",
             t_static * 1e6,
             f"{useful / t_static:.1f} useful tok/s "
             f"({len(reqs)} reqs x batches-of-{slots} to slowest member)",
             ref_us=r_static,
+            repeats=n_rep,
+            spread={"us_min": round(min(ts) * 1e6, 1), "us_max": round(max(ts) * 1e6, 1)},
         )
         emit(
             f"serve_continuous_ragged_{label}",
             t_cont * 1e6,
-            f"{useful / t_cont:.1f} useful tok/s; "
-            f"{speedup:.2f}x static (target >= {floors[label]}x)",
+            f"{useful / t_cont:.1f} useful tok/s; median {speedup:.2f}x static "
+            f"over {n_rep} paired rounds (target >= {floors[label]}x)",
             ref_us=r_cont,
+            repeats=n_rep,
+            spread={"speedup_min": round(ratios[0], 3), "speedup_max": round(ratios[-1], 3)},
             speedup_vs_static=round(speedup, 3),
         )
 
@@ -382,29 +392,141 @@ def run_prefix_cache_bench() -> None:
     kw = dict(n_slots=n_req, block_size=block, time_admissions=True, return_scheduler=True)
     eng.serve(reqs, prefix_cache=False, **kw)  # warm miss traces
     eng.serve(reqs, prefix_cache=True, **kw)  # warm prefix-hit traces
-    _, off = eng.serve(reqs, prefix_cache=False, **kw)
-    t0 = time.perf_counter()
-    _, on = eng.serve(reqs, prefix_cache=True, **kw)
-    dt = time.perf_counter() - t0
+    # median-of-3 paired repeats: the ttft ratio mixes two runs' admission
+    # timings, the noisiest gated number in this file (each serve() builds
+    # a fresh scheduler+cache, so repeats are independent)
+    n_rep, ratios, dts = 3, [], []
+    saved = 0.0
+    hits = alloc_on = alloc_off = 0
+    for _ in range(n_rep):
+        _, off = eng.serve(reqs, prefix_cache=False, **kw)
+        t0 = time.perf_counter()
+        _, on = eng.serve(reqs, prefix_cache=True, **kw)
+        dts.append(time.perf_counter() - t0)
+        # a silent eligibility/matching regression would crash the
+        # percentile below with an opaque numpy error — fail with the story
+        assert on.stats["prefix_hits"] > 0, "prefix-cache bench produced zero hits"
+        saved = 1.0 - on.pool.total_allocs / off.pool.total_allocs  # deterministic
+        hits = on.stats["prefix_hits"]
+        alloc_on, alloc_off = on.pool.total_allocs, off.pool.total_allocs
+        miss_p50 = float(np.percentile([s for _, s, _ in off.admit_times], 50))
+        hit_p50 = float(np.percentile([s for _, s, st in on.admit_times if st > 0], 50))
+        ratios.append(miss_p50 / hit_p50)
     r_us = _ref_us()
-
-    # a silent eligibility/matching regression would crash the percentile
-    # below with an opaque numpy error — fail with the story instead
-    assert on.stats["prefix_hits"] > 0, "prefix-cache bench produced zero hits"
-    saved = 1.0 - on.pool.total_allocs / off.pool.total_allocs
-    miss_p50 = float(np.percentile([s for _, s, _ in off.admit_times], 50))
-    hit_p50 = float(np.percentile([s for _, s, st in on.admit_times if st > 0], 50))
+    ratios.sort()
+    ratio = ratios[n_rep // 2]
     emit(
         "serve_prefix_cache",
-        dt * 1e6,
-        f"{on.stats['prefix_hits']}/{n_req} hits on a shared {sys_len}-token "
-        f"system prompt: {on.pool.total_allocs} vs {off.pool.total_allocs} "
-        f"blocks allocated ({saved:.0%} saved, floor 30%); ttft p50 "
-        f"hit {hit_p50 * 1e3:.1f}ms vs miss {miss_p50 * 1e3:.1f}ms "
-        f"({miss_p50 / hit_p50:.2f}x, floor > 1x)",
+        float(np.median(dts)) * 1e6,
+        f"{hits}/{n_req} hits on a shared {sys_len}-token "
+        f"system prompt: {alloc_on} vs {alloc_off} "
+        f"blocks allocated ({saved:.0%} saved, floor 30%); median ttft p50 "
+        f"miss/hit {ratio:.2f}x over {n_rep} repeats (floor > 1x)",
         ref_us=r_us,
+        repeats=n_rep,
+        spread={"ratio_min": round(ratios[0], 3), "ratio_max": round(ratios[-1], 3)},
         blocks_saved_frac=round(saved, 3),
-        ttft_miss_over_hit_p50=round(miss_p50 / hit_p50, 3),
+        ttft_miss_over_hit_p50=round(ratio, 3),
+    )
+
+
+def run_speculative_bench() -> None:
+    """Self-speculative decoding on the paged scheduler (DESIGN.md §8).
+
+    Target: the 2-bit ``quantize_tree`` params; draft: the ``pack_tree``
+    of the SAME SYMOG state — the deployment pairing the paper motivates
+    (one training run, one weight set, two artifacts).  On the unpack
+    backend the packed artifact's logits are bit-equal to its
+    quantize_tree twin, so every draft is accepted and the gated metric
+    isolates the CONTROLLER: tokens committed per (row, verify round) —
+    window bookkeeping, budget truncation, adaptive depth — where vanilla
+    decode is pinned at 1.0 and a clean k=3 round commits 4.  Greedy on a
+    fixed workload, so the number is deterministic (repeats recorded to
+    prove it; the floor is regression protection against the controller
+    silently degenerating to one token per round, not against noise).
+
+    The float-target pairing (the artifacts genuinely disagree at random
+    init; SYMOG training drives agreement toward the twin case) rides
+    along UNGATED — its acceptance is a property of untrained weights,
+    not of the serving stack.
+    """
+    import dataclasses as _dc
+
+    from repro import configs
+    from repro.models.lm import init_lm
+    from repro.serve import Request, ServeEngine, SpeculativeConfig
+
+    cfg = _dc.replace(
+        configs.get_reduced("internlm2-1.8b"),
+        d_model=256,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=32,
+        d_ff=1024,
+        vocab_size=2048,
+    )
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    scfg = core.SymogConfig(n_bits=2, total_steps=1)
+    sst = core.symog_init(params, scfg)
+    qt = core.quantize_tree(params, sst, scfg)
+    packed = core.pack_tree(params, sst, scfg)
+
+    slots, prompt_len, budget, n_req, k = 4, 8, 16, 8, 3
+    key = jax.random.PRNGKey(9)
+    reqs = [
+        Request(
+            tokens=np.asarray(
+                jax.random.randint(jax.random.fold_in(key, i), (prompt_len,), 0, cfg.vocab_size)
+            ),
+            max_new_tokens=budget,
+        )
+        for i in range(n_req)
+    ]
+    eng = ServeEngine(cfg, qt, max_len=prompt_len + budget, compute_dtype=jnp.float32)
+    spec = SpeculativeConfig(draft=packed, k=k)
+    kw = dict(n_slots=slots, return_scheduler=True)
+    eng.serve(reqs, **kw)  # warm vanilla traces
+    eng.serve(reqs, speculative=spec, **kw)  # warm draft/verify traces
+
+    n_rep, accepted, dts, dts_vanilla = 3, [], [], []
+    sched = None
+    for _ in range(n_rep):
+        t0 = time.perf_counter()
+        _, van = eng.serve(reqs, **kw)
+        dts_vanilla.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _, sched = eng.serve(reqs, speculative=spec, **kw)
+        dts.append(time.perf_counter() - t0)
+        # a silent eligibility regression would bypass to vanilla decode and
+        # divide by zero below — fail with the story instead
+        assert sched.stats["spec_row_rounds"] > 0, "speculative bench ran zero verify rounds"
+        accepted.append(sched.stats["spec_emitted"] / sched.stats["spec_row_rounds"])
+    accepted.sort()
+    apr = accepted[n_rep // 2]
+    dt, dt_v = float(np.median(dts)), float(np.median(dts_vanilla))
+
+    # ungated companion: the same controller against the FLOAT target,
+    # where the 2-bit draft genuinely disagrees (untrained weights)
+    eng_f = ServeEngine(cfg, params, max_len=prompt_len + budget, compute_dtype=jnp.float32)
+    eng_f.serve(reqs[:1], speculative=spec, n_slots=slots)
+    _, sf = eng_f.serve(reqs, speculative=spec, **kw)
+    assert sf.stats["spec_row_rounds"] > 0, "speculative bench ran zero verify rounds"
+    apr_float = sf.stats["spec_emitted"] / sf.stats["spec_row_rounds"]
+
+    emit(
+        "serve_speculative",
+        dt * 1e6,
+        f"2-bit pack_tree draft vs its quantize_tree twin, k={k}: "
+        f"{apr:.2f} tokens committed per row-round (floor 1.5; vanilla "
+        f"decode = 1.0), {sched.stats['decode_steps']} rounds vs "
+        f"{van.stats['decode_steps']} vanilla steps, wall {dt_v / dt:.2f}x "
+        "vanilla on CPU (draft costs full compute here; on TPU it streams "
+        f"2/16 of the target's weight bytes); float-target acceptance "
+        f"{apr_float:.2f} ungated (untrained weights)",
+        ref_us=_ref_us(),
+        repeats=n_rep,
+        spread={"apr_min": round(accepted[0], 3), "apr_max": round(accepted[-1], 3)},
+        accepted_per_step=round(apr, 3),
     )
 
 

@@ -39,7 +39,30 @@ from repro import core
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, get_config, get_reduced
 from repro.models.lm import init_lm
-from repro.serve import Request, ServeEngine, latency_stats
+from repro.serve import (
+    Request,
+    ServeEngine,
+    SpeculativeConfig,
+    latency_stats,
+    prefix_cache_eligible,
+    speculative_eligible,
+)
+
+
+def warn_inert_flags(eng: ServeEngine, *, prefix_cache: bool, speculative: bool) -> None:
+    """One-line warning when a requested serving feature is structurally
+    inert on this architecture (DESIGN.md §7-8) — the flags are accepted
+    and serve() stays correct, but silently no-opping hides a misconfig."""
+    arch = eng.cfg.name
+    if prefix_cache and not prefix_cache_eligible(eng):
+        print(f"WARNING: --prefix-cache is structurally inert on {arch} "
+              "(not a fully-paged all-attention decoder; DESIGN.md §7) — "
+              "every request will take the miss path")
+    if speculative and not speculative_eligible(eng):
+        print(f"WARNING: --speculative is structurally inert on {arch} "
+              "(per-row recurrent/SSD/ring/cross-kv state or MoE coupling "
+              "cannot roll back a rejected draft; DESIGN.md §8) — every "
+              "step runs the vanilla decode")
 
 
 def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
@@ -73,16 +96,16 @@ def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
 
 def run_continuous(eng: ServeEngine, reqs, *, slots: int,
                    temperature: float, top_k: int, seed: int, label: str,
-                   prefix_cache: bool = False) -> None:
+                   prefix_cache: bool = False, speculative=None) -> None:
     useful = sum(r.max_new_tokens for r in reqs)
     # warm the traces with the SAME sampling config (greedy and sampled
     # decode/admit steps are different traces — scheduler_fns memo key)
     eng.serve(reqs[:1], n_slots=slots, temperature=temperature, top_k=top_k,
-              seed=seed, prefix_cache=prefix_cache)
+              seed=seed, prefix_cache=prefix_cache, speculative=speculative)
     t0 = time.time()
     comps, sched = eng.serve(reqs, n_slots=slots, temperature=temperature,
                              top_k=top_k, seed=seed, prefix_cache=prefix_cache,
-                             return_scheduler=True)
+                             speculative=speculative, return_scheduler=True)
     dt = time.time() - t0
     # static loop: batches of `slots` in arrival order, each run to the max
     # budget in the batch (finished rows burn decode steps)
@@ -105,12 +128,22 @@ def run_continuous(eng: ServeEngine, reqs, *, slots: int,
               f"{s['prefix_cow_copies']} COW copies, "
               f"{s['prefix_evicted_blocks']} blocks evicted, "
               f"{sched.pool.total_allocs} blocks allocated")
+    if sched.stats.get("spec_steps"):
+        s = sched.stats
+        print(f"  speculative: {s['spec_steps']} draft/verify rounds, "
+              f"{s['spec_accepted']}/{s['spec_drafted']} drafts accepted, "
+              f"{s['spec_emitted'] / max(1, s['spec_row_rounds']):.2f} tokens "
+              "committed per row-round (vanilla decode = 1.0)")
     lat = latency_stats(comps)
     if lat:
         q, t, tp = lat["queue_steps"], lat["ttft_steps"], lat["tokens_per_step"]
         print(f"  latency (decode-step units): queue p50={q['p50']:.1f} "
               f"p99={q['p99']:.1f}; ttft p50={t['p50']:.1f} p99={t['p99']:.1f}; "
               f"tokens/step p50={tp['p50']:.2f} p99={tp['p99']:.2f}")
+        if "accepted_per_step" in lat:
+            a = lat["accepted_per_step"]
+            print(f"  accepted tokens/verify-step: p50={a['p50']:.2f} "
+                  f"p99={a['p99']:.2f} mean={a['mean']:.2f}")
 
 
 def main() -> None:
@@ -142,9 +175,20 @@ def main() -> None:
                     help="--continuous: prepend one shared system prompt of "
                          "this many tokens to every request (the workload "
                          "--prefix-cache deduplicates)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="--continuous: self-speculative decoding — draft "
+                         "with the --draft-bits pack_tree twin, verify "
+                         "K+1 positions per step on the served params "
+                         "(DESIGN.md §8; fully-paged archs only)")
+    ap.add_argument("--draft-bits", type=int, default=2,
+                    help="--speculative: bit-width of the packed draft artifact")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="--speculative: max draft tokens per verify round")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.speculative and args.prefix_cache:
+        ap.error("--speculative and --prefix-cache are mutually exclusive (DESIGN.md §8)")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     params = init_lm(jax.random.PRNGKey(args.seed), cfg)
@@ -167,6 +211,14 @@ def main() -> None:
     eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=dtype)
 
     if args.continuous:
+        warn_inert_flags(eng, prefix_cache=args.prefix_cache,
+                         speculative=args.speculative)
+        spec = None
+        if args.speculative:
+            # the free cheap twin: the SAME weights packed at --draft-bits
+            dcfg = core.SymogConfig(n_bits=args.draft_bits, total_steps=1)
+            draft = core.pack_tree(params, core.symog_init(params, dcfg), dcfg)
+            spec = SpeculativeConfig(draft=draft, k=args.draft_k)
         extras = {k: v for k, v in batch.items() if k != "tokens"} or None
         reqs = make_ragged_workload(cfg, n_requests=args.requests,
                                     prompt_len=args.prompt_len, steps=args.steps,
@@ -175,7 +227,7 @@ def main() -> None:
         run_continuous(eng, reqs, slots=args.slots,
                        temperature=args.temperature, top_k=args.top_k,
                        seed=args.seed, label="float",
-                       prefix_cache=args.prefix_cache)
+                       prefix_cache=args.prefix_cache, speculative=spec)
         if args.quantized or args.packed:
             scfg = core.SymogConfig(n_bits=args.n_bits, total_steps=1)
             sst = core.symog_init(params, scfg)
@@ -190,7 +242,7 @@ def main() -> None:
             run_continuous(qeng, reqs, slots=args.slots,
                            temperature=args.temperature, top_k=args.top_k,
                            seed=args.seed, label=label,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache, speculative=spec)
         return
 
     t0 = time.time()

@@ -14,6 +14,7 @@ from repro.models.lm import (
     forward_lm,
     prefill_lm,
     decode_lm,
+    decode_verify_lm,
     init_caches,
     lm_train_loss,
     cross_entropy,
@@ -34,6 +35,7 @@ __all__ = [
     "forward_lm",
     "prefill_lm",
     "decode_lm",
+    "decode_verify_lm",
     "init_caches",
     "lm_train_loss",
     "cross_entropy",

@@ -306,6 +306,85 @@ def attn_prefill_paged(
     return y, cache
 
 
+def verify_token_index(block_tables, positions, block: int, valid):
+    """Flat pool indices for a (B, T) grid of speculative write positions.
+
+    Generalizes ``paged_token_index`` to T tokens per row: entry (b, t)
+    addresses global position ``positions[b, t]`` through row b's table.
+    ``valid`` (B, T) bool redirects out-of-range or inactive positions to
+    the trash block (physical row 0) BEFORE the table lookup, so a row near
+    ``max_len`` can ride a fixed-width verify trace without reading past
+    its table (DESIGN.md §8)."""
+    B, max_blocks = block_tables.shape
+    bi = jnp.minimum(positions // block, max_blocks - 1)  # clamp BEFORE gather
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    idx = block_tables[rows, bi] * block + positions % block
+    return jnp.where(valid, idx, 0)
+
+
+def _verify_scatter(cache, names, news, idx):
+    """Scatter (B, T, ...) new entries into each paged leaf at flat ``idx``.
+    Rows own disjoint blocks and positions within a row are distinct, so
+    only trash-redirected indices may collide (garbage either way)."""
+    B, T = idx.shape
+    flat_idx = idx.reshape(B * T)
+    out = dict(cache)
+    for name, new in zip(names, news):
+        out[name] = paged_update(cache[name], new.reshape((B * T,) + new.shape[2:]), flat_idx)
+    return out
+
+
+def attn_verify_paged(
+    p,
+    x,
+    cache,
+    block_tables,
+    positions,
+    *,
+    cfg: AttnConfig,
+    valid,
+    window=None,
+    rope_base=10000.0,
+    compute_dtype=jnp.bfloat16,
+):
+    """Speculative multi-token verify against the paged pool (DESIGN.md §8).
+
+    x (B, T, D) embeds [last committed token, draft d_1..d_{T-1}] per row;
+    ``positions`` (B, T) are the global cache positions ``pos[b] + t`` and
+    ``valid`` (B, T) masks inactive rows / positions past ``max_len`` into
+    the trash block.  Generalizes the decode step (T=1) and the prefix-
+    cache tail prefill (batch-of-one) to B rows x T tokens: every row
+    scatters its T k/v entries at its global positions FIRST, then gathers
+    its whole table view, so each query's causal horizon reads only real
+    KV (committed prefix below ``positions[b, 0]``, own speculated tokens
+    at/above it) and the logits at every valid position are exactly what T
+    sequential decode steps would have produced."""
+    B, T, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    q = dense_apply(p["q_proj"], x, compute_dtype=compute_dtype)
+    k_new = dense_apply(p["k_proj"], x, compute_dtype=compute_dtype)
+    v_new = dense_apply(p["v_proj"], x, compute_dtype=compute_dtype)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k_new = rmsnorm_apply(p["k_norm"], k_new)
+    if cfg.rope:
+        q = apply_rope(q, positions, rope_base)
+        k_new = apply_rope(k_new, positions, rope_base)
+    idx = verify_token_index(block_tables, positions, cache["k"].shape[1], valid)
+    cache = _verify_scatter(cache, ("k", "v"), (k_new, v_new), idx)
+    k = cache_read(paged_gather(cache["k"], block_tables), compute_dtype)
+    v = cache_read(paged_gather(cache["v"], block_tables), compute_dtype)
+    S = k.shape[1]
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    mask = make_mask(positions, kv_pos[None, :], causal=True, window=window)
+    q = q.reshape(B, T, K, G, hd)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd**-0.5
+    out = _qk_attn(q, k, v, mask, scale=scale, cap=cfg.softcap)
+    out = out.reshape(B, T, H, hd)
+    return dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype), cache
+
+
 def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=10000.0,
                 compute_dtype=jnp.bfloat16,
                 kv: Optional[Tuple[jax.Array, jax.Array]] = None,
@@ -493,6 +572,54 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
     out_c = jnp.einsum("BHTS,BSr->BTHr", probs, c_kv)  # compressed values
+    out = jnp.einsum("BTHr,rHv->BTHv", out_c, as_dense(p["kv_b_v_proj"]["kernel"], compute_dtype))
+    y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+    return y, cache
+
+
+def mla_verify_paged(
+    p,
+    x,
+    cache,
+    block_tables,
+    positions,
+    *,
+    cfg: MLAConfig,
+    valid,
+    rope_base=10000.0,
+    compute_dtype=jnp.bfloat16,
+):
+    """Speculative multi-token MLA verify against the paged c_kv/k_rope
+    pools (DESIGN.md §8).  The absorbed-decode einsums already carry a T
+    axis, so this is ``mla_decode``'s paged branch with T > 1: scatter the
+    T compressed entries per row at their global positions, gather, and
+    mask each query to its own causal horizon.  x (B, T, D); positions /
+    ``valid`` (B, T) as in ``attn_verify_paged``."""
+    B, T, D = x.shape
+    cq = rmsnorm_apply(p["q_a_norm"], dense_apply(p["q_a_proj"], x, compute_dtype=compute_dtype))
+    q = dense_apply(p["q_b_proj"], cq, compute_dtype=compute_dtype)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, rope_base)
+    q_eff = jnp.einsum("BTHn,rHn->BTHr", q_nope, as_dense(p["kv_b_k_proj"]["kernel"], compute_dtype))
+
+    c_new = rmsnorm_apply(p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype))
+    kr_new = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]
+    kr_new = apply_rope(kr_new, positions, rope_base)[..., 0, :]
+    idx = verify_token_index(block_tables, positions, cache["c_kv"].shape[1], valid)
+    cache = _verify_scatter(cache, ("c_kv", "k_rope"), (c_new, kr_new), idx)
+    c_kv = cache_read(paged_gather(cache["c_kv"], block_tables), compute_dtype)
+    k_rope = cache_read(paged_gather(cache["k_rope"], block_tables), compute_dtype)
+    S = c_kv.shape[1]
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    mask = (kv_pos[None, None, None, :] <= positions[:, None, :, None])  # (B,1,T,S)
+
+    logits = (
+        jnp.einsum("BTHr,BSr->BHTS", q_eff, c_kv)
+        + jnp.einsum("BTHr,BSr->BHTS", q_rope, k_rope)
+    ).astype(jnp.float32) * _mla_scale(cfg)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+    out_c = jnp.einsum("BHTS,BSr->BTHr", probs, c_kv)
     out = jnp.einsum("BTHr,rHv->BTHv", out_c, as_dense(p["kv_b_v_proj"]["kernel"], compute_dtype))
     y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
     return y, cache

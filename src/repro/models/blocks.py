@@ -28,10 +28,12 @@ from repro.models.attention import (
     attn_init,
     attn_init_cache,
     attn_prefill_paged,
+    attn_verify_paged,
     mla_apply,
     mla_decode,
     mla_init,
     mla_init_cache,
+    mla_verify_paged,
 )
 from repro.models.config import ModelConfig
 from repro.models.layers import (
@@ -359,6 +361,63 @@ def block_prefill_paged(
     h = _norm_apply(cfg, p["pre_mlp_norm"], x)
     y = mlp_apply(p["mlp"], h, cfg=_mlp_cfg(cfg), compute_dtype=compute_dtype)
     y = _barrier(_tag(y, "block_out"))
+    if cfg.post_norm:
+        y = _norm_apply(cfg, p["post_mlp_norm"], y)
+    return x + y, cache
+
+
+def block_verify_paged(
+    p,
+    x,
+    cache,
+    block_tables,
+    positions,
+    *,
+    cfg: ModelConfig,
+    valid,
+    window=None,
+    rope_base=10000.0,
+    compute_dtype=jnp.bfloat16,
+):
+    """Speculative multi-token verify for an attention ('A'/'D') block
+    (DESIGN.md §8): the per-token math of ``block_decode`` at T = K+1
+    tokens per row, with attention running scatter-before-gather against
+    the paged pool (``attn_verify_paged`` / ``mla_verify_paged``).  Only
+    the fully-paged tier verifies (no recurrent / SSD / ring / cross-kv
+    state to roll back), so the FFN is always the dense MLP — MoE capacity
+    competition across the K+1 in-flight tokens would break the one-pass
+    == sequential-decode equivalence the controller relies on."""
+    h = _norm_apply(cfg, p["pre_norm"], x)
+    if cfg.use_mla:
+        y, cache = mla_verify_paged(
+            p["attn"],
+            h,
+            cache,
+            block_tables,
+            positions,
+            cfg=_mla_cfg(cfg),
+            valid=valid,
+            rope_base=rope_base,
+            compute_dtype=compute_dtype,
+        )
+    else:
+        y, cache = attn_verify_paged(
+            p["attn"],
+            h,
+            cache,
+            block_tables,
+            positions,
+            cfg=_attn_cfg(cfg),
+            valid=valid,
+            window=window,
+            rope_base=rope_base,
+            compute_dtype=compute_dtype,
+        )
+    if cfg.post_norm:
+        y = _norm_apply(cfg, p["post_attn_norm"], y)
+    x = x + y
+    h = _norm_apply(cfg, p["pre_mlp_norm"], x)
+    y = mlp_apply(p["mlp"], h, cfg=_mlp_cfg(cfg), compute_dtype=compute_dtype)
     if cfg.post_norm:
         y = _norm_apply(cfg, p["post_mlp_norm"], y)
     return x + y, cache

@@ -23,6 +23,7 @@ from repro.models.blocks import (
     block_decode,
     block_init,
     block_prefill_paged,
+    block_verify_paged,
     zero_aux,
 )
 from repro.models.config import ModelConfig
@@ -584,6 +585,85 @@ def prefill_prefix_lm(params, batch, caches, bt_row, start, cfg: ModelConfig, *,
     # sample at the last REAL tail position (mirrors forward_lm's bucketed
     # last_only gather — never materialize (1, T, V) logits)
     x = jax.lax.dynamic_slice_in_dim(x, seq_len - 1, 1, axis=1)
+    logits, _ = _head(params, cfg, x)
+    return logits, new_caches
+
+
+def decode_verify_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
+                     block_tables, compute_dtype=jnp.bfloat16,
+                     active: Optional[jax.Array] = None,
+                     valid: Optional[jax.Array] = None) -> Tuple[jax.Array, Any]:
+    """Speculative verify: score T = K+1 tokens per row in ONE pass over the
+    paged pool (DESIGN.md §8).
+
+    ``tokens`` (B, T) is [last committed token, draft d_1..d_K] per row;
+    ``pos`` (B,) the row's next cache write position, so token (b, t) lives
+    at global position ``pos[b] + t``.  Per layer the T new KV entries are
+    scattered into the pool at those positions BEFORE the gather (the same
+    scatter-before-gather that makes the prefix-cache tail prefill exact),
+    so every query reads real KV across its whole causal horizon and the
+    returned logits (B, T, V) are exactly what T sequential ``decode_lm``
+    steps would produce: logits[:, t] scores the token AFTER tokens[:, t].
+    The caller rolls a rejection back by position bookkeeping alone —
+    entries past the committed position are dead until the next verify
+    overwrites them (the §6 position-mask/trash-block machinery).
+
+    ``valid`` (B, T) masks writes past ``max_len`` (and inactive rows) into
+    the trash block, so rows near their cache end ride the fixed-width
+    trace; logits at invalid positions are garbage the controller ignores.
+
+    Only the fully-paged tier is supported: all-attention (or MLA)
+    decoders whose every cache leaf lives in the block pool.  Recurrent /
+    SSD / ring / conv / cross-kv state advances irreversibly per step and
+    cannot roll back a rejected draft; MoE capacity competition couples
+    the K+1 in-flight tokens.  The scheduler never routes those families
+    here (the speculative flag is structurally inert) — this guard is the
+    backstop."""
+    if cfg.family != "decoder" or cfg.moe:
+        raise NotImplementedError(
+            "speculative verify supports only fully-paged attention/MLA "
+            f"decoders (got family={cfg.family!r}, moe={cfg.moe})"
+        )
+    B, T = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    if valid is None:
+        valid = jnp.ones((B, T), bool)
+    if active is not None:
+        valid = valid & active[:, None]
+    x = _embed_tokens(params, cfg, tokens, compute_dtype)
+    if active is not None:
+        x = x * active.astype(x.dtype).reshape(B, 1, 1)
+
+    new_caches: Dict[str, Any] = {}
+    for g in scan_groups(cfg):
+        gp, gc = params[g.name], caches[g.name]
+        win, rb = _per_layer_arrays(cfg, g)
+
+        def unit_verify(p_u, c_u, x, win_u, rb_u):
+            new_c = {}
+            for j, kind in enumerate(g.unit):
+                if kind not in _PAGED_KINDS or not g.paged[j]:
+                    raise NotImplementedError(f"non-paged kind {kind!r} in speculative verify")
+                x, cache_j = block_verify_paged(
+                    p_u[f"sub{j}"], x, c_u[f"sub{j}"], block_tables, positions,
+                    cfg=cfg, valid=valid, window=win_u[j], rope_base=rb_u[j],
+                    compute_dtype=compute_dtype,
+                )
+                new_c[f"sub{j}"] = cache_j
+            return x, new_c
+
+        if not g.stacked:
+            x, nc = unit_verify(gp, gc, x, win[0], rb[0])
+        else:
+            def body(x, inp):
+                p_u, c_u, win_u, rb_u = inp
+                x, nc = unit_verify(p_u, c_u, x, win_u, rb_u)
+                return x, nc
+
+            x, nc = jax.lax.scan(body, x, (scan_ready(gp, g.count), gc, win, rb))
+        new_caches[g.name] = nc
+
     logits, _ = _head(params, cfg, x)
     return logits, new_caches
 

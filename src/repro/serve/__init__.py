@@ -1,7 +1,18 @@
 from repro.serve.blockpool import BlockPool
 from repro.serve.engine import ServeEngine, greedy_generate
 from repro.serve.prefixcache import PrefixCache
-from repro.serve.scheduler import Completion, Request, Scheduler, latency_stats
+from repro.serve.scheduler import (
+    Completion,
+    Request,
+    Scheduler,
+    latency_stats,
+    prefix_cache_eligible,
+)
+from repro.serve.speculative import (
+    SpeculativeConfig,
+    SpeculativeScheduler,
+    speculative_eligible,
+)
 
 __all__ = [
     "BlockPool",
@@ -10,6 +21,10 @@ __all__ = [
     "Request",
     "Scheduler",
     "ServeEngine",
+    "SpeculativeConfig",
+    "SpeculativeScheduler",
     "greedy_generate",
     "latency_stats",
+    "prefix_cache_eligible",
+    "speculative_eligible",
 ]

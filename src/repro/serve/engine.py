@@ -75,6 +75,20 @@ def _scatter_blocks(pool, src, bt_row, axis, p_blocks):
     return pool.at[:, ids].set(src)
 
 
+def filter_logits(logits, temperature, top_k: int):
+    """The sampling distribution's logit transform — temperature scaling
+    plus top-k masking.  ONE definition shared by the vanilla sampler
+    (``SchedulerFns._sample``) and speculative rejection sampling
+    (``serve/speculative.py``): acceptance must target exactly the
+    distribution vanilla serve() draws from, so the transform must never
+    fork."""
+    scaled = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return scaled
+
+
 class SchedulerFns:
     """Jitted continuous-batching traces for one (greedy, top_k) sampling
     config.  Owned by the ENGINE (scheduler_fns memo) — serve() builds a
@@ -100,10 +114,7 @@ class SchedulerFns:
             # (request, step) so slot placement can't change the draw
             if greedy:
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            scaled = logits / temperature
-            if top_k > 0:
-                kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
-                scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+            scaled = filter_logits(logits, temperature, top_k)
             keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(seeds)
             return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
 
@@ -316,6 +327,18 @@ class ServeEngine:
             self._sched_fns[key] = SchedulerFns(self, greedy=greedy, top_k=top_k)
         return self._sched_fns[key]
 
+    def speculative_fns(self, *, greedy: bool, top_k: int):
+        """Memoized draft/verify traces (DESIGN.md §8), same memo contract
+        as ``scheduler_fns`` — the traces close over this TARGET engine's
+        config only; draft params ride in as call arguments, so one memo
+        serves every draft artifact."""
+        from repro.serve.speculative import SpeculativeFns
+
+        key = ("spec", bool(greedy), int(top_k))
+        if key not in self._sched_fns:
+            self._sched_fns[key] = SpeculativeFns(self, greedy=greedy, top_k=top_k)
+        return self._sched_fns[key]
+
     def _with_backend(self, fn, *args):
         prev = get_packed_backend()
         set_packed_backend(self.backend)
@@ -363,6 +386,7 @@ class ServeEngine:
         block_size: int = 16,
         n_blocks: int = 0,
         prefix_cache: bool = False,
+        speculative=None,
         time_admissions: bool = False,
         return_scheduler: bool = False,
     ):
@@ -372,9 +396,13 @@ class ServeEngine:
         defaults to dense-equivalent capacity, n_slots ceil(max_len/block)
         blocks) with EOS early-exit and temperature/top-k sampling.
         ``prefix_cache`` enables automatic prefix caching (DESIGN.md §7) on
-        the fully-paged architecture tier — a no-op elsewhere.  Returns
-        Completions in submission order (and the drained Scheduler when asked
-        — slot events and step stats for tests/benchmarks)."""
+        the fully-paged architecture tier — a no-op elsewhere.
+        ``speculative`` (a ``serve.SpeculativeConfig``) runs draft-K/verify-
+        K+1 self-speculative decoding (DESIGN.md §8) on that same tier —
+        greedy streams stay token-identical to ``generate_static``; inert
+        elsewhere.  Returns Completions in submission order (and the drained
+        Scheduler when asked — slot events and step stats for
+        tests/benchmarks)."""
         from repro.serve.scheduler import serve_requests
 
         n = n_slots or max(1, min(len(requests), 8))
@@ -388,6 +416,7 @@ class ServeEngine:
             block_size=block_size,
             n_blocks=n_blocks,
             prefix_cache=prefix_cache,
+            speculative=speculative,
             time_admissions=time_admissions,
         )
         return (comps, sched) if return_scheduler else comps

@@ -103,6 +103,8 @@ class Completion:
     arrival: int
     admitted_step: int  # last admission (preempted requests restart)
     finished_step: int
+    spec_steps: int = 0  # speculative draft/verify rounds this request rode
+    spec_tokens: int = 0  # tokens committed by those rounds (accepted + bonus)
 
 
 @dataclasses.dataclass
@@ -120,6 +122,41 @@ class _Slot:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+
+def fully_paged_tier(engine, *, allow_mla: bool = False) -> bool:
+    """True iff EVERY cache leaf of every group pages into the block pool —
+    the structural precondition both the prefix cache (DESIGN.md §7) and
+    the speculative controller (§8) share.  Holds for all-attention
+    decoders only: vlm's per-request patch prefix, encdec cross-kv,
+    recurrent/SSD/ring per-row state and MoE capacity coupling all fail
+    it, and int8 KV re-rounds (splitting tail-prefill numerics from the
+    full-prefill oracle).  ``allow_mla``: MLA's compressed c_kv/k_rope
+    leaves do page and the speculative verify implements the absorbed
+    multi-token form, so §8 admits MLA where §7 does not."""
+    cfg = engine.cfg
+    if (
+        cfg.family != "decoder"
+        or cfg.moe
+        or (cfg.use_mla and not allow_mla)
+        or cfg.kv_cache_dtype == "int8_fp"
+    ):
+        return False
+    shapes = engine.prefill_cache_shapes()
+    for g in scan_groups(cfg):
+        for j in range(len(g.unit)):
+            for name in shapes[g.name][f"sub{j}"]:
+                if not (g.paged[j] and name in PAGED_CACHE_LEAVES):
+                    return False
+    return True
+
+
+def prefix_cache_eligible(engine) -> bool:
+    """Would ``prefix_cache=True`` actually share on this engine?  The flag
+    is accepted everywhere but structurally inert off the fully-paged tier
+    (DESIGN.md §7) — launchers use this to warn instead of silently
+    no-opping."""
+    return fully_paged_tier(engine, allow_mla=False)
 
 
 def _sample_seed(req_index: int, step: int) -> int:
@@ -140,7 +177,11 @@ def latency_stats(completions: Sequence[Completion]) -> Dict[str, Dict[str, floa
                       a preempted request counts its restart wait too);
     ttft_steps      — steps from arrival until the first token exists (the
                       admission prefill samples it, hence queue + 1);
-    tokens_per_step — emitted tokens over the steps the slot was occupied.
+    tokens_per_step — emitted tokens over the steps the slot was occupied;
+    accepted_per_step — speculative decoding only (DESIGN.md §8): tokens
+                      committed per draft/verify round for this request
+                      (accepted drafts + the verify's correction/bonus
+                      token, so the vanilla decode rate is 1.0).
     """
     if not completions:
         return {}
@@ -158,7 +199,11 @@ def latency_stats(completions: Sequence[Completion]) -> Dict[str, Dict[str, floa
             "mean": float(np.mean(a)),
         }
 
-    return {"queue_steps": pct(queue), "ttft_steps": pct(ttft), "tokens_per_step": pct(tps)}
+    out = {"queue_steps": pct(queue), "ttft_steps": pct(ttft), "tokens_per_step": pct(tps)}
+    spec = [c.spec_tokens / c.spec_steps for c in completions if c.spec_steps > 0]
+    if spec:
+        out["accepted_per_step"] = pct(np.asarray(spec, np.float64))
+    return out
 
 
 class Scheduler:
@@ -264,27 +309,11 @@ class Scheduler:
         self.events: List[Tuple[int, str, int, int]] = []  # (step, kind, req, slot)
 
     def _prefix_eligible(self) -> bool:
-        """True iff EVERY cache leaf of every group pages into the pool (the
-        structural precondition for prefix sharing) and the paged KV stores
-        at compute precision (int8 KV re-rounds, splitting tail-prefill
-        numerics from the full-prefill oracle).  vlm's per-request patch
-        prefix (``self._offset``) and MoE/MLA/recurrent families fail this."""
-        cfg = self.cfg
-        if (
-            cfg.family != "decoder"
-            or cfg.moe
-            or cfg.use_mla
-            or self._offset
-            or cfg.kv_cache_dtype == "int8_fp"
-        ):
-            return False
-        shapes = self.eng.prefill_cache_shapes()
-        for g in self._groups:
-            for j in range(len(g.unit)):
-                for name in shapes[g.name][f"sub{j}"]:
-                    if not (g.paged[j] and name in PAGED_CACHE_LEAVES):
-                        return False
-        return True
+        """Structural precondition for prefix sharing: the fully-paged tier
+        (module-level ``fully_paged_tier``; vlm's ``self._offset`` shifts
+        the block map, so it double-checks here).  MLA is excluded — its
+        tail-prefill trace does not exist (DESIGN.md §7)."""
+        return not self._offset and fully_paged_tier(self.eng, allow_mla=False)
 
     # ------------------------------------------------------------------
     # cache pool
@@ -414,6 +443,21 @@ class Scheduler:
                 self.stats["prefix_misses"] += 1
             self._admit_one(slot, idx, prompt, budget, req, shared + fresh, start=matched)
 
+    def _admit_batch(self, prompt: np.ndarray, req: Request):
+        """Bucketed admission inputs for the MISS path: (bucket, batch) with
+        the prompt right-padded to its power-of-two bucket and any request
+        extras (encdec frames / vlm patches) attached.  Shared with the
+        speculative scheduler's draft-pool mirror so the two prefills can
+        never diverge in prep."""
+        lp = prompt.shape[0]
+        bucket = self._bucket(lp)
+        padded = np.zeros(bucket, np.int32)
+        padded[:lp] = prompt
+        batch = {"tokens": jnp.asarray(padded[None])}
+        if req.extras:
+            batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        return bucket, batch
+
     def _admit_one(
         self,
         slot: int,
@@ -450,12 +494,7 @@ class Scheduler:
             )
             self._buckets_used.add(("prefix", bucket, self.block_size))
         else:
-            bucket = self._bucket(lp)
-            padded = np.zeros(bucket, np.int32)
-            padded[:lp] = prompt
-            batch = {"tokens": jnp.asarray(padded[None])}
-            if req.extras:
-                batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+            bucket, batch = self._admit_batch(prompt, req)
             admit = self._fns.admit_step(bucket, self.block_size)
             first_t, self.caches = self.eng._with_backend(
                 admit,
@@ -564,11 +603,14 @@ class Scheduler:
         self.events.append((self.step_count, "preempt", state.index, slot))
         self.stats["preemptions"] += 1
 
-    def _grow_tables(self) -> None:
-        """Allocate the next block for every live row whose position crossed
-        a block boundary, oldest request first; exhaustion preempts the
-        YOUNGEST live request (vLLM policy: the oldest always progresses, so
-        the loop terminates)."""
+    def _grow_tables(self, horizon: int = 0) -> None:
+        """Allocate blocks for every live row through position
+        ``pos + horizon`` (clamped to the cache end), oldest request first;
+        exhaustion preempts the YOUNGEST live request (vLLM policy: the
+        oldest always progresses, so the loop terminates).  The vanilla
+        decode step needs ``horizon=0`` (one write at ``pos``); the
+        speculative controller reserves its whole draft window up front so
+        a verify trace never writes through a missing table entry."""
         order = sorted(
             (s for s in range(self.n_slots) if self._slots[s] is not None),
             key=lambda s: (self._slots[s].admitted_step, self._slots[s].index),
@@ -577,22 +619,21 @@ class Scheduler:
             state = self._slots[slot]
             if state is None:  # preempted by an older slot's growth
                 continue
-            bi = state.pos // self.block_size
-            if bi < len(state.blocks):
-                continue
-            while True:
+            need_bi = min(state.pos + horizon, self.eng.max_len - 1) // self.block_size
+            while state is not None and need_bi >= len(state.blocks):
+                bi = len(state.blocks)
                 got = self.pool.alloc(1)
                 if got is not None:
                     state.blocks.append(got[0])
                     self._block_tables = self._block_tables.at[slot, bi].set(got[0] + 1)
-                    break
+                    continue
                 victim = max(
                     (s for s in range(self.n_slots) if self._slots[s] is not None),
                     key=lambda s: (self._slots[s].admitted_step, self._slots[s].index),
                 )
                 self._preempt(victim)
                 if victim == slot:
-                    break  # the requester itself was youngest; it restarts
+                    state = None  # the requester itself was youngest; it restarts
 
     # ------------------------------------------------------------------
     # the loop
@@ -664,12 +705,13 @@ def serve_requests(
     block_size: int = 16,
     n_blocks: int = 0,
     prefix_cache: bool = False,
+    speculative=None,
     time_admissions: bool = False,
 ) -> Tuple[List[Completion], Scheduler]:
-    """One-shot helper: schedule ``requests`` onto ``engine`` and drain."""
-    sched = Scheduler(
-        engine,
-        n_slots,
+    """One-shot helper: schedule ``requests`` onto ``engine`` and drain.
+    ``speculative`` (a ``serve.speculative.SpeculativeConfig``) swaps in the
+    draft/verify controller (DESIGN.md §8)."""
+    kw = dict(
         temperature=temperature,
         top_k=top_k,
         seed=seed,
@@ -678,6 +720,12 @@ def serve_requests(
         prefix_cache=prefix_cache,
         time_admissions=time_admissions,
     )
+    if speculative is not None:
+        from repro.serve.speculative import SpeculativeScheduler
+
+        sched = SpeculativeScheduler(engine, n_slots, speculative=speculative, **kw)
+    else:
+        sched = Scheduler(engine, n_slots, **kw)
     for r in requests:
         sched.submit(r)
     return sched.run(), sched

@@ -333,6 +333,31 @@ def test_sampling_reproducible_across_packed_and_quantize_tree(rng, unpack_backe
     assert out_q == [c.tokens for c in e_q.serve(reqs, n_slots=3, **kw)]
 
 
+def test_sampled_streams_invariant_to_admission_order_and_batch(rng, unpack_backend):
+    """The (request, step)-keyed seed contract, pinned end to end: with a
+    fixed seed, temperature/top-k serve() emits identical per-request token
+    streams no matter WHEN requests are admitted (arrival pattern, queue
+    waits) or WHO shares the batch (slot count, early-exit churn, pool
+    pressure restarts).  Each knob below changes admission order and batch
+    composition; none may change a single sampled token."""
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = _ragged_requests(eng.cfg, rng)
+    kw = dict(temperature=0.7, top_k=5, seed=123)
+    base = [c.tokens for c in eng.serve(reqs, n_slots=2, **kw)]
+    # batch composition: more slots -> different row neighbors per step
+    assert base == [c.tokens for c in eng.serve(reqs, n_slots=5, **kw)]
+    # admission order: staggered arrivals reorder who is admitted when
+    staggered = [dataclasses.replace(r, arrival=4 * i) for i, r in enumerate(reqs)]
+    assert base == [c.tokens for c in eng.serve(staggered, n_slots=2, **kw)]
+    reverse = [dataclasses.replace(r, arrival=4 * (len(reqs) - i)) for i, r in enumerate(reqs)]
+    assert base == [c.tokens for c in eng.serve(reverse, n_slots=3, **kw)]
+    # pool pressure: preemption restarts replay the same streams
+    tight = [c.tokens for c in eng.serve(
+        reqs, n_slots=2, block_size=4, n_blocks=-(-MAX_LEN // 4), **kw
+    )]
+    assert base == tight
+
+
 # ---------------------------------------------------------------------------
 # decode-stack unit properties
 # ---------------------------------------------------------------------------

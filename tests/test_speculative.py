@@ -1,0 +1,411 @@
+"""Self-speculative decoding (repro.serve.speculative) over the paged pool.
+
+The headline contract (DESIGN.md §8): greedy speculative serve() is
+TOKEN-IDENTICAL to the static dense-cache loop — every committed token is
+the target's own greedy choice, the draft only decides how many arrive per
+round.  Checked with an exact-twin draft (pack_tree of the same quantized
+values: full acceptance, the fast path) AND a disagreeing draft (2-bit
+packed against the float target: heavy rejection, exercising position
+rollback) on the fast tier, and across all four eligible archs x both
+artifact kinds in the slow sweep.  Also pinned: EOS inside a speculated
+window truncates exactly; budgets are respected to the token; sampled
+streams are deterministic across batch composition and reruns; adaptive
+depth backs off under rejection; ineligible families bypass to the
+vanilla scheduler; verify traces are memoized per depth; and the
+multi-token verify primitives (attention and MLA) are bitwise equal to
+sequential paged decode steps.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, core
+from repro.models import init_lm, set_packed_backend
+from repro.serve import (
+    Request,
+    ServeEngine,
+    SpeculativeConfig,
+    latency_stats,
+    speculative_eligible,
+)
+
+MAX_LEN = 24
+ELIGIBLE = ("internlm2-1.8b", "granite-34b", "gemma2-27b", "gemma3-4b")
+_ENGINES = {}
+
+
+@pytest.fixture
+def unpack_backend():
+    set_packed_backend("unpack")
+    yield
+    set_packed_backend("auto")
+
+
+def _engines(arch):
+    """(float_eng, qt_eng, packed_eng) per arch, cached across tests; the
+    packed tree doubles as the exact-twin draft for the qt/packed targets
+    and as the disagreeing draft for the float target."""
+    if arch not in _ENGINES:
+        cfg = configs.get_reduced(arch)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        scfg = core.SymogConfig(n_bits=2, total_steps=1)
+        st = core.symog_init(params, scfg)
+        qt = core.quantize_tree(params, st, scfg)
+        packed = core.pack_tree(params, st, scfg)
+        _ENGINES[arch] = (
+            ServeEngine(cfg, params, max_len=MAX_LEN, compute_dtype=jnp.float32),
+            ServeEngine(cfg, qt, max_len=MAX_LEN, compute_dtype=jnp.float32),
+            ServeEngine(cfg, packed, max_len=MAX_LEN, compute_dtype=jnp.float32),
+            packed,
+        )
+    return _ENGINES[arch]
+
+
+def _ragged_requests(cfg, key, lens=(3, 6, 4, 5), budgets=(9, 3, 6, 12), **kw):
+    return [
+        Request(
+            tokens=np.asarray(
+                jax.random.randint(jax.random.fold_in(key, i), (L,), 0, cfg.vocab_size)
+            ),
+            max_new_tokens=b,
+            **kw,
+        )
+        for i, (L, b) in enumerate(zip(lens, budgets))
+    ]
+
+
+def _static_reference(eng, req):
+    batch = {"tokens": jnp.asarray(np.asarray(req.tokens)[None])}
+    return np.asarray(eng.generate_static(batch, req.max_new_tokens))[0]
+
+
+# ---------------------------------------------------------------------------
+# greedy losslessness: speculative serve == per-request static decode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
+def test_greedy_spec_matches_static_exact_twin(tree, rng, unpack_backend):
+    """Target qt/packed with the pack_tree of the SAME quantized values as
+    draft: bit-equal logits on the unpack backend mean full acceptance, and
+    the stream must still be the target's own greedy chain."""
+    _, e_q, e_p, packed = _engines("internlm2-1.8b")
+    eng = e_p if tree == "packed" else e_q
+    reqs = _ragged_requests(eng.cfg, rng)
+    comps, sched = eng.serve(
+        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+    )
+    assert [c.index for c in comps] == list(range(len(reqs)))
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
+    s = sched.stats
+    assert s["spec_steps"] > 0
+    # an exact twin accepts every draft: commits per row-round only fall
+    # short of k+1 at budget/EOS truncation
+    assert s["spec_emitted"] / s["spec_row_rounds"] > 1.5
+    assert s["spec_accepted"] > 0
+
+
+def test_greedy_spec_matches_static_under_rejection(rng, unpack_backend):
+    """Float target vs 2-bit draft (random-init weights: the artifacts
+    genuinely disagree) — heavy rejection must not change a single token:
+    rollback is position bookkeeping, rejected KV is dead until overwritten."""
+    e_f, _, _, packed = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_f.cfg, rng)
+    comps, sched = e_f.serve(
+        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+    )
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(e_f, req))
+    s = sched.stats
+    assert s["spec_steps"] > 0
+    # rejections actually happened (otherwise this test is the twin test)
+    assert s["spec_accepted"] < s["spec_drafted"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ELIGIBLE)
+@pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
+def test_spec_serve_matches_static_all_eligible_archs(arch, tree, rng, unpack_backend):
+    """The §8 sweep: every fully-paged arch (plain, MQA, local/global
+    window alternation, gemma3's long-rope variant) x both artifact kinds."""
+    _, e_q, e_p, packed = _engines(arch)
+    eng = e_p if tree == "packed" else e_q
+    reqs = _ragged_requests(eng.cfg, rng)
+    comps, sched = eng.serve(
+        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+    )
+    assert speculative_eligible(eng)
+    assert sched.stats["spec_steps"] > 0
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "olmoe-1b-7b"])
+def test_ineligible_arch_bypasses_to_vanilla(arch, rng, unpack_backend):
+    """Recurrent state can't roll back a rejected draft and MoE capacity
+    couples the in-flight window: the flag must be structurally inert there
+    (zero spec rounds) while serve() stays token-exact."""
+    _, e_q, _, packed = _engines(arch)
+    assert not speculative_eligible(e_q)
+    reqs = _ragged_requests(e_q.cfg, rng, lens=(3, 5), budgets=(6, 4))
+    comps, sched = e_q.serve(
+        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+    )
+    assert sched.stats["spec_steps"] == 0
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(e_q, req))
+
+
+# ---------------------------------------------------------------------------
+# commit-boundary edge cases
+# ---------------------------------------------------------------------------
+def test_eos_inside_speculated_window_truncates_exactly(rng, unpack_backend):
+    """An EOS accepted mid-window must end the stream AT the EOS: later
+    speculated tokens (already verified, already written to the pool) are
+    dropped and the completion matches the vanilla EOS semantics."""
+    _, e_q, _, packed = _engines("internlm2-1.8b")
+    req0 = _ragged_requests(e_q.cfg, rng)[0]
+    ref = _static_reference(e_q, Request(tokens=req0.tokens, max_new_tokens=10))
+    eos = int(ref[3])  # appears mid-stream, deep inside a k=4 window
+    comps = e_q.serve(
+        [Request(tokens=req0.tokens, max_new_tokens=10, eos_id=eos)],
+        speculative=SpeculativeConfig(draft=packed, k=4),
+    )
+    expect = list(ref[: list(ref).index(eos) + 1])
+    assert comps[0].tokens == expect
+    assert comps[0].finish_reason == "eos"
+
+
+def test_budget_respected_to_the_token(rng, unpack_backend):
+    """k far above the remaining budget: commits truncate at the budget and
+    never overrun (the verify writes past it land in dead positions)."""
+    _, e_q, _, packed = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_q.cfg, rng, lens=(3, 4), budgets=(2, 5))
+    comps = e_q.serve(reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=4))
+    for req, comp in zip(reqs, comps):
+        assert len(comp.tokens) == req.max_new_tokens
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(e_q, req))
+        assert comp.finish_reason == "length"
+
+
+def test_preemption_under_pool_pressure(rng, unpack_backend):
+    """Tight pool (one max_len table's worth of blocks): speculative growth
+    reserves whole draft windows, so pressure preempts and replays — the
+    restart must be token-exact, same as the vanilla scheduler."""
+    _, e_q, _, packed = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_q.cfg, rng, lens=(3, 5, 4), budgets=(10, 8, 6))
+    comps, sched = e_q.serve(
+        reqs,
+        n_slots=2,
+        block_size=4,
+        n_blocks=-(-MAX_LEN // 4),
+        speculative=SpeculativeConfig(draft=packed, k=3),
+        return_scheduler=True,
+    )
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(e_q, req))
+    assert sched.stats["preemptions"] > 0
+
+
+# ---------------------------------------------------------------------------
+# sampling / adaptivity / bookkeeping
+# ---------------------------------------------------------------------------
+def test_sampled_spec_deterministic_across_batch_composition(rng, unpack_backend):
+    """Temperature/top-k speculation: accept uniforms and residual draws are
+    keyed by (request, position), so the SAME seed reproduces the stream
+    regardless of slot count, arrival pattern, or rerun."""
+    e_f, _, _, packed = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_f.cfg, rng)
+    kw = dict(temperature=0.8, top_k=5, seed=11)
+    spec = SpeculativeConfig(draft=packed, k=3)
+    base = [c.tokens for c in e_f.serve(reqs, n_slots=2, speculative=spec, **kw)]
+    assert base == [c.tokens for c in e_f.serve(reqs, n_slots=2, speculative=spec, **kw)]
+    assert base == [c.tokens for c in e_f.serve(reqs, n_slots=4, speculative=spec, **kw)]
+    staggered = [
+        Request(tokens=r.tokens, max_new_tokens=r.max_new_tokens, arrival=3 * i)
+        for i, r in enumerate(reqs)
+    ]
+    assert base == [c.tokens for c in e_f.serve(staggered, n_slots=2, speculative=spec, **kw)]
+
+
+def test_sampled_spec_at_cache_boundary(rng, unpack_backend):
+    """A budget clamped to the cache end forces the last round's spec
+    positions past ``max_len`` (valid mask all False): the final token's
+    residual must get bonus semantics (draw from full p — the q of an
+    accept test that never RAN is zeroed), the stream stays deterministic
+    across compositions, and the budget fills to the token."""
+    e_f, _, _, packed = _engines("internlm2-1.8b")
+    prompt = np.asarray(
+        jax.random.randint(jax.random.fold_in(rng, 99), (8,), 0, e_f.cfg.vocab_size)
+    )
+    # submit() clamps to max_len - lp + 1 = 17: the last emitted token's
+    # predecessor writes at pos = max_len - 1, so round k+1 windows there
+    # are fully capacity-blocked
+    reqs = [Request(tokens=prompt, max_new_tokens=99)]
+    kw = dict(temperature=0.9, top_k=0, seed=3)
+    spec = SpeculativeConfig(draft=packed, k=4)
+    comps = e_f.serve(reqs, n_slots=1, speculative=spec, **kw)
+    assert len(comps[0].tokens) == MAX_LEN - 8 + 1
+    again = e_f.serve(reqs, n_slots=3, speculative=spec, **kw)
+    assert comps[0].tokens == again[0].tokens
+
+
+@pytest.mark.parametrize("seed", [0, 2, 5])
+def test_sampled_spec_determinism_with_adaptive_config(rng, unpack_backend, seed):
+    """Regression: sampled mode must IGNORE batch-coupled depth adaptation.
+    With adaptive depth honored in sampled mode, a neighbor row's AIMD
+    recommendation changes the round depth — and the depth decides which
+    positions draw bonus vs accept/residual, so n_slots=1 vs n_slots=4
+    produced different streams for most seeds (found in review).  Sampled
+    rounds now always run at full k, restoring composition invariance even
+    with ``adaptive=True`` requested."""
+    e_f, _, _, packed = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_f.cfg, rng)
+    kw = dict(temperature=0.9, top_k=0, seed=seed)
+    spec = SpeculativeConfig(draft=packed, k=4, adaptive=True)
+    solo = [c.tokens for c in e_f.serve(reqs, n_slots=1, speculative=spec, **kw)]
+    wide = [c.tokens for c in e_f.serve(reqs, n_slots=4, speculative=spec, **kw)]
+    assert solo == wide
+
+
+def test_adaptive_depth_backs_off_under_rejection(rng, unpack_backend):
+    """Float target vs 2-bit draft rejects nearly everything: AIMD depth
+    must collapse toward 1, spending fewer draft dispatches than fixed-k."""
+    e_f, _, _, packed = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_f.cfg, rng, lens=(4, 5), budgets=(10, 10))
+    _, adaptive = e_f.serve(
+        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=4), return_scheduler=True
+    )
+    _, fixed = e_f.serve(
+        reqs,
+        n_slots=2,
+        speculative=SpeculativeConfig(draft=packed, k=4, adaptive=False),
+        return_scheduler=True,
+    )
+    assert adaptive.stats["spec_drafted"] < fixed.stats["spec_drafted"]
+    # fixed depth never shrinks: every live row pays k drafts every round
+    assert fixed.stats["spec_drafted"] == 4 * fixed.stats["spec_row_rounds"]
+
+
+def test_spec_stats_and_latency_surface(rng, unpack_backend):
+    """Completion carries (spec_steps, spec_tokens); latency_stats derives
+    accepted_per_step percentiles; scheduler stats reconcile.  The
+    per-request and scheduler-total views agree exactly only when nothing
+    was preempted (stats count performed work, Completions the delivered
+    stream — see the stats comment in SpeculativeScheduler), so this
+    workload runs on the default ample pool."""
+    _, e_q, _, packed = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_q.cfg, rng)
+    comps, sched = e_q.serve(
+        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+    )
+    assert sched.stats["preemptions"] == 0
+    assert sum(c.spec_tokens for c in comps) == sched.stats["spec_emitted"]
+    assert sum(c.spec_steps for c in comps) == sched.stats["spec_row_rounds"]
+    lat = latency_stats(comps)
+    assert "accepted_per_step" in lat
+    assert lat["accepted_per_step"]["mean"] > 1.0  # twin draft: multi-token rounds
+    # tokens beyond the admission token all came from spec rounds
+    assert sched.stats["spec_emitted"] == sched.stats["tokens_emitted"] - len(reqs)
+
+
+def test_verify_traces_memoized_per_depth(rng, unpack_backend):
+    """Adaptive depth may visit several k values; each compiles once on the
+    engine-owned memo and a second serve() reuses them all."""
+    e_f, _, _, packed = _engines("internlm2-1.8b")
+    reqs = _ragged_requests(e_f.cfg, rng, lens=(4,), budgets=(10,))
+    spec = SpeculativeConfig(draft=packed, k=3)
+    fns = e_f.speculative_fns(greedy=True, top_k=0)
+    n0 = fns.verify_compiles  # the engine memo is shared across tests
+    e_f.serve(reqs, speculative=spec)
+    n1 = fns.verify_compiles
+    assert n1 - n0 <= 3  # at most one trace per adaptive depth in [1, k]
+    e_f.serve(reqs, speculative=spec)
+    assert fns.verify_compiles == n1
+
+
+def test_prefix_cache_and_speculative_are_exclusive(rng, unpack_backend):
+    _, e_q, _, packed = _engines("internlm2-1.8b")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        e_q.serve(
+            _ragged_requests(e_q.cfg, rng, lens=(3,), budgets=(2,)),
+            speculative=SpeculativeConfig(draft=packed, k=2),
+            prefix_cache=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# verify primitives: one multi-token pass == sequential decode, bitwise
+# ---------------------------------------------------------------------------
+def test_decode_verify_lm_bitwise_matches_sequential_decode(rng, unpack_backend):
+    """The §8 primitive claim, asserted at the trace level: logits at all
+    K+1 positions AND the pool contents equal K+1 decode_lm steps exactly
+    (scatter-before-gather keeps every causal horizon on real KV)."""
+    from repro.models import decode_lm, decode_verify_lm
+    from repro.serve.scheduler import Scheduler
+
+    _, e_q, _, _ = _engines("gemma2-27b")  # windowed layers: the risky mask path
+    cfg = e_q.cfg
+    sched = Scheduler(e_q, 2, block_size=4)
+    for r in _ragged_requests(cfg, rng, lens=(5, 7), budgets=(8, 8)):
+        sched.submit(r)
+    sched._grow_tables(horizon=4)
+    sched._admit()
+    sched._grow_tables(horizon=4)
+    bt, active = sched._block_tables, jnp.ones((2,), bool)
+    pos0, cur = sched._pos, sched._tokens
+    T, c_seq, fed, seq_logits = 4, sched.caches, [sched._tokens], []
+    p = pos0
+    for _ in range(T):
+        lg, c_seq = decode_lm(
+            e_q.params, c_seq, cur[:, None], p, cfg,
+            compute_dtype=jnp.float32, active=active, block_tables=bt,
+        )
+        seq_logits.append(lg[:, -1])
+        cur = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+        fed.append(cur)
+        p = p + 1
+    tokens = jnp.stack(fed[:T], axis=1)
+    v_logits, c_ver = decode_verify_lm(
+        e_q.params, sched.caches, tokens, pos0, cfg,
+        compute_dtype=jnp.float32, active=active, block_tables=bt,
+    )
+    np.testing.assert_array_equal(np.asarray(jnp.stack(seq_logits, axis=1)), np.asarray(v_logits))
+    for a, b in zip(jax.tree_util.tree_leaves(c_seq), jax.tree_util.tree_leaves(c_ver)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mla_verify_paged_bitwise_matches_sequential_decode(rng):
+    """MLA's absorbed multi-token verify (no arch on the eligible tier uses
+    MLA today — deepseek is MoE-coupled — but the primitive ships tested
+    so a non-MoE MLA decoder would be eligible structurally)."""
+    from repro.models.attention import MLAConfig, mla_decode, mla_init, mla_verify_paged
+
+    cfg = MLAConfig(
+        d_model=32, n_heads=4, q_lora_rank=16, kv_lora_rank=8,
+        qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8,
+    )
+    p = mla_init(rng, cfg, jnp.float32)
+    B, block, n_phys, T = 2, 4, 9, 3
+    pool = {
+        "c_kv": jnp.zeros((n_phys, block, cfg.kv_lora_rank), jnp.float32),
+        "k_rope": jnp.zeros((n_phys, block, cfg.qk_rope_dim), jnp.float32),
+    }
+    bt = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    pos0 = jnp.asarray([3, 5], jnp.int32)
+    xs = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, cfg.d_model), jnp.float32)
+    c, outs = pool, []
+    for t in range(T):
+        y, c = mla_decode(
+            p, xs[:, t : t + 1], c, pos0 + t, cfg=cfg,
+            compute_dtype=jnp.float32, block_tables=bt,
+        )
+        outs.append(y[:, 0])
+    yv, cv = mla_verify_paged(
+        p, xs, pool, bt, pos0[:, None] + jnp.arange(T)[None], cfg=cfg,
+        valid=jnp.ones((B, T), bool), compute_dtype=jnp.float32,
+    )
+    np.testing.assert_array_equal(np.asarray(jnp.stack(outs, axis=1)), np.asarray(yv))
+    for a, b in zip(jax.tree_util.tree_leaves(c), jax.tree_util.tree_leaves(cv)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
