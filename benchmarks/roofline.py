@@ -19,6 +19,47 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 PEAK = 197e12  # bf16 FLOP/s per v5e chip
 
 
+# ---------------------------------------------------------------------------
+# fused-kernel bytes accounting (DESIGN.md §9) — the first-order model for
+# the decode hot path, which is bandwidth-bound: what each kernel actually
+# moves through HBM, vs what the path it replaces moved.
+# ---------------------------------------------------------------------------
+def paged_attention_bytes(
+    *, B: int, T: int, K: int, G: int, hd: int, max_blocks: int, block: int,
+    kv_bytes: int = 2, act_bytes: int = 2,
+) -> Dict[str, float]:
+    """Bytes per fused paged-attention call vs the composed path it replaces.
+
+    Fused: each pool block is DMA'd once per (batch, kv-head) grid step at
+    the POOL dtype (int8 fixed-point or bf16 — ``kv_bytes``), plus the
+    block-table scalars and q/out; the (B, S, ...) logical view never
+    exists.  Composed: the same pool reads, PLUS the gather writes the
+    logical k and v views at compute dtype and attention reads them back —
+    two extra full-cache round-trips per call."""
+    S = max_blocks * block
+    pool_reads = 2 * B * S * K * hd * kv_bytes  # k + v pools, once each
+    table = B * max_blocks * 4  # int32 block-table reads
+    q_out = 2 * B * T * K * G * hd * act_bytes
+    fused = pool_reads + table + q_out
+    view = 2 * B * S * K * hd * act_bytes  # materialized k + v logical views
+    composed = fused + 2 * view  # written by the gather, read back by attn
+    return {"fused": fused, "composed": composed, "ratio": composed / fused}
+
+
+def fixedpoint_matmul_bytes(
+    *, M: int, K: int, N: int, n_bits: int, act_bytes: int = 4
+) -> Dict[str, float]:
+    """Bytes per fused dequant-matmul call vs dense weights.  Decode matmuls
+    are weight-bandwidth-bound (M is the batch, tiny), so the packed weight
+    stream — n_bits/8 bytes per weight, dequantized in the kernel epilogue —
+    is the whole story; activations ride along identically in every column."""
+    acts = (M * K + M * N) * act_bytes
+    packed = K * N * n_bits // 8 + acts
+    bf16 = K * N * 2 + acts
+    f32 = K * N * 4 + acts
+    return {"packed": packed, "bf16": bf16, "f32": f32, "bf16_over_packed": bf16 / packed}
+
+
 def load(mesh: str) -> List[Dict]:
     d = os.path.join(RESULTS, mesh)
     recs = []

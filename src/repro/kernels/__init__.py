@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for SYMOG's two compute hot-spots.
+"""Pallas TPU kernels for SYMOG's serving and training hot-spots.
 
 ``symog_update``      — training: fused Alg.1 lines 15–17 (quantize → reg-
                         grad → Nesterov momentum → clip) in ONE pass over
@@ -8,21 +8,46 @@
                         2-bit-packed int8 words (4 weights/byte): 8× less
                         weight HBM traffic than bf16; the power-of-two
                         scale is applied once per output tile.
+``paged_attention``   — serving: single/multi-token paged decode attention
+                        with the block-table gather fused into the online-
+                        softmax loop (plus an MLA absorbed-decode variant)
+                        — the (B, max_blocks·block, ...) logical cache
+                        view is never materialized (DESIGN.md §9).
 
 Each kernel ships <name>/kernel.py (pl.pallas_call + BlockSpec),
 <name>/ops.py (jit'd public wrapper) and <name>/ref.py (pure-jnp oracle);
-tests sweep shapes/dtypes and assert allclose in interpret mode.
+tests sweep shapes/dtypes and assert allclose in interpret mode.  Which
+backend a model call site picks (fused Pallas on TPU, interpret parity in
+tests, composed/dense fallback elsewhere) is owned by
+``repro.kernels.dispatch``.
 """
+from repro.kernels.dispatch import (
+    get_attention_backend,
+    get_packed_backend,
+    resolve_attention_backend,
+    resolve_packed_backend,
+    set_attention_backend,
+    set_packed_backend,
+)
 from repro.kernels.symog_update.ops import symog_update
 from repro.kernels.fixedpoint_matmul.ops import (
     fixedpoint_matmul,
     fixedpoint_matmul_experts,
     pack_weight,
 )
+from repro.kernels.paged_attention.ops import paged_attention, paged_attention_mla
 
 __all__ = [
     "symog_update",
     "fixedpoint_matmul",
     "fixedpoint_matmul_experts",
     "pack_weight",
+    "paged_attention",
+    "paged_attention_mla",
+    "set_packed_backend",
+    "get_packed_backend",
+    "resolve_packed_backend",
+    "set_attention_backend",
+    "get_attention_backend",
+    "resolve_attention_backend",
 ]

@@ -1,0 +1,3 @@
+from repro.kernels.paged_attention.ops import paged_attention, paged_attention_mla
+
+__all__ = ["paged_attention", "paged_attention_mla"]

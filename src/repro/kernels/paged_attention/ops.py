@@ -1,0 +1,99 @@
+"""Public wrappers: fused paged attention for decode / verify / tail-prefill.
+
+Callers hand the kernel the SAME operands the composed path consumes — the
+(B, T, K, G, hd) query block, the (n_blocks, block, ...) pools and the
+(B, max_blocks) tables — plus the per-row FIRST query position; queries
+must be contiguous (q_pos[b, t] = pos0[b] + t), which every serving call
+site satisfies (decode T=1, speculative verify, bucketed tail prefill).
+
+``window=None`` means unwindowed and maps onto the config's 2^30 sentinel
+(GLOBAL_WINDOW), so one trace serves static-None callers and the traced
+per-layer window scalar the gemma2/3 scan bodies carry.  ``kv_scale`` is
+the pool dequantization scale: 1.0 for float pools, 2^-KV_F for the int8
+fixed-point cache (static on the pool dtype — the caller passes it).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_padded,
+    paged_attention_mla_padded,
+)
+
+_NO_WINDOW = 2**30  # models.config.GLOBAL_WINDOW (no models import: layering)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "cap", "kv_scale", "interpret", "out_dtype")
+)
+def _paged_attention(q, k_pool, v_pool, block_tables, pos0, window, *,
+                     scale, cap, kv_scale, interpret, out_dtype):
+    B, T, K, G, hd = q.shape
+    q2 = q.transpose(0, 2, 1, 3, 4).reshape(B, K, T * G, hd)
+    out = paged_attention_padded(
+        q2, k_pool, v_pool,
+        block_tables.astype(jnp.int32),
+        pos0.astype(jnp.int32),
+        window,
+        g=G, scale=scale, cap=cap, kv_scale=kv_scale, interpret=interpret,
+    )
+    out = out.reshape(B, K, T, G, hd).transpose(0, 2, 1, 3, 4)
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, pos0, *, scale: float,
+                    cap: float = 0.0, window=None, kv_scale: float = 1.0,
+                    interpret: bool = True, out_dtype=None):
+    """Fused paged GQA/MQA attention.
+
+    q (B, T, K, G, hd); k/v pools (n_blocks, block, K, hd) float or int8;
+    block_tables (B, max_blocks) int32 (trash block 0 for unused slots);
+    pos0 (B,) int32.  ``window`` None, a Python int, or a traced int32
+    scalar; ``cap`` the logit softcap (0 = off).  Masking, windowing and
+    int8 dequantization all happen inside the online-softmax loop — the
+    (B, max_blocks·block, ...) logical view is never materialized."""
+    w = _NO_WINDOW if window is None else window
+    w = jnp.asarray(w, jnp.int32).reshape(1)
+    return _paged_attention(
+        q, k_pool, v_pool, block_tables, pos0, w,
+        scale=scale, cap=cap, kv_scale=kv_scale, interpret=interpret,
+        out_dtype=out_dtype,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "kv_scale", "interpret", "out_dtype")
+)
+def _paged_attention_mla(q_eff, q_rope, ckv_pool, krope_pool, block_tables,
+                         pos0, *, scale, kv_scale, interpret, out_dtype):
+    B, T, H, r = q_eff.shape
+    rope = q_rope.shape[-1]
+    out = paged_attention_mla_padded(
+        q_eff.reshape(B, T * H, r),
+        q_rope.reshape(B, T * H, rope),
+        ckv_pool, krope_pool,
+        block_tables.astype(jnp.int32),
+        pos0.astype(jnp.int32),
+        h=H, scale=scale, kv_scale=kv_scale, interpret=interpret,
+    )
+    out = out.reshape(B, T, H, r)
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def paged_attention_mla(q_eff, q_rope, ckv_pool, krope_pool, block_tables,
+                        pos0, *, scale: float, kv_scale: float = 1.0,
+                        interpret: bool = True, out_dtype=None):
+    """Fused paged MLA absorbed decode (DESIGN.md §9).
+
+    q_eff (B, T, H, r) rank-space queries; q_rope (B, T, H, rope); pools
+    (n_blocks, block, r) / (n_blocks, block, rope).  Logits are
+    q_eff·c_kv + q_rope·k_rope and the VALUE stream is c_kv itself, so the
+    result (B, T, H, r) still needs the caller's kv_b_v expansion."""
+    return _paged_attention_mla(
+        q_eff, q_rope, ckv_pool, krope_pool, block_tables, pos0,
+        scale=scale, kv_scale=kv_scale, interpret=interpret, out_dtype=out_dtype,
+    )

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle: the composed gather → mask → softmax paged attention.
+
+This mirrors models/attention.py's reference path (``paged_gather`` + the
+dense masked softmax) without importing it — kernels sit below models in
+the layering.  Parity tests assert the fused kernel against BOTH this
+oracle and the real composed layer code."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_logical(pool, block_tables):
+    """(B, max_blocks·block, ...) logical view — what the kernel avoids."""
+    nb, block = pool.shape[:2]
+    flat = pool.reshape((nb * block,) + pool.shape[2:])
+    idx = (
+        block_tables[:, :, None] * block
+        + jnp.arange(block, dtype=jnp.int32)[None, None, :]
+    )
+    return flat[idx.reshape(block_tables.shape[0], -1)]
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, pos0, *, scale,
+                        cap=0.0, window=None, kv_scale=1.0):
+    """Composed reference for ``paged_attention`` (same contract)."""
+    B, T, K, G, hd = q.shape
+    k = gather_logical(k_pool, block_tables).astype(jnp.float32) * kv_scale
+    v = gather_logical(v_pool, block_tables).astype(jnp.float32) * kv_scale
+    S = k.shape[1]
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    q_pos = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]  # (B, T, S)
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - kv_pos[None, None, :] < window)
+    logits = jnp.einsum(
+        "BTKGh,BSKh->BKGTS", q.astype(jnp.float32), k
+    ) * scale
+    if cap > 0:
+        logits = jnp.tanh(logits / cap) * cap
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("BKGTS,BSKh->BTKGh", probs, v).astype(q.dtype)
+
+
+def paged_attention_mla_ref(q_eff, q_rope, ckv_pool, krope_pool,
+                            block_tables, pos0, *, scale, kv_scale=1.0):
+    """Composed reference for ``paged_attention_mla`` (same contract)."""
+    B, T, H, r = q_eff.shape
+    c_kv = gather_logical(ckv_pool, block_tables).astype(jnp.float32) * kv_scale
+    k_rope = gather_logical(krope_pool, block_tables).astype(jnp.float32) * kv_scale
+    S = c_kv.shape[1]
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    q_pos = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    mask = kv_pos[None, None, None, :] <= q_pos[:, None, :, None]  # (B,1,T,S)
+    logits = (
+        jnp.einsum("BTHr,BSr->BHTS", q_eff.astype(jnp.float32), c_kv)
+        + jnp.einsum("BTHr,BSr->BHTS", q_rope.astype(jnp.float32), k_rope)
+    ) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("BHTS,BSr->BTHr", probs, c_kv).astype(q_eff.dtype)

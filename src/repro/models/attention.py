@@ -20,6 +20,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_attention_backend
+from repro.kernels.paged_attention import paged_attention, paged_attention_mla
 from repro.models.layers import (
     apply_rope,
     dense_apply,
@@ -238,13 +240,55 @@ def paged_update(pool, new, idx):
 
 
 def paged_gather(pool, block_tables):
-    """Per-row logical cache view: (B, max_blocks*block, ...).  Entries whose
-    table slot is trash (or beyond the row's position) are garbage — callers
-    must mask them with kv_pos <= pos, exactly like the dense tail."""
+    """REFERENCE implementation of the paged cache view (DESIGN.md §9).
+
+    Materializes each row's logical cache: (B, max_blocks*block, ...).
+    Entries whose table slot is trash (or beyond the row's position) are
+    garbage — callers must mask them with kv_pos <= pos, exactly like the
+    dense tail.  The serving hot path fuses this gather into the
+    ``kernels.paged_attention`` online-softmax loop (the 'composed' backend
+    keeps this path as the oracle the kernel's parity tests target — see
+    tests/test_paged_attention.py)."""
     nb, block = pool.shape[:2]
     flat = pool.reshape((nb * block,) + pool.shape[2:])
     idx = block_tables[:, :, None] * block + jnp.arange(block, dtype=jnp.int32)[None, None, :]
     return flat[idx.reshape(block_tables.shape[0], -1)]
+
+
+def _pool_dequant_scale(pool) -> float:
+    """Static in-kernel dequantization scale for a paged pool leaf."""
+    return 2.0 ** -KV_F if pool.dtype == jnp.int8 else 1.0
+
+
+def _fused_paged_attn(q, cache, block_tables, positions, *, cfg, window,
+                      backend, compute_dtype):
+    """Fused-kernel replacement for gather → mask → ``_qk_attn`` over a
+    scattered paged pool.  q (B, T, H, hd) post-rope; positions (B, T)
+    contiguous per row (the kernel only needs positions[:, 0])."""
+    B, T = q.shape[:2]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = cfg.query_scale if cfg.query_scale is not None else hd**-0.5
+    out = paged_attention(
+        q.reshape(B, T, K, H // K, hd),
+        cache["k"], cache["v"], block_tables, positions[:, 0],
+        scale=scale, cap=cfg.softcap, window=window,
+        kv_scale=_pool_dequant_scale(cache["k"]),
+        interpret=backend == "fused-interpret", out_dtype=compute_dtype,
+    )
+    return out.reshape(B, T, H, hd)
+
+
+def _fused_paged_mla(q_eff, q_rope, cache, block_tables, positions, *, cfg,
+                     backend, compute_dtype):
+    """Fused absorbed-MLA decode over the compressed c_kv/k_rope pools.
+    Returns the rank-space (B, T, H, r) output — callers still apply the
+    kv_b_v expansion."""
+    return paged_attention_mla(
+        q_eff, q_rope, cache["c_kv"], cache["k_rope"], block_tables,
+        positions[:, 0], scale=_mla_scale(cfg),
+        kv_scale=_pool_dequant_scale(cache["c_kv"]),
+        interpret=backend == "fused-interpret", out_dtype=compute_dtype,
+    )
 
 
 def attn_prefill_paged(
@@ -293,6 +337,14 @@ def attn_prefill_paged(
         "k": paged_update(cache["k"], k_new[0], idx),
         "v": paged_update(cache["v"], v_new[0], idx),
     }
+    backend = resolve_attention_backend()
+    if backend != "composed":
+        out = _fused_paged_attn(
+            q, cache, bt_row[None], positions, cfg=cfg, window=window,
+            backend=backend, compute_dtype=compute_dtype,
+        )
+        y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+        return y, cache
     k = cache_read(paged_gather(cache["k"], bt_row[None]), compute_dtype)
     v = cache_read(paged_gather(cache["v"], bt_row[None]), compute_dtype)
     S = k.shape[1]
@@ -373,6 +425,13 @@ def attn_verify_paged(
         k_new = apply_rope(k_new, positions, rope_base)
     idx = verify_token_index(block_tables, positions, cache["k"].shape[1], valid)
     cache = _verify_scatter(cache, ("k", "v"), (k_new, v_new), idx)
+    backend = resolve_attention_backend()
+    if backend != "composed":
+        out = _fused_paged_attn(
+            q, cache, block_tables, positions, cfg=cfg, window=window,
+            backend=backend, compute_dtype=compute_dtype,
+        )
+        return dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype), cache
     k = cache_read(paged_gather(cache["k"], block_tables), compute_dtype)
     v = cache_read(paged_gather(cache["v"], block_tables), compute_dtype)
     S = k.shape[1]
@@ -422,6 +481,14 @@ def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=100
                 "k": paged_update(cache["k"], k_new[:, 0], idx),
                 "v": paged_update(cache["v"], v_new[:, 0], idx),
             }
+            backend = resolve_attention_backend()
+            if backend != "composed":
+                out = _fused_paged_attn(
+                    q, cache, block_tables, positions, cfg=cfg, window=window,
+                    backend=backend, compute_dtype=compute_dtype,
+                )
+                y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+                return y, cache
             k = cache_read(paged_gather(cache["k"], block_tables), compute_dtype)
             v = cache_read(paged_gather(cache["v"], block_tables), compute_dtype)
         else:
@@ -553,6 +620,17 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
             "c_kv": paged_update(cache["c_kv"], c_new[:, 0], idx),
             "k_rope": paged_update(cache["k_rope"], kr_new[:, 0], idx),
         }
+        backend = resolve_attention_backend()
+        if backend != "composed":
+            out_c = _fused_paged_mla(
+                q_eff, q_rope, cache, block_tables, positions,
+                cfg=cfg, backend=backend, compute_dtype=compute_dtype,
+            )
+            out = jnp.einsum(
+                "BTHr,rHv->BTHv", out_c, as_dense(p["kv_b_v_proj"]["kernel"], compute_dtype)
+            )
+            y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+            return y, cache
         c_kv = cache_read(paged_gather(cache["c_kv"], block_tables), compute_dtype)
         k_rope = cache_read(paged_gather(cache["k_rope"], block_tables), compute_dtype)
     else:
@@ -607,6 +685,17 @@ def mla_verify_paged(
     kr_new = apply_rope(kr_new, positions, rope_base)[..., 0, :]
     idx = verify_token_index(block_tables, positions, cache["c_kv"].shape[1], valid)
     cache = _verify_scatter(cache, ("c_kv", "k_rope"), (c_new, kr_new), idx)
+    backend = resolve_attention_backend()
+    if backend != "composed":
+        out_c = _fused_paged_mla(
+            q_eff, q_rope, cache, block_tables, positions,
+            cfg=cfg, backend=backend, compute_dtype=compute_dtype,
+        )
+        out = jnp.einsum(
+            "BTHr,rHv->BTHv", out_c, as_dense(p["kv_b_v_proj"]["kernel"], compute_dtype)
+        )
+        y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
+        return y, cache
     c_kv = cache_read(paged_gather(cache["c_kv"], block_tables), compute_dtype)
     k_rope = cache_read(paged_gather(cache["k_rope"], block_tables), compute_dtype)
     S = c_kv.shape[1]

@@ -18,8 +18,17 @@ densifying the whole tree up front, so the packed bytes are what lives in
                 bit-identical to serving the ``quantize_tree`` float params
                 — tests assert token-exact generation on any backend.
 
-The default 'auto' resolves to 'pallas' on TPU and 'unpack' elsewhere;
-override with ``set_packed_backend()`` or ``REPRO_PACKED_BACKEND``.
+  'dense'     — serve the exactly-dequantized float tree: the engine
+                densifies the packed artifact ONCE at construction instead
+                of unpacking per call (off-TPU the unpack path is 4-5x
+                slower than dense — kernel_bench).  Direct calls under
+                'dense' take the unpack path (still exact).
+
+The default 'auto' resolves to 'pallas' on TPU and 'dense' elsewhere;
+override with ``set_packed_backend()`` or ``REPRO_PACKED_BACKEND``.  The
+backend state itself lives in ``repro.kernels.dispatch`` (one module owns
+both the packed and the paged-attention backend selection); the names are
+re-exported here for compatibility.
 
 Dispatch rule (DESIGN.md §3): a leaf is servable-packed iff it is a
 ``Packed`` instance; everything else (norm scales, biases, routers, the
@@ -31,7 +40,6 @@ read-out, MLA's absorbed einsums) dequantize on the fly via ``as_dense`` /
 from __future__ import annotations
 
 import math
-import os
 from typing import Any
 
 import jax
@@ -39,32 +47,31 @@ import jax.numpy as jnp
 
 from repro.core.packing import Packed, unpack, unpack_int, values_per_byte
 from repro.core.quantizer import delta_from_f
+from repro.kernels.dispatch import (
+    PACKED_BACKENDS as BACKENDS,
+    get_packed_backend,
+    resolve_packed_backend as resolve_backend,
+    set_packed_backend,
+)
 from repro.kernels.fixedpoint_matmul.ops import (
     fixedpoint_matmul,
     fixedpoint_matmul_experts,
 )
 
-BACKENDS = ("auto", "pallas", "interpret", "unpack")
-
-_backend = os.environ.get("REPRO_PACKED_BACKEND", "auto")
-
-
-def set_packed_backend(name: str) -> None:
-    """Select how Packed matmuls execute: auto|pallas|interpret|unpack."""
-    global _backend
-    if name not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}, got {name!r}")
-    _backend = name
-
-
-def get_packed_backend() -> str:
-    return _backend
-
-
-def resolve_backend() -> str:
-    if _backend != "auto":
-        return _backend
-    return "pallas" if jax.default_backend() == "tpu" else "unpack"
+__all__ = [
+    "BACKENDS",
+    "set_packed_backend",
+    "get_packed_backend",
+    "resolve_backend",
+    "is_packed",
+    "tree_has_packed",
+    "as_dense",
+    "unpack_params",
+    "scan_ready",
+    "packed_dense_apply",
+    "packed_expert_einsum",
+    "packed_take",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -133,7 +140,7 @@ def packed_dense_apply(p, x, *, n_in: int = 1, compute_dtype=None) -> jax.Array:
 
     backend = resolve_backend()
     f = jnp.asarray(pk.f)
-    if backend == "unpack" or f.ndim != 0:
+    if backend in ("unpack", "dense") or f.ndim != 0:
         k = unpack(pk, x.dtype)
         lhs = tuple(range(x.ndim - n_in, x.ndim))
         rhs = tuple(range(n_in))
@@ -167,7 +174,7 @@ def packed_expert_einsum(x, pk: Packed, *, compute_dtype=None) -> jax.Array:
     if compute_dtype is not None:
         x = x.astype(compute_dtype)
     backend = resolve_backend()
-    if backend == "unpack":
+    if backend in ("unpack", "dense"):
         return jnp.einsum("ECK,EKN->ECN", x, unpack(pk, x.dtype))
     return fixedpoint_matmul_experts(
         x, pk.data, jnp.asarray(pk.f), n_bits=pk.n_bits, n_out=pk.shape[-1],

@@ -12,12 +12,17 @@ The engine serves three kinds of param trees through the SAME forward code:
                    packed fixed-point matmul at every dense/einsum call site
                    (repro.models.quantized): Pallas on TPU — weights stream
                    HBM→VMEM at n_bits/16 of the bf16 bytes, the decode-side
-                   realization of the paper's bit-shift dequantization — and
-                   an exact unpack-then-dot elsewhere, so generation is
-                   token-identical to the quantize_tree params on any host.
+                   realization of the paper's bit-shift dequantization.  Off
+                   TPU the 'dense' backend densifies the tree ONCE at engine
+                   construction (exact dequantization), so generation stays
+                   token-identical to the quantize_tree params on any host
+                   without re-paying the unpack every matmul.
 
 ``Packed`` is a registered pytree node, so jit closes over packed trees
-like any other params; nothing is densified at rest.
+like any other params; nothing is densified at rest on TPU.  The engine
+also pins the attention backend (repro.kernels.dispatch): paged decode /
+verify / tail-prefill run the fused ``paged_attention`` kernel on TPU and
+the composed gather+softmax path elsewhere.
 """
 from __future__ import annotations
 
@@ -37,11 +42,17 @@ from repro.models.lm import (
     prefill_prefix_lm,
     scan_groups,
 )
+from repro.kernels.dispatch import (
+    get_attention_backend,
+    resolve_attention_backend,
+    set_attention_backend,
+)
 from repro.models.quantized import (
     get_packed_backend,
     resolve_backend,
     set_packed_backend,
     tree_has_packed,
+    unpack_params,
 )
 from repro.nn.tree import tree_bytes
 
@@ -262,10 +273,22 @@ class ServeEngine:
     def __post_init__(self):
         cfg, cd = self.cfg, self.compute_dtype
         self.packed = tree_has_packed(self.params)
-        # The packed backend is baked into the jitted traces at first call;
-        # pin it NOW so later set_packed_backend() calls can't desync a
-        # cached trace from the global (construct a new engine to switch).
+        # Both backends are baked into the jitted traces at first call; pin
+        # them NOW so later set_*_backend() calls can't desync a cached
+        # trace from the globals (construct a new engine to switch).
         self.backend = resolve_backend()
+        self.attn_backend = resolve_attention_backend()
+        if self.packed and self.backend == "dense":
+            # Off-TPU there is no fused dequant kernel and unpack-then-dot
+            # re-pays the unpack every matmul — slower than float serving.
+            # Densify ONCE: exact dequantization, token-identical output.
+            import logging
+
+            logging.getLogger(__name__).warning(
+                "packed params with backend 'dense': densifying once at engine "
+                "construction (exact; avoids per-call unpack overhead off-TPU)"
+            )
+            self.params = unpack_params(self.params)
 
         @jax.jit
         def _prefill(params, batch):
@@ -340,12 +363,14 @@ class ServeEngine:
         return self._sched_fns[key]
 
     def _with_backend(self, fn, *args):
-        prev = get_packed_backend()
+        prev_p, prev_a = get_packed_backend(), get_attention_backend()
         set_packed_backend(self.backend)
+        set_attention_backend(self.attn_backend)
         try:
             return fn(*args)
         finally:
-            set_packed_backend(prev)
+            set_packed_backend(prev_p)
+            set_attention_backend(prev_a)
 
     @classmethod
     def from_symog(
