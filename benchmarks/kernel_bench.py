@@ -156,6 +156,7 @@ def run() -> None:
     run_capacity_bench()
     run_prefix_cache_bench()
     run_speculative_bench()
+    run_chunked_prefill_bench()
 
 
 def run_fused_kernel_bench() -> None:
@@ -228,7 +229,7 @@ def run_serve_bench() -> None:
 
     from repro import configs
     from repro.models.lm import init_lm
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeConfig, ServeEngine
 
     cfg = _dc.replace(
         configs.get_reduced("internlm2-1.8b"),
@@ -273,7 +274,7 @@ def run_serve_bench() -> None:
                 jax.block_until_ready(out)
 
         def run_continuous():
-            eng.serve(reqs, n_slots=slots)
+            eng.serve(reqs, ServeConfig(n_slots=slots))
 
         def timed(fn):
             t0 = time.perf_counter()
@@ -349,7 +350,7 @@ def run_capacity_bench() -> None:
 
     from repro import configs
     from repro.models.lm import init_lm
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeConfig, ServeEngine
 
     cfg = _dc.replace(
         configs.get_reduced("internlm2-1.8b"),
@@ -383,10 +384,10 @@ def run_capacity_bench() -> None:
     ]
 
     eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=jnp.float32)
-    kw = dict(n_slots=n_slots, block_size=block, n_blocks=n_blocks, return_scheduler=True)
-    eng.serve(reqs[:1], **kw)  # warm the traces
+    serve_cfg = ServeConfig(n_slots=n_slots, block_size=block, n_blocks=n_blocks)
+    eng.serve(reqs[:1], serve_cfg)  # warm the traces
     t0 = time.perf_counter()
-    _, sched = eng.serve(reqs, **kw)
+    _, sched = eng.serve(reqs, serve_cfg, return_scheduler=True)
     dt = time.perf_counter() - t0
     peak = sched.stats["peak_live_slots"]
     ratio = peak / S_dense
@@ -424,7 +425,7 @@ def run_prefix_cache_bench() -> None:
 
     from repro import configs
     from repro.models.lm import init_lm
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeConfig, ServeEngine
 
     cfg = _dc.replace(
         configs.get_reduced("internlm2-1.8b"),
@@ -458,9 +459,10 @@ def run_prefix_cache_bench() -> None:
     ]
 
     eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=jnp.float32)
-    kw = dict(n_slots=n_req, block_size=block, time_admissions=True, return_scheduler=True)
-    eng.serve(reqs, prefix_cache=False, **kw)  # warm miss traces
-    eng.serve(reqs, prefix_cache=True, **kw)  # warm prefix-hit traces
+    cfg_off = ServeConfig(n_slots=n_req, block_size=block, time_admissions=True)
+    cfg_on = _dc.replace(cfg_off, prefix_cache=True)
+    eng.serve(reqs, cfg_off)  # warm miss traces
+    eng.serve(reqs, cfg_on)  # warm prefix-hit traces
     # median-of-3 paired repeats: the ttft ratio mixes two runs' admission
     # timings, the noisiest gated number in this file (each serve() builds
     # a fresh scheduler+cache, so repeats are independent)
@@ -468,9 +470,9 @@ def run_prefix_cache_bench() -> None:
     saved = 0.0
     hits = alloc_on = alloc_off = 0
     for _ in range(n_rep):
-        _, off = eng.serve(reqs, prefix_cache=False, **kw)
+        _, off = eng.serve(reqs, cfg_off, return_scheduler=True)
         t0 = time.perf_counter()
-        _, on = eng.serve(reqs, prefix_cache=True, **kw)
+        _, on = eng.serve(reqs, cfg_on, return_scheduler=True)
         dts.append(time.perf_counter() - t0)
         # a silent eligibility/matching regression would crash the
         # percentile below with an opaque numpy error — fail with the story
@@ -523,7 +525,7 @@ def run_speculative_bench() -> None:
 
     from repro import configs
     from repro.models.lm import init_lm
-    from repro.serve import Request, ServeEngine, SpeculativeConfig
+    from repro.serve import Request, ServeConfig, ServeEngine, SpeculativeConfig
 
     cfg = _dc.replace(
         configs.get_reduced("internlm2-1.8b"),
@@ -553,18 +555,19 @@ def run_speculative_bench() -> None:
     ]
     eng = ServeEngine(cfg, qt, max_len=prompt_len + budget, compute_dtype=jnp.float32)
     spec = SpeculativeConfig(draft=packed, k=k)
-    kw = dict(n_slots=slots, return_scheduler=True)
-    eng.serve(reqs, **kw)  # warm vanilla traces
-    eng.serve(reqs, speculative=spec, **kw)  # warm draft/verify traces
+    cfg_van = ServeConfig(n_slots=slots)
+    cfg_spec = ServeConfig(n_slots=slots, speculative=spec)
+    eng.serve(reqs, cfg_van)  # warm vanilla traces
+    eng.serve(reqs, cfg_spec)  # warm draft/verify traces
 
     n_rep, accepted, dts, dts_vanilla = 3, [], [], []
     sched = None
     for _ in range(n_rep):
         t0 = time.perf_counter()
-        _, van = eng.serve(reqs, **kw)
+        _, van = eng.serve(reqs, cfg_van, return_scheduler=True)
         dts_vanilla.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
-        _, sched = eng.serve(reqs, speculative=spec, **kw)
+        _, sched = eng.serve(reqs, cfg_spec, return_scheduler=True)
         dts.append(time.perf_counter() - t0)
         # a silent eligibility regression would bypass to vanilla decode and
         # divide by zero below — fail with the story instead
@@ -577,8 +580,8 @@ def run_speculative_bench() -> None:
     # ungated companion: the same controller against the FLOAT target,
     # where the 2-bit draft genuinely disagrees (untrained weights)
     eng_f = ServeEngine(cfg, params, max_len=prompt_len + budget, compute_dtype=jnp.float32)
-    eng_f.serve(reqs[:1], speculative=spec, n_slots=slots)
-    _, sf = eng_f.serve(reqs, speculative=spec, **kw)
+    eng_f.serve(reqs[:1], cfg_spec)
+    _, sf = eng_f.serve(reqs, cfg_spec, return_scheduler=True)
     assert sf.stats["spec_row_rounds"] > 0, "speculative bench ran zero verify rounds"
     apr_float = sf.stats["spec_emitted"] / sf.stats["spec_row_rounds"]
 
@@ -596,6 +599,111 @@ def run_speculative_bench() -> None:
         repeats=n_rep,
         spread={"apr_min": round(accepted[0], 3), "apr_max": round(accepted[-1], 3)},
         accepted_per_step=round(apr, 3),
+    )
+
+
+def run_chunked_prefill_bench() -> None:
+    """Latency under load: p99 inter-token latency with a long-prompt
+    adversary, one-shot admission vs chunked prefill (DESIGN.md §10).
+
+    Workload: three short-prompt requests decoding steadily while one
+    256-token adversary prompt arrives mid-stream.  One-shot admission runs
+    the whole 256-bucket prefill inside a single scheduler step — every
+    neighbor's next token waits behind it, which is exactly one giant ITL
+    outlier (the p99).  Chunked admission (32-token chunks) spreads the
+    same prefill FLOPs over 8 mixed prefill+decode steps, so no single step
+    carries the whole prompt.  Total work is unchanged (bit-identical pool
+    KV), so mean ITL barely moves — the tail is the whole story, hence the
+    gated metric:
+
+      itl_p99_ratio — p99(one-shot step wall) / p99(chunked step wall)
+                      over the steps where at least one already-live slot
+                      was decoding (committed floor 1.25 in
+                      BENCH_serve.baseline.json; measured 1.6-2.1x on the
+                      dev container).
+
+    Median-of-3 paired ratios, same discipline as the other serve gates.
+    """
+    import dataclasses as _dc
+
+    from repro import configs
+    from repro.models.lm import init_lm
+    from repro.serve import Request, Scheduler, ServeConfig, ServeEngine
+
+    cfg = _dc.replace(
+        configs.get_reduced("internlm2-1.8b"),
+        d_model=256,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=32,
+        d_ff=1024,
+        vocab_size=2048,
+    )
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+
+    long_len, short_len, budget, chunk, block = 256, 8, 48, 32, 16
+    max_len = long_len + block  # adversary decodes a few tokens, no growth churn
+    key = jax.random.PRNGKey(5)
+    shorts = [
+        Request(
+            tokens=np.asarray(
+                jax.random.randint(jax.random.fold_in(key, i), (short_len,), 0, cfg.vocab_size)
+            ),
+            max_new_tokens=budget,
+        )
+        for i in range(3)
+    ]
+    adversary = Request(
+        tokens=np.asarray(jax.random.randint(key, (long_len,), 0, cfg.vocab_size)),
+        max_new_tokens=4,
+        arrival=8,  # lands while the shorts are mid-decode
+    )
+    reqs = shorts + [adversary]
+    eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=jnp.float32)
+
+    def itl_samples(prefill_chunk):
+        """Per-step wall times over the steps a live slot was decoding —
+        each is one inter-token latency every live stream paid."""
+        sched = Scheduler(
+            eng, ServeConfig(n_slots=4, block_size=block, prefill_chunk=prefill_chunk)
+        )
+        for r in reqs:
+            sched.submit(r)
+        samples = []
+        while True:
+            decoding = sched._n_decoding() > 0
+            t0 = time.perf_counter()
+            more = sched.step()
+            jax.block_until_ready(sched._tokens)
+            if decoding:
+                samples.append(time.perf_counter() - t0)
+            if not more:
+                break
+        return np.asarray(samples)
+
+    itl_samples(0)  # warm one-shot traces (incl. the 256-bucket prefill)
+    itl_samples(chunk)  # warm the chunk-bucket prefix traces
+    n_rep, ratios = 3, []
+    one = chk = None
+    for _ in range(n_rep):
+        one, chk = itl_samples(0), itl_samples(chunk)
+        ratios.append(float(np.percentile(one, 99)) / float(np.percentile(chk, 99)))
+    ratios.sort()
+    ratio = ratios[n_rep // 2]
+    p99_one, p99_chk = float(np.percentile(one, 99)), float(np.percentile(chk, 99))
+    emit(
+        "serve_chunked_prefill_itl",
+        p99_chk * 1e6,
+        f"{long_len}-token adversary over {len(shorts)} decoding streams: "
+        f"p99 ITL {p99_one * 1e3:.1f}ms one-shot vs {p99_chk * 1e3:.1f}ms "
+        f"chunked ({chunk}/step) -> median {ratio:.2f}x tail cut over "
+        f"{n_rep} paired rounds (mean moves "
+        f"{float(np.mean(one)) / float(np.mean(chk)):.2f}x — same total work, "
+        "different shape)",
+        ref_us=_ref_us(),
+        repeats=n_rep,
+        spread={"ratio_min": round(ratios[0], 3), "ratio_max": round(ratios[-1], 3)},
+        itl_p99_ratio=round(ratio, 3),
     )
 
 

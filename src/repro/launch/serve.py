@@ -23,7 +23,11 @@ scheduled onto ``--slots`` ragged decode rows with EOS-free early exit at
 each budget, and compares useful-token throughput against the static
 uniform loop that runs every batch to its slowest member.  Reports pool
 occupancy (peak slots/blocks, preemptions, admission traces) and
-per-request latency percentiles (queue, ttft, tokens/step).
+per-request latency percentiles (queue, ttft, tokens/step).  All serving
+knobs flow through ONE ``serve.ServeConfig`` (DESIGN.md §10) —
+``--prefill-chunk`` caps admission-prefill stalls by chunking long
+prompts across steps, and ``warn_inert_flags`` reads
+``engine.capabilities()`` to flag structurally inert features.
 """
 from __future__ import annotations
 
@@ -41,28 +45,34 @@ from repro.configs import ARCHS, get_config, get_reduced
 from repro.models.lm import init_lm
 from repro.serve import (
     Request,
+    ServeConfig,
     ServeEngine,
     SpeculativeConfig,
     latency_stats,
-    prefix_cache_eligible,
-    speculative_eligible,
 )
 
 
-def warn_inert_flags(eng: ServeEngine, *, prefix_cache: bool, speculative: bool) -> None:
-    """One-line warning when a requested serving feature is structurally
-    inert on this architecture (DESIGN.md §7-8) — the flags are accepted
-    and serve() stays correct, but silently no-opping hides a misconfig."""
+def warn_inert_flags(eng: ServeEngine, config: ServeConfig) -> None:
+    """One-line warning per requested serving feature that is structurally
+    inert on this architecture — the flags are accepted and serve() stays
+    correct, but silently no-opping hides a misconfig.  The verdicts AND
+    the reasons come from ``engine.capabilities()``, the same report the
+    scheduler's own eligibility decisions read (DESIGN.md §7/§8/§10), so
+    the warning can never disagree with what the scheduler does."""
+    caps = eng.capabilities()
     arch = eng.cfg.name
-    if prefix_cache and not prefix_cache_eligible(eng):
-        print(f"WARNING: --prefix-cache is structurally inert on {arch} "
-              "(not a fully-paged all-attention decoder; DESIGN.md §7) — "
-              "every request will take the miss path")
-    if speculative and not speculative_eligible(eng):
-        print(f"WARNING: --speculative is structurally inert on {arch} "
-              "(per-row recurrent/SSD/ring/cross-kv state or MoE coupling "
-              "cannot roll back a rejected draft; DESIGN.md §8) — every "
-              "step runs the vanilla decode")
+    wanted = [
+        ("--prefix-cache", config.prefix_cache, "prefix_cache",
+         "every request will take the miss path"),
+        ("--speculative", config.speculative is not None, "speculative",
+         "every step runs the vanilla decode"),
+        ("--prefill-chunk", config.prefill_chunk > 0, "chunked_prefill",
+         "every admission prefills one-shot"),
+    ]
+    for flag, requested, cap, effect in wanted:
+        if requested and not caps[cap]:
+            print(f"WARNING: {flag} is structurally inert on {arch} "
+                  f"({caps[cap].reason}) — {effect}")
 
 
 def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
@@ -94,21 +104,17 @@ def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
     return reqs
 
 
-def run_continuous(eng: ServeEngine, reqs, *, slots: int,
-                   temperature: float, top_k: int, seed: int, label: str,
-                   prefix_cache: bool = False, speculative=None) -> None:
+def run_continuous(eng: ServeEngine, reqs, config: ServeConfig, *, label: str) -> None:
     useful = sum(r.max_new_tokens for r in reqs)
     # warm the traces with the SAME sampling config (greedy and sampled
     # decode/admit steps are different traces — scheduler_fns memo key)
-    eng.serve(reqs[:1], n_slots=slots, temperature=temperature, top_k=top_k,
-              seed=seed, prefix_cache=prefix_cache, speculative=speculative)
+    eng.serve(reqs[:1], config)
     t0 = time.time()
-    comps, sched = eng.serve(reqs, n_slots=slots, temperature=temperature,
-                             top_k=top_k, seed=seed, prefix_cache=prefix_cache,
-                             speculative=speculative, return_scheduler=True)
+    comps, sched = eng.serve(reqs, config, return_scheduler=True)
     dt = time.time() - t0
-    # static loop: batches of `slots` in arrival order, each run to the max
+    # static loop: batches of n_slots in arrival order, each run to the max
     # budget in the batch (finished rows burn decode steps)
+    slots = config.resolve(eng, reqs).n_slots
     static_steps = 0
     for lo in range(0, len(reqs), slots):
         static_steps += max(r.max_new_tokens for r in reqs[lo : lo + slots])
@@ -121,6 +127,11 @@ def run_continuous(eng: ServeEngine, reqs, *, slots: int,
           f"peak {sched.pool.peak_live}/{sched.pool.n_blocks} blocks of "
           f"{sched.pool.block_size}, {sched.stats['preemptions']} preemptions, "
           f"{sched.stats['admission_traces']} admission traces")
+    if sched.chunk:
+        s = sched.stats
+        print(f"  chunked prefill: {s['chunked_admissions']} admissions chunked "
+              f"(<= {sched.chunk} tokens/chunk), {s['prefill_chunks']} chunks "
+              f"interleaved with decode, {s['prefill_only_steps']} prefill-only steps")
     if sched.prefix is not None:
         s = sched.stats
         print(f"  prefix cache: {s['prefix_hits']} hits / {s['prefix_misses']} misses, "
@@ -175,6 +186,11 @@ def main() -> None:
                     help="--continuous: prepend one shared system prompt of "
                          "this many tokens to every request (the workload "
                          "--prefix-cache deduplicates)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="--continuous: split admission prefills into chunks "
+                         "of at most this many tokens, one per step alongside "
+                         "live decode (DESIGN.md §10; fully-paged archs only; "
+                         "0 = one-shot admission)")
     ap.add_argument("--speculative", action="store_true",
                     help="--continuous: self-speculative decoding — draft "
                          "with the --draft-bits pack_tree twin, verify "
@@ -211,23 +227,23 @@ def main() -> None:
     eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=dtype)
 
     if args.continuous:
-        warn_inert_flags(eng, prefix_cache=args.prefix_cache,
-                         speculative=args.speculative)
         spec = None
         if args.speculative:
             # the free cheap twin: the SAME weights packed at --draft-bits
             dcfg = core.SymogConfig(n_bits=args.draft_bits, total_steps=1)
             draft = core.pack_tree(params, core.symog_init(params, dcfg), dcfg)
             spec = SpeculativeConfig(draft=draft, k=args.draft_k)
+        serve_cfg = ServeConfig(n_slots=args.slots, temperature=args.temperature,
+                                top_k=args.top_k, seed=args.seed,
+                                prefix_cache=args.prefix_cache, speculative=spec,
+                                prefill_chunk=args.prefill_chunk)
+        warn_inert_flags(eng, serve_cfg)
         extras = {k: v for k, v in batch.items() if k != "tokens"} or None
         reqs = make_ragged_workload(cfg, n_requests=args.requests,
                                     prompt_len=args.prompt_len, steps=args.steps,
                                     seed=args.seed, batch_extras=extras,
                                     system_len=args.system_prompt_len)
-        run_continuous(eng, reqs, slots=args.slots,
-                       temperature=args.temperature, top_k=args.top_k,
-                       seed=args.seed, label="float",
-                       prefix_cache=args.prefix_cache, speculative=spec)
+        run_continuous(eng, reqs, serve_cfg, label="float")
         if args.quantized or args.packed:
             scfg = core.SymogConfig(n_bits=args.n_bits, total_steps=1)
             sst = core.symog_init(params, scfg)
@@ -239,10 +255,7 @@ def main() -> None:
                 qeng = ServeEngine(cfg, core.quantize_tree(params, sst, scfg),
                                    max_len=max_len, compute_dtype=dtype)
                 label = f"quantized {args.n_bits}-bit"
-            run_continuous(qeng, reqs, slots=args.slots,
-                           temperature=args.temperature, top_k=args.top_k,
-                           seed=args.seed, label=label,
-                           prefix_cache=args.prefix_cache, speculative=spec)
+            run_continuous(qeng, reqs, serve_cfg, label=label)
         return
 
     t0 = time.time()

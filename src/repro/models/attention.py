@@ -316,7 +316,13 @@ def attn_prefill_paged(
     causal horizon reads real KV (cached prefix or just-written tail) and
     junk only ever sits beyond it, exactly like decode.  With the pool
     storing at compute dtype this is bit-identical to the full-prompt
-    prefill the miss path runs (`tests/test_prefix_cache.py`)."""
+    prefill the miss path runs (`tests/test_prefix_cache.py`).
+
+    The traced offset makes this the CHUNK primitive too (DESIGN.md §10):
+    chunked prefill calls it once per chunk with ``positions`` starting at
+    the tokens already resident (0 included), interleaved with decode
+    steps — scatter-before-gather at global positions is exactly what
+    makes a chunk see every earlier chunk's KV as if prefilled at once."""
     B, T, D = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // K

@@ -340,7 +340,9 @@ def block_prefill_paged(
     own k/v is scattered into the pool in place of the dense prefill-cache
     extraction.  Only the fully-paged tier uses this (no MoE / recurrent /
     SSD / ring / cross state exists to replay), so the FFN is always the
-    dense MLP."""
+    dense MLP.  Chunked prefill (DESIGN.md §10) reuses this block per
+    chunk — the traced offset means one compiled trace serves every chunk
+    position of every prompt in the tail bucket."""
     h = _norm_apply(cfg, p["pre_norm"], x)
     y, cache = attn_prefill_paged(
         p["attn"],

@@ -512,6 +512,14 @@ def prefill_prefix_lm(params, batch, caches, bt_row, start, cfg: ModelConfig, *,
     prefix below ``start``, own tail at/above it) and the result is
     bit-identical to the full-prompt bucketed prefill of the miss path.
 
+    TWO consumers share this trace.  Prefix-cache admission (§7) runs it
+    once with ``start`` = the cached-prefix length.  Chunked prefill
+    (DESIGN.md §10) runs it REPEATEDLY — a chunk is nothing but a tail
+    prefill with ``start`` = tokens prefilled so far, INCLUDING ``start=0``
+    for the first chunk of an uncached prompt — so by induction over
+    chunks the pool after the last chunk equals the one-shot prefill
+    bit for bit, and serve() token streams are invariant to chunking.
+
     Only the fully-paged tier is supported — an all-attention decoder with
     every cache leaf in the block pool.  Architectures with non-paged
     per-row state cannot take this path: recurrent (R) and SSD (M) states,

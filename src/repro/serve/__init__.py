@@ -1,4 +1,6 @@
+from repro.serve.async_engine import AsyncServeEngine
 from repro.serve.blockpool import BlockPool
+from repro.serve.config import Capability, ServeConfig, capabilities
 from repro.serve.engine import ServeEngine, greedy_generate
 from repro.serve.prefixcache import PrefixCache
 from repro.serve.scheduler import (
@@ -7,6 +9,7 @@ from repro.serve.scheduler import (
     Scheduler,
     latency_stats,
     prefix_cache_eligible,
+    serve_requests,
 )
 from repro.serve.speculative import (
     SpeculativeConfig,
@@ -15,16 +18,21 @@ from repro.serve.speculative import (
 )
 
 __all__ = [
+    "AsyncServeEngine",
     "BlockPool",
+    "Capability",
     "Completion",
     "PrefixCache",
     "Request",
     "Scheduler",
+    "ServeConfig",
     "ServeEngine",
     "SpeculativeConfig",
     "SpeculativeScheduler",
+    "capabilities",
     "greedy_generate",
     "latency_stats",
     "prefix_cache_eligible",
+    "serve_requests",
     "speculative_eligible",
 ]

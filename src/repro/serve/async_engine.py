@@ -1,0 +1,192 @@
+"""Async streaming front-end over the continuous-batching scheduler
+(DESIGN.md §10).
+
+``Scheduler`` is a synchronous host loop: each ``step()`` is one jitted
+ragged decode dispatch (plus admission / chunk prefills) with a single
+host sync.  ``AsyncServeEngine`` wraps one scheduler in an asyncio drive
+loop so callers submit, stream, await and cancel requests concurrently
+while generation proceeds:
+
+  * the DRIVE TASK owns stepping: while there is live or queued work it
+    runs ``scheduler.step()`` in a worker thread (``asyncio.to_thread``) so
+    the event loop stays responsive during the device dispatch; when idle
+    it parks on a wake event (new submissions set it);
+  * a ``threading.Lock`` serializes every scheduler touch (step, submit,
+    cancel) — the scheduler itself is single-threaded by design, and the
+    lock keeps it that way without making it async-aware;
+  * STREAMING rides the scheduler's own callback hooks: ``submit`` installs
+    an ``on_token`` that forwards each committed token to a per-request
+    ``asyncio.Queue`` via ``call_soon_threadsafe`` (the callback fires in
+    the worker thread, mid-step) and an ``on_finish`` that closes the
+    stream and resolves the request's future.  Ordering is the scheduler's
+    commit order, i.e. exactly ``Completion.tokens``;
+  * CANCELLATION (``await cancel(idx)``) takes the lock in a worker thread
+    — it may wait out the in-flight step — then tears the request down
+    through ``Scheduler.cancel``: blocks return to the pool immediately,
+    survivors never notice (the trash-block redirect; scheduler module
+    docstring), and the stream ends with a ``finish_reason='cancelled'``
+    completion.
+
+One engine serves one ``ServeConfig`` (slots, sampling, prefix cache,
+chunked prefill, priorities all live there); ``Request.priority`` and
+``Request.arrival`` shape admission exactly as in synchronous serving —
+the async layer adds concurrency, not policy.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from typing import AsyncIterator, Callable, Dict, List, Optional
+
+from repro.serve.config import ServeConfig
+from repro.serve.scheduler import Completion, Request, Scheduler
+
+_DONE = object()  # per-request stream terminator
+
+
+class AsyncServeEngine:
+    """Asyncio front-end over one ``Scheduler`` (module docstring).
+
+    Use as an async context manager::
+
+        async with engine.serve_async(serve.ServeConfig(n_slots=4)) as srv:
+            idx = srv.submit(Request(tokens=prompt, max_new_tokens=32))
+            async for tok in srv.tokens(idx):
+                ...
+            comp = await srv.result(idx)
+
+    ``scheduler`` is the wrapped (lock-protected) scheduler — tests reach
+    its pool/stats through it; don't step it by hand while the engine is
+    open."""
+
+    def __init__(self, engine, config: Optional[ServeConfig] = None):
+        config = (config or ServeConfig()).resolve(engine)
+        if config.speculative is not None:
+            from repro.serve.speculative import SpeculativeScheduler
+
+            self.scheduler: Scheduler = SpeculativeScheduler(engine, config)
+        else:
+            self.scheduler = Scheduler(engine, config)
+        self.config = config
+        self._lock = threading.Lock()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._task: Optional[asyncio.Task] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._queues: Dict[int, asyncio.Queue] = {}
+        self._futures: Dict[int, asyncio.Future] = {}
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    async def __aenter__(self) -> "AsyncServeEngine":
+        self._loop = asyncio.get_running_loop()
+        self._wake = asyncio.Event()
+        self._task = asyncio.create_task(self._drive())
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    async def close(self) -> None:
+        """Stop the drive task.  Unfinished requests stay in the scheduler
+        (their streams simply stop advancing) — cancel them first if their
+        blocks should return to the pool."""
+        self._closed = True
+        if self._wake is not None:
+            self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+
+    async def _drive(self) -> None:
+        while not self._closed:
+            with self._lock:
+                work = bool(self.scheduler._n_live or self.scheduler._queue)
+            if work:
+                # one scheduler step per worker-thread hop: submissions and
+                # cancellations interleave at step granularity, exactly the
+                # synchronous loop's preemption points
+                await asyncio.to_thread(self._step_locked)
+            else:
+                self._wake.clear()
+                try:
+                    await asyncio.wait_for(self._wake.wait(), timeout=0.05)
+                except asyncio.TimeoutError:
+                    pass
+
+    def _step_locked(self) -> None:
+        with self._lock:
+            if self.scheduler._n_live or self.scheduler._queue:
+                self.scheduler.step()
+
+    # ------------------------------------------------------------------
+    # request surface
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, *, on_token: Optional[Callable[[int, int], None]] = None) -> int:
+        """Enqueue a request; returns its index.  Tokens stream into
+        ``tokens(idx)`` (and the optional extra ``on_token`` callback) as
+        they are committed; ``result(idx)`` resolves with the Completion.
+        Call from the event-loop thread the engine was entered on."""
+        if self._loop is None:
+            raise RuntimeError("AsyncServeEngine must be entered (async with) before submit")
+        if self._closed:
+            raise RuntimeError("AsyncServeEngine is closed")
+        loop = self._loop
+        q: asyncio.Queue = asyncio.Queue()
+        fut: asyncio.Future = loop.create_future()
+
+        def _tok(i: int, t: int) -> None:
+            # fires in the worker thread mid-step; hop to the loop
+            if on_token is not None:
+                on_token(i, t)
+            loop.call_soon_threadsafe(q.put_nowait, t)
+
+        def _fin(comp: Completion) -> None:
+            loop.call_soon_threadsafe(self._settle, comp)
+
+        with self._lock:
+            idx = self.scheduler.submit(req, on_token=_tok, on_finish=_fin)
+        self._queues[idx] = q
+        self._futures[idx] = fut
+        self._wake.set()
+        return idx
+
+    def _settle(self, comp: Completion) -> None:
+        self._queues[comp.index].put_nowait(_DONE)
+        fut = self._futures[comp.index]
+        if not fut.done():
+            fut.set_result(comp)
+
+    async def tokens(self, idx: int) -> AsyncIterator[int]:
+        """Async-iterate request ``idx``'s tokens in commit order (exactly
+        ``Completion.tokens``; a preemption replay re-delivers nothing).
+        Ends when the request finishes for any reason, cancellation
+        included."""
+        q = self._queues[idx]
+        while True:
+            item = await q.get()
+            if item is _DONE:
+                return
+            yield item
+
+    async def result(self, idx: int) -> Completion:
+        """Await request ``idx``'s Completion."""
+        return await self._futures[idx]
+
+    async def cancel(self, idx: int) -> bool:
+        """Cancel request ``idx`` (queued or live): its blocks return to
+        the pool immediately and its stream ends with a
+        ``finish_reason='cancelled'`` completion.  Runs in a worker thread
+        — it may wait out the in-flight scheduler step."""
+
+        def _do() -> bool:
+            with self._lock:
+                return self.scheduler.cancel(idx)
+
+        return await asyncio.to_thread(_do)
+
+    async def drain(self) -> List[Completion]:
+        """Await every submitted request; completions in submission order."""
+        futs = [self._futures[i] for i in sorted(self._futures)]
+        return list(await asyncio.gather(*futs)) if futs else []

@@ -1,0 +1,160 @@
+"""The serving surface's one configuration object (DESIGN.md §10).
+
+``serve()`` had accreted ten keyword arguments plus launcher-only
+eligibility warnings; every knob now lives in ``ServeConfig`` — one
+validated, frozen dataclass that is the single construction path for the
+scheduler (``ServeEngine.serve``, ``serve_requests``, ``Scheduler``,
+``AsyncServeEngine`` all take it).  Cross-feature conflicts are rejected
+HERE, at construction, instead of deep inside a scheduler subclass:
+
+  * ``prefix_cache`` + ``speculative`` — sharing draft-pool blocks under
+    the radix index is designed but not wired (DESIGN.md §8);
+  * ``speculative`` + ``prefill_chunk`` — the draft pool mirrors the
+    target's admission prefill one-shot; mirroring per chunk is not wired.
+
+``capabilities(engine)`` is the structural-eligibility report the
+launcher warnings and the scheduler's inert-flag decisions both read —
+one source of truth for the fully-paged tier tests, with human-readable
+reasons instead of a bare boolean.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every serving knob in one validated object.
+
+    n_slots        — decode slot-table size; 0 resolves per workload
+                     (``resolve``: min(len(requests), 8), or 8 for an
+                     open-ended async engine);
+    temperature    — sampling temperature (<= 0: greedy);
+    top_k          — top-k sampling cutoff (0: off);
+    seed           — base PRNG seed for (request, step)-keyed streams;
+    block_size     — tokens per paged KV block;
+    n_blocks       — pool capacity in blocks (0: dense-equivalent,
+                     n_slots x ceil(max_len/block));
+    prefix_cache   — radix prefix cache over the pool (DESIGN.md §7;
+                     structurally inert off the fully-paged tier);
+    speculative    — a ``serve.SpeculativeConfig`` enabling draft-K/
+                     verify-K+1 self-speculative decoding (DESIGN.md §8);
+    prefill_chunk  — > 0 splits admission prefills into chunks of at most
+                     this many tokens, scheduled one per step alongside
+                     live decode (DESIGN.md §10; inert off the fully-paged
+                     tier).  Token streams are bit-identical to one-shot
+                     admission — only latency shape changes;
+    on_token       — default per-token streaming callback
+                     ``cb(request_index, token)``, fired as each token is
+                     committed (per-request overrides via
+                     ``Scheduler.submit``); replays after preemption are
+                     deduplicated, so every token streams exactly once;
+    time_admissions — record per-admission wall times
+                     (``Scheduler.admit_times``).
+    """
+
+    n_slots: int = 0
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    block_size: int = 16
+    n_blocks: int = 0
+    prefix_cache: bool = False
+    speculative: Optional[Any] = None  # serve.SpeculativeConfig
+    prefill_chunk: int = 0
+    on_token: Optional[Callable[[int, int], None]] = None
+    time_admissions: bool = False
+
+    def __post_init__(self):
+        if self.n_slots < 0:
+            raise ValueError(f"n_slots must be >= 0 (0 = auto), got {self.n_slots}")
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got {self.top_k}")
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if self.n_blocks < 0:
+            raise ValueError(f"n_blocks must be >= 0 (0 = dense-equivalent), got {self.n_blocks}")
+        if self.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0 (0 = one-shot), got {self.prefill_chunk}")
+        if self.prefix_cache and self.speculative is not None:
+            # sharing draft-pool blocks under the radix index is designed
+            # but not wired (DESIGN.md §8); refuse loudly over silently
+            # dropping one of the two features
+            raise ValueError("speculative decoding and prefix_cache are mutually exclusive")
+        if self.speculative is not None and self.prefill_chunk:
+            raise ValueError(
+                "speculative decoding and prefill_chunk are mutually exclusive "
+                "(the draft pool mirrors admission prefills one-shot; DESIGN.md §10)"
+            )
+
+    def resolve(self, engine=None, requests: Sequence[Any] = ()) -> "ServeConfig":
+        """The fully-explicit copy a Scheduler is built from: ``n_slots=0``
+        becomes min(len(requests), 8) for a one-shot workload or 8 for an
+        open-ended (async) engine — the default that used to hide inside
+        ``serve()`` and that benchmarks/tests re-derived inconsistently.
+        ``engine`` is accepted for future engine-dependent defaults."""
+        n = self.n_slots
+        if not n:
+            n = max(1, min(len(requests), 8)) if len(requests) else 8
+        return dataclasses.replace(self, n_slots=n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Capability:
+    """One structural-eligibility verdict: truthy iff supported; ``reason``
+    says which architectural property blocks the feature when not."""
+
+    supported: bool
+    reason: str = ""
+
+    def __bool__(self) -> bool:
+        return self.supported
+
+
+def _tier_reasons(engine, *, allow_mla: bool) -> list:
+    """Why this engine misses the fully-paged tier (empty when it holds).
+    Mirrors ``scheduler.fully_paged_tier`` clause for clause so the report
+    and the eligibility test can never disagree."""
+    from repro.serve.scheduler import fully_paged_tier
+
+    cfg = engine.cfg
+    r = []
+    if cfg.family != "decoder":
+        r.append(f"family '{cfg.family}' is not an all-attention decoder")
+    if cfg.moe:
+        r.append("MoE capacity competition couples tokens across the batch")
+    if cfg.use_mla and not allow_mla:
+        r.append("MLA's compressed cache has no tail-prefill trace (DESIGN.md §7)")
+    if cfg.kv_cache_dtype == "int8_fp":
+        r.append("int8 KV re-rounds, splitting tail numerics from the full-prefill oracle")
+    if not r and not fully_paged_tier(engine, allow_mla=allow_mla):
+        r.append("non-paged per-row cache state (recurrent/SSD/ring/cross-kv)")
+    return r
+
+
+def capabilities(engine) -> Dict[str, Capability]:
+    """Structural serving capabilities of ``engine``, with reasons.
+
+    fully_paged     — every cache leaf of every group pages into the block
+                      pool (no MLA): the tier §7 and chunked prefill need;
+    prefix_cache    — radix prefix sharing would actually share (§7);
+    chunked_prefill — ``prefill_chunk`` would actually chunk (the tail-
+                      prefill trace exists for this architecture; §10);
+    speculative     — draft/verify rounds would actually speculate (§8;
+                      MLA allowed — the absorbed verify form exists).
+
+    The launcher's inert-flag warnings and the scheduler's own eligibility
+    decisions both read THIS report, so they can never disagree.
+    """
+    strict = _tier_reasons(engine, allow_mla=False)
+    with_mla = _tier_reasons(engine, allow_mla=True)
+    full = Capability(not strict, "; ".join(strict))
+    return {
+        "fully_paged": full,
+        "prefix_cache": full,
+        "chunked_prefill": full,
+        "speculative": Capability(not with_mla, "; ".join(with_mla)),
+    }

@@ -27,6 +27,7 @@ the composed gather+softmax path elsewhere.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Sequence
 
 import numpy as np
@@ -400,51 +401,58 @@ class ServeEngine:
     def decode(self, caches, tokens, pos):
         return self._with_backend(self._decode, self.params, caches, tokens, pos)
 
+    def capabilities(self):
+        """Structural serving capabilities of this engine with reasons —
+        ``{fully_paged, prefix_cache, chunked_prefill, speculative}``, each
+        a truthy/falsy ``serve.Capability``.  The one source of truth the
+        launcher's inert-flag warnings and the scheduler's own eligibility
+        decisions both read (DESIGN.md §7/§8/§10)."""
+        from repro.serve.config import capabilities
+
+        return capabilities(self)
+
     def serve(
         self,
         requests: Sequence[Any],
+        config=None,
         *,
-        n_slots: int = 0,
-        temperature: float = 0.0,
-        top_k: int = 0,
-        seed: int = 0,
-        block_size: int = 16,
-        n_blocks: int = 0,
-        prefix_cache: bool = False,
-        speculative=None,
-        time_admissions: bool = False,
         return_scheduler: bool = False,
+        **legacy,
     ):
         """Continuous-batching serve: schedule ``requests`` (scheduler.Request)
-        onto ``n_slots`` ragged decode rows (default: min(len, 8)) backed by a
-        paged KV block pool (``block_size`` tokens per block; ``n_blocks``
-        defaults to dense-equivalent capacity, n_slots ceil(max_len/block)
-        blocks) with EOS early-exit and temperature/top-k sampling.
-        ``prefix_cache`` enables automatic prefix caching (DESIGN.md §7) on
-        the fully-paged architecture tier — a no-op elsewhere.
-        ``speculative`` (a ``serve.SpeculativeConfig``) runs draft-K/verify-
-        K+1 self-speculative decoding (DESIGN.md §8) on that same tier —
-        greedy streams stay token-identical to ``generate_static``; inert
-        elsewhere.  Returns Completions in submission order (and the drained
-        Scheduler when asked — slot events and step stats for
-        tests/benchmarks)."""
+        onto a ragged paged-decode slot table per ``config`` (a
+        ``serve.ServeConfig`` — sampling, block geometry, prefix cache §7,
+        speculative decoding §8, chunked prefill + streaming §10 all live
+        there; ``config=None`` means all defaults).  Returns Completions in
+        submission order (and the drained Scheduler when asked — slot events
+        and step stats for tests/benchmarks).
+
+        The pre-redesign keyword form ``serve(reqs, n_slots=..., ...)``
+        still works but emits a ``DeprecationWarning``; pass a ServeConfig.
+        """
+        from repro.serve.config import ServeConfig
         from repro.serve.scheduler import serve_requests
 
-        n = n_slots or max(1, min(len(requests), 8))
-        comps, sched = serve_requests(
-            self,
-            requests,
-            n_slots=n,
-            temperature=temperature,
-            top_k=top_k,
-            seed=seed,
-            block_size=block_size,
-            n_blocks=n_blocks,
-            prefix_cache=prefix_cache,
-            speculative=speculative,
-            time_admissions=time_admissions,
-        )
+        if legacy:
+            if config is not None:
+                raise TypeError("pass either a ServeConfig or legacy keyword args, not both")
+            warnings.warn(
+                "serve(requests, n_slots=..., ...) is deprecated; pass "
+                "serve(requests, serve.ServeConfig(...))",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = ServeConfig(**legacy)
+        comps, sched = serve_requests(self, requests, config)
         return (comps, sched) if return_scheduler else comps
+
+    def serve_async(self, config=None):
+        """An ``AsyncServeEngine`` over this engine: submit/stream/cancel
+        from asyncio coroutines while a drive loop steps the scheduler in a
+        worker thread (DESIGN.md §10).  Use as an async context manager."""
+        from repro.serve.async_engine import AsyncServeEngine
+
+        return AsyncServeEngine(self, config)
 
     def generate(self, batch: Dict[str, jax.Array], steps: int) -> jax.Array:
         """Greedy continuation of a batched prompt; returns (B, steps).
@@ -452,6 +460,7 @@ class ServeEngine:
         Compatibility wrapper over ``serve``: each row becomes one request
         (fixed ``steps`` budget, no EOS), scheduled onto B slots — so the
         classic API now exercises the ragged paged decode path."""
+        from repro.serve.config import ServeConfig
         from repro.serve.scheduler import Request
 
         tokens = np.asarray(batch["tokens"])
@@ -460,7 +469,7 @@ class ServeEngine:
         for b in range(B):
             extras = {k: np.asarray(v[b : b + 1]) for k, v in batch.items() if k != "tokens"}
             reqs.append(Request(tokens=tokens[b], max_new_tokens=steps, extras=extras or None))
-        comps = self.serve(reqs, n_slots=B)
+        comps = self.serve(reqs, ServeConfig(n_slots=B))
         if any(len(c.tokens) != steps for c in comps):
             raise ValueError(f"max_len={self.max_len} too small for {steps} steps")
         return jnp.asarray(np.stack([np.asarray(c.tokens, np.int32) for c in comps]))

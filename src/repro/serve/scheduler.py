@@ -10,9 +10,9 @@ continuous-batching loop (Orca-style iteration-level scheduling) on a
 vLLM-style paged cache:
 
   * a FIFO **request queue** (``submit``) with optional arrival times in
-    decode-step units; admission takes the first DUE request (a
-    not-yet-due head never blocks due requests behind it — FIFO is
-    preserved among due requests);
+    decode-step units; admission takes the first DUE request of the
+    highest ``Request.priority`` (FIFO among equal-priority due requests;
+    a not-yet-due head never blocks due requests behind it);
   * a **slot table** of ``n_slots`` rows sharing one jitted decode step;
     each row carries its own position, so the batch is ragged;
   * a **block pool**: attention-family caches live in shared
@@ -32,15 +32,42 @@ vLLM-style paged cache:
     (``stats['admission_traces']`` counts the distinct trace shapes this
     run used; ``stats['admission_trace_compiles']`` the ones built fresh —
     0 on a warm engine, traces are engine-memoized);
+  * **chunked prefill** (``prefill_chunk > 0``, DESIGN.md §10): instead of
+    one whole-bucket prefill stalling every decoding row, admission runs
+    the prompt as a sequence of tail-prefill chunks — ONE chunk per
+    scheduler step, in a mixed batch alongside the live decode dispatch —
+    through the §7 traced-start-offset trace (a chunk IS a tail prefill
+    with ``start = tokens done so far``).  The pool KV after the last
+    chunk is bit-identical to the one-shot prefill, so token streams never
+    change; only the latency shape does (long-prompt admission no longer
+    adds a whole-prompt stall to neighbors' inter-token latency).  A
+    prefilling slot holds its blocks but keeps its DEVICE table row zeroed
+    until the final chunk — the shared decode dispatch writes through any
+    populated row, so publishing early would let a concurrent decode step
+    corrupt freshly prefilled blocks; chunks address the pool through a
+    host-built row instead.  Fully-paged tier only (the tail-prefill trace
+    exists there); elsewhere the knob is accepted and inert;
   * **preemption**: if the pool is exhausted when a request needs its next
-    block, the YOUNGEST live request is evicted, its blocks freed, and the
-    request requeued at the front for a from-scratch restart.  Restarts
-    are token-exact: greedy decode is deterministic and sampled streams
-    are keyed by (request index, step), so a replay draws the same tokens;
+    block, the lowest-priority (youngest among ties) live request is
+    evicted, its blocks freed, and the request requeued at the front for a
+    from-scratch restart.  Restarts are token-exact: greedy decode is
+    deterministic and sampled streams are keyed by (request index, step),
+    so a replay draws the same tokens;
   * **eviction**: a row that emits ``eos_id`` or exhausts its budget frees
     its blocks and its block-table row is zeroed — the reserved trash
     block (physical row 0) absorbs the dead row's writes until the slot is
     reused, so no pool-wide revert pass is needed;
+  * **cancellation** (``cancel(idx)``): a queued request is dropped; a
+    live one is torn down mid-stream — blocks return to the pool
+    IMMEDIATELY (same ``_release`` path as eviction, so the trash-block
+    redirect keeps the shared decode dispatch safe) and the partial output
+    is returned as a ``finish_reason='cancelled'`` Completion.  Surviving
+    rows are untouched: row independence (the §6 active-mask contract)
+    means a neighbor's teardown never perturbs a live stream;
+  * **streaming**: per-token callbacks (``ServeConfig.on_token`` or
+    per-request via ``submit``) fire as tokens are committed, in stream
+    order; a preempted request's replay is deduplicated against what was
+    already streamed (replays are token-exact, so the count suffices);
   * **sampling**: greedy when ``temperature <= 0``; otherwise temperature /
     top-k sampling keyed by (request index, step) — NOT by slot — so a
     fixed seed reproduces token streams regardless of slot placement, and
@@ -60,17 +87,20 @@ vLLM-style paged cache:
     Eviction order under pressure: cached-but-idle blocks are reclaimed
     (LRU, inside ``BlockPool.alloc``) BEFORE any live request is preempted.
 
-Everything device-side runs through engine-owned jitted traces (DESIGN.md
-§6).  Slot state (tokens/positions/active/seed bases/block tables) lives
-on device; the host loop's only download per step is the sampled token
-vector it needs for EOS and budget bookkeeping.
+All knobs arrive as ONE validated ``serve.ServeConfig`` (DESIGN.md §10);
+the legacy keyword-argument constructor still works but warns.  Everything
+device-side runs through engine-owned jitted traces (DESIGN.md §6).  Slot
+state (tokens/positions/active/seed bases/block tables) lives on device;
+the host loop's only download per step is the sampled token vector it
+needs for EOS and budget bookkeeping.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -79,6 +109,7 @@ import jax.numpy as jnp
 
 from repro.models.lm import PAGED_CACHE_LEAVES, scan_groups
 from repro.serve.blockpool import BlockPool
+from repro.serve.config import ServeConfig
 from repro.serve.prefixcache import PrefixCache
 
 
@@ -90,6 +121,7 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1  # -1: never emitted
     arrival: int = 0  # earliest decode step at which admission may happen
+    priority: int = 0  # higher admits first among due requests; preempted last
     extras: Optional[Dict[str, Any]] = None  # encdec: frames (1,S,D); vlm: patches
 
 
@@ -98,11 +130,13 @@ class Completion:
     index: int  # submission order
     tokens: List[int]  # generated ids (incl. the eos token if emitted)
     prompt_len: int
-    finish_reason: str  # 'eos' | 'length'
+    finish_reason: str  # 'eos' | 'length' | 'cancelled'
     slot: int
     arrival: int
     admitted_step: int  # last admission (preempted requests restart)
     finished_step: int
+    first_token_step: int = -1  # step the first token was sampled (== admitted_step
+    # for one-shot admission; later for chunked prefills; -1 if never sampled)
     spec_steps: int = 0  # speculative draft/verify rounds this request rode
     spec_tokens: int = 0  # tokens committed by those rounds (accepted + bonus)
 
@@ -118,6 +152,15 @@ class _Slot:
     admitted_step: int
     pos: int  # host mirror of the device position (next cache write)
     blocks: List[int]  # logical block ids, in table order
+    first_token_step: int = -1
+    # chunked-prefill state (DESIGN.md §10): while ``prefilling`` the device
+    # table row stays ZEROED (decode writes land in the trash block) and
+    # chunks address the pool through the host-built ``row``
+    prefilling: bool = False
+    done: int = 0  # prompt tokens whose KV is resident (chunk start offset)
+    row: Optional[np.ndarray] = None  # host physical-id table row
+    admit_wall: float = 0.0  # accumulated chunk wall time (time_admissions)
+    hit: int = 0  # prefix-cache matched tokens at admission
 
     @property
     def prompt_len(self) -> int:
@@ -126,14 +169,15 @@ class _Slot:
 
 def fully_paged_tier(engine, *, allow_mla: bool = False) -> bool:
     """True iff EVERY cache leaf of every group pages into the block pool —
-    the structural precondition both the prefix cache (DESIGN.md §7) and
-    the speculative controller (§8) share.  Holds for all-attention
-    decoders only: vlm's per-request patch prefix, encdec cross-kv,
-    recurrent/SSD/ring per-row state and MoE capacity coupling all fail
-    it, and int8 KV re-rounds (splitting tail-prefill numerics from the
-    full-prefill oracle).  ``allow_mla``: MLA's compressed c_kv/k_rope
-    leaves do page and the speculative verify implements the absorbed
-    multi-token form, so §8 admits MLA where §7 does not."""
+    the structural precondition the prefix cache (DESIGN.md §7), the
+    speculative controller (§8) and chunked prefill (§10) share.  Holds for
+    all-attention decoders only: vlm's per-request patch prefix, encdec
+    cross-kv, recurrent/SSD/ring per-row state and MoE capacity coupling
+    all fail it, and int8 KV re-rounds (splitting tail-prefill numerics
+    from the full-prefill oracle).  ``allow_mla``: MLA's compressed
+    c_kv/k_rope leaves do page and the speculative verify implements the
+    absorbed multi-token form, so §8 admits MLA where §7/§10 do not.
+    ``engine.capabilities()`` wraps this test with per-clause reasons."""
     cfg = engine.cfg
     if (
         cfg.family != "decoder"
@@ -154,9 +198,11 @@ def fully_paged_tier(engine, *, allow_mla: bool = False) -> bool:
 def prefix_cache_eligible(engine) -> bool:
     """Would ``prefix_cache=True`` actually share on this engine?  The flag
     is accepted everywhere but structurally inert off the fully-paged tier
-    (DESIGN.md §7) — launchers use this to warn instead of silently
-    no-opping."""
-    return fully_paged_tier(engine, allow_mla=False)
+    (DESIGN.md §7).  Delegates to ``engine.capabilities()`` — the one
+    source of truth launchers print reasons from."""
+    from repro.serve.config import capabilities
+
+    return bool(capabilities(engine)["prefix_cache"])
 
 
 def _sample_seed(req_index: int, step: int) -> int:
@@ -171,22 +217,32 @@ def _sample_seed(req_index: int, step: int) -> int:
 
 
 def latency_stats(completions: Sequence[Completion]) -> Dict[str, Dict[str, float]]:
-    """Per-request latency percentiles, in decode-step units.
+    """Per-request latency percentiles, in decode-step units (cancelled
+    requests are excluded — their streams never ran to a latency).
 
     queue_steps     — steps spent waiting for a slot (admitted - arrival;
                       a preempted request counts its restart wait too);
-    ttft_steps      — steps from arrival until the first token exists (the
-                      admission prefill samples it, hence queue + 1);
+    ttft_steps      — steps from arrival until the first token exists
+                      (``first_token_step - arrival + 1``: the admission
+                      prefill samples it, hence queue + 1 for one-shot
+                      admission; a chunked prefill's first token lands at
+                      its FINAL chunk, so long prompts honestly show their
+                      spread-out admission here);
     tokens_per_step — emitted tokens over the steps the slot was occupied;
     accepted_per_step — speculative decoding only (DESIGN.md §8): tokens
                       committed per draft/verify round for this request
                       (accepted drafts + the verify's correction/bonus
                       token, so the vanilla decode rate is 1.0).
     """
+    completions = [c for c in completions if c.finish_reason != "cancelled"]
     if not completions:
         return {}
     queue = np.asarray([c.admitted_step - c.arrival for c in completions], np.float64)
-    ttft = queue + 1.0
+    first = np.asarray(
+        [c.first_token_step if c.first_token_step >= 0 else c.admitted_step for c in completions],
+        np.float64,
+    )
+    ttft = first - np.asarray([c.arrival for c in completions], np.float64) + 1.0
     tps = np.asarray(
         [len(c.tokens) / max(1, c.finished_step - c.admitted_step + 1) for c in completions],
         np.float64,
@@ -209,6 +265,10 @@ def latency_stats(completions: Sequence[Completion]) -> Dict[str, Dict[str, floa
 class Scheduler:
     """Continuous-batching loop over a ``ServeEngine`` (see module docstring).
 
+    Built from one ``serve.ServeConfig`` — ``Scheduler(engine, config)``.
+    The legacy keyword form ``Scheduler(engine, n_slots, temperature=...)``
+    still works but emits a ``DeprecationWarning``.
+
     All jitted calls go through ``engine._with_backend`` so the packed
     dispatch inside the shared decode trace always sees the backend the
     engine was pinned to at construction (DESIGN.md §4).
@@ -218,27 +278,28 @@ class Scheduler:
     classic ``generate`` wrapper can never be preempted); at least
     ceil(max_len/block) so a lone request can always run to completion."""
 
-    def __init__(
-        self,
-        engine,
-        n_slots: int,
-        *,
-        temperature: float = 0.0,
-        top_k: int = 0,
-        seed: int = 0,
-        block_size: int = 16,
-        n_blocks: int = 0,
-        prefix_cache: bool = False,
-        time_admissions: bool = False,
-    ):
-        if n_slots < 1:
-            raise ValueError("n_slots must be >= 1")
+    def __init__(self, engine, config: Optional[ServeConfig] = None, **legacy):
+        if isinstance(config, int):  # legacy positional n_slots
+            legacy["n_slots"] = config
+            config = None
+        if legacy:
+            if config is not None:
+                raise TypeError("pass either a ServeConfig or legacy keyword args, not both")
+            warnings.warn(
+                "Scheduler(engine, n_slots, **kwargs) is deprecated; pass "
+                "Scheduler(engine, serve.ServeConfig(...))",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = ServeConfig(**legacy)
+        config = (config or ServeConfig()).resolve(engine)
+        self.config = config
         self.eng = engine
         self.cfg = cfg = engine.cfg
-        self.n_slots = S = int(n_slots)
-        self.temperature = float(temperature)
-        self.top_k = int(top_k)
-        self._base_key = jax.random.PRNGKey(seed)
+        self.n_slots = S = int(config.n_slots)
+        self.temperature = float(config.temperature)
+        self.top_k = int(config.top_k)
+        self._base_key = jax.random.PRNGKey(config.seed)
         self._temp = jnp.float32(max(self.temperature, 1e-6))
         self._offset = cfg.prefix_len if cfg.family == "vlm" else 0
         self._groups = scan_groups(cfg)
@@ -247,9 +308,9 @@ class Scheduler:
         self._fns = engine.scheduler_fns(greedy=self.temperature <= 0.0, top_k=self.top_k)
         self._compiles0 = self._fns.admit_compiles
 
-        self.block_size = blk = int(block_size)
+        self.block_size = blk = int(config.block_size)
         self.max_blocks = -(-engine.max_len // blk)
-        self.n_blocks = int(n_blocks) or S * self.max_blocks
+        self.n_blocks = int(config.n_blocks) or S * self.max_blocks
         if self.n_blocks < self.max_blocks:
             raise ValueError(
                 f"n_blocks={self.n_blocks} cannot hold one max_len={engine.max_len} "
@@ -260,6 +321,7 @@ class Scheduler:
         # trash block evicted slots write into (their table rows are zeroed)
         self._block_tables = jnp.zeros((S, self.max_blocks), jnp.int32)
 
+        caps = engine.capabilities()
         # prefix cache (DESIGN.md §7): only the fully-paged tier can share —
         # every cache leaf of every group must live in the block pool, which
         # holds exactly for all-attention decoders (no MoE capacity coupling,
@@ -267,10 +329,17 @@ class Scheduler:
         # tail-prefill numerics from the full-prefill oracle).  Elsewhere the
         # flag is accepted and the cache is structurally inert.
         self.prefix: Optional[PrefixCache] = None
-        if prefix_cache and self._prefix_eligible():
+        if config.prefix_cache and not self._offset and caps["prefix_cache"]:
             self.prefix = PrefixCache(self.pool, blk, engine.params_fingerprint())
             self.pool.set_reclaimer(self.prefix.reclaim)
-        self._time_admissions = bool(time_admissions)
+        # chunked prefill (DESIGN.md §10) rides the §7 tail-prefill trace, so
+        # it shares the tier test; inert elsewhere like the prefix cache
+        self.chunk = (
+            int(config.prefill_chunk)
+            if config.prefill_chunk and not self._offset and caps["chunked_prefill"]
+            else 0
+        )
+        self._time_admissions = bool(config.time_admissions)
         self.admit_times: List[Tuple[int, float, int]] = []  # (req, seconds, hit_tokens)
 
         self.caches = self._init_caches()
@@ -287,15 +356,22 @@ class Scheduler:
         self._queue: collections.deque = collections.deque()
         self._n_submitted = 0
         self._completions: Dict[int, Completion] = {}
+        self._on_token: Dict[int, Callable[[int, int], None]] = {}
+        self._on_finish: Dict[int, Callable[[Completion], None]] = {}
+        self._streamed: Dict[int, int] = {}  # req idx -> tokens already streamed
         self.step_count = 0
         self._buckets_used: set = set()
         self.stats = {
             "decode_steps": 0,
             "idle_steps": 0,
+            "prefill_only_steps": 0,
             "prefills": 0,
+            "prefill_chunks": 0,
+            "chunked_admissions": 0,
             "admissions": 0,
             "evictions": 0,
             "preemptions": 0,
+            "cancellations": 0,
             "tokens_emitted": 0,
             "admission_traces": 0,
             "admission_trace_compiles": 0,
@@ -307,13 +383,6 @@ class Scheduler:
             "prefix_evicted_blocks": 0,
         }
         self.events: List[Tuple[int, str, int, int]] = []  # (step, kind, req, slot)
-
-    def _prefix_eligible(self) -> bool:
-        """Structural precondition for prefix sharing: the fully-paged tier
-        (module-level ``fully_paged_tier``; vlm's ``self._offset`` shifts
-        the block map, so it double-checks here).  MLA is excluded — its
-        tail-prefill trace does not exist (DESIGN.md §7)."""
-        return not self._offset and fully_paged_tier(self.eng, allow_mla=False)
 
     # ------------------------------------------------------------------
     # cache pool
@@ -352,8 +421,19 @@ class Scheduler:
     # ------------------------------------------------------------------
     # queue / admission
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> int:
-        """Enqueue a request; returns its index (completion order key)."""
+    def submit(
+        self,
+        req: Request,
+        *,
+        on_token: Optional[Callable[[int, int], None]] = None,
+        on_finish: Optional[Callable[[Completion], None]] = None,
+    ) -> int:
+        """Enqueue a request; returns its index (completion order key).
+
+        ``on_token(index, token)`` streams each committed token (overrides
+        ``ServeConfig.on_token``); ``on_finish(completion)`` fires once,
+        after the last token, for any finish reason including cancellation.
+        Preemption replays are deduplicated — every token streams once."""
         prompt = np.asarray(req.tokens, np.int32).reshape(-1)
         budget = min(int(req.max_new_tokens), self.eng.max_len - self._offset - prompt.shape[0] + 1)
         if budget < 1:
@@ -363,8 +443,81 @@ class Scheduler:
             )
         idx = self._n_submitted
         self._n_submitted += 1
+        cb = on_token if on_token is not None else self.config.on_token
+        if cb is not None:
+            self._on_token[idx] = cb
+        if on_finish is not None:
+            self._on_finish[idx] = on_finish
         self._queue.append((idx, prompt, budget, req))
         return idx
+
+    def cancel(self, idx: int) -> bool:
+        """Cancel request ``idx``: a queued request is dropped; a live one is
+        torn down immediately — its blocks return to the pool NOW (the
+        zeroed table row redirects any in-flight writes to the trash block,
+        so surviving rows never notice) and its partial output becomes a
+        ``finish_reason='cancelled'`` Completion.  Returns False when the
+        request is unknown or already finished."""
+        for i, item in enumerate(self._queue):
+            if item[0] == idx:
+                del self._queue[i]
+                self._seal(
+                    Completion(
+                        index=idx,
+                        tokens=[],
+                        prompt_len=int(item[1].shape[0]),
+                        finish_reason="cancelled",
+                        slot=-1,
+                        arrival=item[3].arrival,
+                        admitted_step=-1,
+                        finished_step=self.step_count,
+                    )
+                )
+                self.events.append((self.step_count, "cancel", idx, -1))
+                self.stats["cancellations"] += 1
+                return True
+        for slot, state in enumerate(self._slots):
+            if state is not None and state.index == idx:
+                self._emit_tokens(state)
+                self._release(slot)
+                self._seal(
+                    Completion(
+                        index=idx,
+                        tokens=list(state.out),
+                        prompt_len=state.prompt_len,
+                        finish_reason="cancelled",
+                        slot=slot,
+                        arrival=state.req.arrival,
+                        admitted_step=state.admitted_step,
+                        finished_step=self.step_count,
+                        first_token_step=state.first_token_step,
+                    )
+                )
+                self.events.append((self.step_count, "cancel", idx, slot))
+                self.stats["cancellations"] += 1
+                return True
+        return False
+
+    def _seal(self, comp: Completion) -> None:
+        """Record a completion and fire its on_finish callback."""
+        self._completions[comp.index] = comp
+        cb = self._on_finish.get(comp.index)
+        if cb is not None:
+            cb(comp)
+
+    def _emit_tokens(self, state: _Slot) -> None:
+        """Stream any not-yet-streamed committed tokens of this request.
+        Dedup is by COUNT against the request's lifetime stream: preemption
+        replays are token-exact, so a replayed prefix is exactly what was
+        already delivered."""
+        cb = self._on_token.get(state.index)
+        if cb is None:
+            return
+        n = self._streamed.get(state.index, 0)
+        for t in state.out[n:]:
+            cb(state.index, int(t))
+        if len(state.out) > n:
+            self._streamed[state.index] = len(state.out)
 
     def _bucket(self, lp: int) -> int:
         """Power-of-two padded prompt length, capped at the cache room."""
@@ -374,13 +527,19 @@ class Scheduler:
         return min(b, self.eng.max_len - self._offset)
 
     def _pop_due(self):
-        """First request whose arrival has passed, preserving FIFO among due
-        requests (a future-dated head must not block due work behind it)."""
+        """Highest-priority due request, FIFO among equal priorities (a
+        future-dated or low-priority head must not block due work behind
+        it).  ``priority=0`` everywhere reduces to plain FIFO-among-due."""
+        best = None
         for i, item in enumerate(self._queue):
             if item[3].arrival <= self.step_count:
-                del self._queue[i]
-                return item
-        return None
+                if best is None or item[3].priority > self._queue[best][3].priority:
+                    best = i
+        if best is None:
+            return None
+        item = self._queue[best]
+        del self._queue[best]
+        return item
 
     def _match_prefix(self, prompt: np.ndarray, req: Request) -> Tuple[int, List[int]]:
         """Cached-prefix match for admission: ``(matched, path_bids)`` where
@@ -458,6 +617,27 @@ class Scheduler:
             batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
         return bucket, batch
 
+    def _new_slot(
+        self, slot: int, idx: int, prompt: np.ndarray, budget: int, req: Request, blocks: List[int]
+    ) -> _Slot:
+        """Host-side slot bookkeeping shared by one-shot and chunked
+        admission — the device row stays untouched here."""
+        state = _Slot(
+            index=idx,
+            eos_id=int(req.eos_id),
+            budget=budget,
+            prompt=prompt,
+            req=req,
+            out=[],
+            admitted_step=self.step_count,
+            pos=self._offset + prompt.shape[0],
+            blocks=blocks,
+        )
+        self._slots[slot] = state
+        self._n_live += 1
+        self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"], self._n_live)
+        return state
+
     def _admit_one(
         self,
         slot: int,
@@ -469,6 +649,21 @@ class Scheduler:
         start: int = 0,
     ) -> None:
         lp = prompt.shape[0]
+        if self.chunk and not req.extras and (lp - start) > self.chunk:
+            # chunked admission (DESIGN.md §10): hold the blocks, keep the
+            # DEVICE table row zeroed (a populated row would let the shared
+            # decode dispatch write through it mid-prefill), and let the
+            # step loop run one tail-prefill chunk per step
+            row = np.zeros(self.max_blocks, np.int32)
+            row[: len(blocks)] = np.asarray(blocks, np.int32) + 1  # physical ids
+            state = self._new_slot(slot, idx, prompt, budget, req, blocks)
+            state.prefilling = True
+            state.done = start
+            state.row = row
+            state.hit = start
+            self.stats["chunked_admissions"] += 1
+            self.events.append((self.step_count, "admit", idx, slot))
+            return
         t0 = time.perf_counter() if self._time_admissions else 0.0
         row = np.zeros(self.max_blocks, np.int32)
         row[: len(blocks)] = np.asarray(blocks, np.int32) + 1  # physical ids
@@ -526,6 +721,64 @@ class Scheduler:
             self.admit_times.append((idx, time.perf_counter() - t0, start))
         self._register(slot, idx, prompt, budget, req, blocks, first_t)
 
+    def _prefill_chunk(self, slot: int) -> None:
+        """Run ONE tail-prefill chunk for a prefilling slot — the §7 traced-
+        start-offset trace with ``start = tokens done``, so the pool after
+        the final chunk is bit-identical to a one-shot prefill.  Non-final
+        chunks discard their sampled token (junk past the real tail); the
+        final chunk samples the request's first token with the SAME
+        (request, step=0) seed one-shot admission uses, then publishes the
+        device table row and activates the slot."""
+        state = self._slots[slot]
+        lp = state.prompt_len
+        tail = min(self.chunk, lp - state.done)
+        final = state.done + tail == lp
+        t0 = time.perf_counter() if self._time_admissions else 0.0
+        bucket = self._bucket(tail)
+        padded = np.zeros(bucket, np.int32)
+        padded[:tail] = state.prompt[state.done : state.done + tail]
+        admit = self._fns.admit_prefix_step(bucket, self.block_size)
+        first_t, self.caches = self.eng._with_backend(
+            admit,
+            self.eng.params,
+            {"tokens": jnp.asarray(padded[None])},
+            jnp.int32(tail),
+            jnp.int32(state.done),
+            self.caches,
+            jnp.asarray(state.row),  # device row stays zeroed until final
+            jnp.int32(_sample_seed(state.index, 0)),
+            self._base_key,
+            self._temp,
+        )
+        self._buckets_used.add(("prefix", bucket, self.block_size))
+        state.done += tail
+        self.stats["prefill_chunks"] += 1
+        self.stats["admission_traces"] = len(self._buckets_used)
+        self.stats["admission_trace_compiles"] = self._fns.admit_compiles - self._compiles0
+        if self._time_admissions:
+            first_t.block_until_ready()
+            state.admit_wall += time.perf_counter() - t0
+        if not final:
+            return
+        self.stats["prefills"] += 1
+        self._block_tables = self._block_tables.at[slot].set(jnp.asarray(state.row))
+        if self.prefix is not None and not state.req.extras:
+            # only now do the blocks hold the full prompt's KV — inserting
+            # earlier would expose half-prefilled blocks to other admissions
+            self.prefix.insert(state.prompt, state.blocks, self.eng.params_fingerprint())
+            self.stats["prefix_evicted_blocks"] = self.prefix.stats["evicted_blocks"]
+        if self._time_admissions:
+            self.admit_times.append((state.index, state.admit_wall, state.hit))
+        self._activate(slot, first_t)
+
+    def _advance_prefills(self) -> None:
+        """The mixed-batch chunk pass: one prefill chunk per prefilling slot
+        per step, alongside (before) the live decode dispatch."""
+        for slot in range(self.n_slots):
+            state = self._slots[slot]
+            if state is not None and state.prefilling:
+                self._prefill_chunk(slot)
+
     def _register(
         self,
         slot: int,
@@ -536,33 +789,30 @@ class Scheduler:
         blocks: List[int],
         first_t,
     ) -> None:
-        """Slot bookkeeping after the fused admission dispatch."""
+        """Slot bookkeeping after the fused one-shot admission dispatch."""
+        self._new_slot(slot, idx, prompt, budget, req, blocks)
+        self.events.append((self.step_count, "admit", idx, slot))
+        self._activate(slot, first_t)
+
+    def _activate(self, slot: int, first_t) -> None:
+        """Flip a slot live once the full prompt's KV is resident and its
+        first token is sampled: publish the device slot-table row state the
+        decode dispatch reads, record the first token, and apply the
+        instant finish checks (budget-1 / immediate EOS)."""
+        state = self._slots[slot]
         first = int(np.asarray(first_t))
-        lp = prompt.shape[0]
+        state.prefilling = False
+        state.out.append(first)
+        state.first_token_step = self.step_count
         self.stats["admissions"] += 1
         self.stats["tokens_emitted"] += 1
-        self.events.append((self.step_count, "admit", idx, slot))
-        start = self._offset + lp
-        state = _Slot(
-            index=idx,
-            eos_id=int(req.eos_id),
-            budget=budget,
-            prompt=prompt,
-            req=req,
-            out=[first],
-            admitted_step=self.step_count,
-            pos=start,
-            blocks=blocks,
-        )
-        self._slots[slot] = state
-        self._n_live += 1
-        self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"], self._n_live)
         self._tokens = self._tokens.at[slot].set(first_t)
-        self._pos = self._pos.at[slot].set(start)
+        self._pos = self._pos.at[slot].set(state.pos)
         self._active = self._active.at[slot].set(True)
         # seed0 + pos == _sample_seed(idx, len(out)) at every future step
-        self._seed0 = self._seed0.at[slot].set(_sample_seed(idx, 1) - start)
-        if first == state.eos_id or len(state.out) >= budget:
+        self._seed0 = self._seed0.at[slot].set(_sample_seed(state.index, 1) - state.pos)
+        self._emit_tokens(state)
+        if first == state.eos_id or len(state.out) >= state.budget:
             self._finish(slot, "eos" if first == state.eos_id else "length")
 
     # ------------------------------------------------------------------
@@ -581,15 +831,18 @@ class Scheduler:
 
     def _finish(self, slot: int, reason: str) -> None:
         state = self._release(slot)
-        self._completions[state.index] = Completion(
-            index=state.index,
-            tokens=list(state.out),
-            prompt_len=state.prompt_len,
-            finish_reason=reason,
-            slot=slot,
-            arrival=state.req.arrival,
-            admitted_step=state.admitted_step,
-            finished_step=self.step_count,
+        self._seal(
+            Completion(
+                index=state.index,
+                tokens=list(state.out),
+                prompt_len=state.prompt_len,
+                finish_reason=reason,
+                slot=slot,
+                arrival=state.req.arrival,
+                admitted_step=state.admitted_step,
+                finished_step=self.step_count,
+                first_token_step=state.first_token_step,
+            )
         )
         self.events.append((self.step_count, "evict", state.index, slot))
         self.stats["evictions"] += 1
@@ -597,7 +850,8 @@ class Scheduler:
     def _preempt(self, slot: int) -> None:
         """Evict a live request under pool pressure and requeue it at the
         front for a from-scratch restart (deterministic / (request,step)-
-        keyed sampling makes the replay token-identical)."""
+        keyed sampling makes the replay token-identical; already-streamed
+        tokens are not re-delivered — ``_emit_tokens`` dedupes)."""
         state = self._release(slot)
         self._queue.appendleft((state.index, state.prompt, state.budget, state.req))
         self.events.append((self.step_count, "preempt", state.index, slot))
@@ -606,11 +860,12 @@ class Scheduler:
     def _grow_tables(self, horizon: int = 0) -> None:
         """Allocate blocks for every live row through position
         ``pos + horizon`` (clamped to the cache end), oldest request first;
-        exhaustion preempts the YOUNGEST live request (vLLM policy: the
-        oldest always progresses, so the loop terminates).  The vanilla
-        decode step needs ``horizon=0`` (one write at ``pos``); the
-        speculative controller reserves its whole draft window up front so
-        a verify trace never writes through a missing table entry."""
+        exhaustion preempts the LOWEST-PRIORITY live request, youngest
+        among ties (vLLM policy: the oldest high-priority request always
+        progresses, so the loop terminates).  The vanilla decode step needs
+        ``horizon=0`` (one write at ``pos``); the speculative controller
+        reserves its whole draft window up front so a verify trace never
+        writes through a missing table entry."""
         order = sorted(
             (s for s in range(self.n_slots) if self._slots[s] is not None),
             key=lambda s: (self._slots[s].admitted_step, self._slots[s].index),
@@ -629,22 +884,31 @@ class Scheduler:
                     continue
                 victim = max(
                     (s for s in range(self.n_slots) if self._slots[s] is not None),
-                    key=lambda s: (self._slots[s].admitted_step, self._slots[s].index),
+                    key=lambda s: (
+                        -self._slots[s].req.priority,
+                        self._slots[s].admitted_step,
+                        self._slots[s].index,
+                    ),
                 )
                 self._preempt(victim)
                 if victim == slot:
-                    state = None  # the requester itself was youngest; it restarts
+                    state = None  # the requester itself was the victim; it restarts
 
     # ------------------------------------------------------------------
     # the loop
     # ------------------------------------------------------------------
+    def _n_decoding(self) -> int:
+        """Live slots past their prefill (the decode dispatch's real rows)."""
+        return sum(1 for st in self._slots if st is not None and not st.prefilling)
+
     def step(self) -> bool:
-        """Grow live requests' tables, admit what still fits, run one ragged
-        decode step over the live slots.  Growth runs FIRST so live requests
-        reserve their next blocks before admission spends them — otherwise a
-        just-admitted request could be preempted by an older slot's boundary
-        crossing in the same step, wasting its whole admission prefill.
-        Returns False once the queue is drained and every slot is idle."""
+        """Grow live requests' tables, admit what still fits, advance one
+        prefill chunk per prefilling slot, run one ragged decode step over
+        the active slots.  Growth runs FIRST so live requests reserve their
+        next blocks before admission spends them — otherwise a just-admitted
+        request could be preempted by an older slot's boundary crossing in
+        the same step, wasting its whole admission prefill.  Returns False
+        once the queue is drained and every slot is idle."""
         self._grow_tables()
         self._admit()
         if self.prefix is not None:
@@ -657,6 +921,14 @@ class Scheduler:
             self.step_count += 1
             self.stats["idle_steps"] += 1
             return True
+
+        self._advance_prefills()
+        if self._n_decoding() == 0:
+            # every live slot is mid-prefill (or finished at activation):
+            # the chunk pass above was this step's work; time still advances
+            self.step_count += 1
+            self.stats["prefill_only_steps"] += 1
+            return bool(self._n_live or self._queue)
 
         self._tokens, self._pos, self.caches = self.eng._with_backend(
             self._fns.decode_step,
@@ -675,12 +947,13 @@ class Scheduler:
         self.stats["decode_steps"] += 1
 
         for s, state in enumerate(self._slots):
-            if state is None:
+            if state is None or state.prefilling:
                 continue
             state.pos += 1  # mirror of the device's pos + active
             tok = int(nxt[s])
             state.out.append(tok)
             self.stats["tokens_emitted"] += 1
+            self._emit_tokens(state)
             if tok == state.eos_id:
                 self._finish(s, "eos")
             elif len(state.out) >= state.budget:
@@ -695,37 +968,18 @@ class Scheduler:
 
 
 def serve_requests(
-    engine,
-    requests: Sequence[Request],
-    *,
-    n_slots: int,
-    temperature: float = 0.0,
-    top_k: int = 0,
-    seed: int = 0,
-    block_size: int = 16,
-    n_blocks: int = 0,
-    prefix_cache: bool = False,
-    speculative=None,
-    time_admissions: bool = False,
+    engine, requests: Sequence[Request], config: Optional[ServeConfig] = None
 ) -> Tuple[List[Completion], Scheduler]:
     """One-shot helper: schedule ``requests`` onto ``engine`` and drain.
-    ``speculative`` (a ``serve.speculative.SpeculativeConfig``) swaps in the
-    draft/verify controller (DESIGN.md §8)."""
-    kw = dict(
-        temperature=temperature,
-        top_k=top_k,
-        seed=seed,
-        block_size=block_size,
-        n_blocks=n_blocks,
-        prefix_cache=prefix_cache,
-        time_admissions=time_admissions,
-    )
-    if speculative is not None:
+    ``config.speculative`` swaps in the draft/verify controller
+    (DESIGN.md §8)."""
+    config = (config or ServeConfig()).resolve(engine, requests)
+    if config.speculative is not None:
         from repro.serve.speculative import SpeculativeScheduler
 
-        sched = SpeculativeScheduler(engine, n_slots, speculative=speculative, **kw)
+        sched = SpeculativeScheduler(engine, config)
     else:
-        sched = Scheduler(engine, n_slots, **kw)
+        sched = Scheduler(engine, config)
     for r in requests:
         sched.submit(r)
     return sched.run(), sched

@@ -68,8 +68,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.lm import decode_lm, decode_verify_lm
+from repro.serve.config import ServeConfig
 from repro.serve.engine import filter_logits
-from repro.serve.scheduler import Scheduler, _sample_seed, fully_paged_tier
+from repro.serve.scheduler import Scheduler, _sample_seed
 
 # PRNG stream tags: draft proposals, accept uniforms and residual draws all
 # fold the serve seed through distinct subkeys so no stream is reused
@@ -82,8 +83,11 @@ def speculative_eligible(engine) -> bool:
     """Would ``speculative`` actually speculate on this engine?  True on
     the fully-paged tier (all-attention or MLA decoders); elsewhere the
     flag is accepted but structurally inert (DESIGN.md §8) — launchers use
-    this to warn instead of silently no-opping."""
-    return fully_paged_tier(engine, allow_mla=True)
+    this to warn instead of silently no-opping.  Delegates to
+    ``engine.capabilities()`` — the one source of truth with reasons."""
+    from repro.serve.config import capabilities
+
+    return bool(capabilities(engine)["speculative"])
 
 
 @dataclasses.dataclass
@@ -254,36 +258,19 @@ class SpeculativeScheduler(Scheduler):
     so the §6 invariants hold for the pair by construction.  Off the
     eligible tier every step defers to the vanilla ``Scheduler.step``."""
 
-    def __init__(
-        self,
-        engine,
-        n_slots: int,
-        *,
-        speculative: SpeculativeConfig,
-        temperature: float = 0.0,
-        top_k: int = 0,
-        seed: int = 0,
-        block_size: int = 16,
-        n_blocks: int = 0,
-        prefix_cache: bool = False,
-        time_admissions: bool = False,
-    ):
-        if prefix_cache:
-            # sharing draft-pool blocks under the radix index is designed
-            # but not wired (§8 sketches it); refuse loudly over silently
-            # dropping one of the two features
-            raise ValueError("speculative decoding and prefix_cache are mutually exclusive")
-        super().__init__(
-            engine,
-            n_slots,
-            temperature=temperature,
-            top_k=top_k,
-            seed=seed,
-            block_size=block_size,
-            n_blocks=n_blocks,
-            prefix_cache=False,
-            time_admissions=time_admissions,
-        )
+    def __init__(self, engine, config: Optional[ServeConfig] = None, **legacy):
+        # the prefix_cache / prefill_chunk conflicts are rejected at
+        # ServeConfig construction (its __post_init__), not here
+        if isinstance(config, int):  # legacy positional n_slots
+            legacy["n_slots"] = config
+            config = None
+        if legacy:
+            config = ServeConfig(**legacy)  # super().__init__ would re-warn; build once
+        config = (config or ServeConfig()).resolve(engine)
+        if config.speculative is None:
+            raise ValueError("SpeculativeScheduler needs config.speculative (a SpeculativeConfig)")
+        speculative = config.speculative
+        super().__init__(engine, config)
         self.spec_cfg = speculative
         self.draft_k = max(1, int(speculative.k))
         # batch-coupled depth adaptation is GREEDY-ONLY: greedy commits are
@@ -478,6 +465,7 @@ class SpeculativeScheduler(Scheduler):
                 ncommit = len(toks)
             state.out.extend(toks)
             state.pos += ncommit
+            self._emit_tokens(state)
             self.stats["tokens_emitted"] += ncommit
             self.stats["spec_accepted"] += min(accepted, ncommit)
             self.stats["spec_emitted"] += ncommit

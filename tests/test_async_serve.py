@@ -1,0 +1,334 @@
+"""Streaming, cancellation, priority and the asyncio serve front-end
+(repro.serve.async_engine; DESIGN.md §10).
+
+Contracts: per-token callbacks fire in commit order and deliver exactly
+``Completion.tokens`` (once each — preemption replays are deduplicated);
+cancelling a live request frees every one of its blocks immediately
+(pool invariants audit clean) and never perturbs surviving streams;
+``Request.priority`` reorders admission among due requests and picks
+preemption victims, with priority=0 reducing to plain FIFO; and the
+``AsyncServeEngine`` wrapper reproduces all of it behind ``async for``
+streams — same tokens as the synchronous drain, since the drive loop is
+the same scheduler stepped under a lock.
+
+No pytest-asyncio in the container: async tests run their coroutine via
+``asyncio.run`` inside plain test functions.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, core
+from repro.models import init_lm, set_packed_backend
+from repro.serve import AsyncServeEngine, Request, Scheduler, ServeConfig, ServeEngine
+
+MAX_LEN = 24
+_ENGINES = {}
+
+
+@pytest.fixture
+def unpack_backend():
+    set_packed_backend("unpack")
+    yield
+    set_packed_backend("auto")
+
+
+def _engine(arch="internlm2-1.8b"):
+    if arch not in _ENGINES:
+        cfg = configs.get_reduced(arch)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        scfg = core.SymogConfig(n_bits=2, total_steps=1)
+        st = core.symog_init(params, scfg)
+        qt = core.quantize_tree(params, st, scfg)
+        _ENGINES[arch] = ServeEngine(cfg, qt, max_len=MAX_LEN, compute_dtype=jnp.float32)
+    return _ENGINES[arch]
+
+
+def _requests(cfg, key, lens=(3, 6, 4, 5), budgets=(5, 3, 6, 4), **kw):
+    return [
+        Request(tokens=np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                                     (L,), 0, cfg.vocab_size)),
+                max_new_tokens=b, **kw)
+        for i, (L, b) in enumerate(zip(lens, budgets))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# synchronous streaming callbacks
+# ---------------------------------------------------------------------------
+def test_streaming_matches_completions(rng, unpack_backend):
+    """on_token (the ServeConfig default hook) sees every token of every
+    request, in commit order — exactly Completion.tokens."""
+    eng = _engine()
+    reqs = _requests(eng.cfg, rng)
+    streamed = {}
+    comps = eng.serve(
+        reqs,
+        ServeConfig(n_slots=2, on_token=lambda i, t: streamed.setdefault(i, []).append(t)),
+    )
+    assert set(streamed) == set(range(len(reqs)))
+    for c in comps:
+        assert streamed[c.index] == c.tokens
+
+
+def test_per_request_callback_overrides_default(rng, unpack_backend):
+    eng = _engine()
+    reqs = _requests(eng.cfg, rng, lens=(3, 5), budgets=(4, 4))
+    via_default, via_override = [], []
+    sched = Scheduler(
+        eng, ServeConfig(n_slots=2, on_token=lambda i, t: via_default.append((i, t)))
+    )
+    sched.submit(reqs[0])
+    sched.submit(reqs[1], on_token=lambda i, t: via_override.append((i, t)))
+    comps = sched.run()
+    assert [t for i, t in via_default] == comps[0].tokens
+    assert all(i == 0 for i, _ in via_default)
+    assert [t for i, t in via_override] == comps[1].tokens
+    assert all(i == 1 for i, _ in via_override)
+
+
+def test_preemption_replay_streams_each_token_once(rng, unpack_backend):
+    """A 4-block pool under two live requests forces preemption; the
+    restarted request's replay is token-exact so the stream dedupe (by
+    count) must deliver every token exactly once."""
+    eng = _engine()
+    reqs = _requests(eng.cfg, rng, lens=(8, 8), budgets=(16, 16))
+    streamed = {}
+    comps, sched = eng.serve(
+        reqs,
+        ServeConfig(n_slots=2, block_size=4, n_blocks=6,
+                    on_token=lambda i, t: streamed.setdefault(i, []).append(t)),
+        return_scheduler=True,
+    )
+    assert sched.stats["preemptions"] > 0
+    for c in comps:
+        assert streamed[c.index] == c.tokens
+
+
+def test_on_finish_fires_for_every_reason(rng, unpack_backend):
+    eng = _engine()
+    fins = []
+    sched = Scheduler(eng, ServeConfig(n_slots=2))
+    reqs = _requests(eng.cfg, rng, lens=(3, 4, 5), budgets=(3, 8, 3))
+    ids = [sched.submit(r, on_finish=fins.append) for r in reqs]
+    for _ in range(2):
+        sched.step()
+    assert sched.cancel(ids[1])
+    comps = sched.run()
+    assert sorted(c.index for c in fins) == ids
+    by_idx = {c.index: c for c in fins}
+    assert by_idx[ids[1]].finish_reason == "cancelled"
+    assert {c.index: c.tokens for c in comps} == {c.index: c.tokens for c in fins}
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+def test_cancel_mid_decode_frees_blocks_and_spares_survivors(rng, unpack_backend):
+    """Tear one of two live requests down mid-stream: its blocks return at
+    once (pool audit clean against the survivor's table), and the survivor's
+    stream is bit-identical to an undisturbed run."""
+    eng = _engine()
+    reqs = _requests(eng.cfg, rng, lens=(4, 6), budgets=(10, 10))
+    baseline = eng.serve(reqs, ServeConfig(n_slots=2, block_size=4))
+
+    sched = Scheduler(eng, ServeConfig(n_slots=2, block_size=4))
+    ids = [sched.submit(r) for r in reqs]
+    for _ in range(3):
+        sched.step()
+    live_blocks = sum(len(s.blocks) for s in sched._slots if s is not None)
+    assert sched.cancel(ids[0])
+    victim_table = [s for s in sched._slots if s is not None]
+    assert len(victim_table) == 1  # only the survivor holds blocks now
+    assert sched.pool.n_live == len(victim_table[0].blocks) < live_blocks
+    sched.pool.check([s.blocks for s in sched._slots if s is not None])
+    comps = sched.run()
+    by_idx = {c.index: c for c in comps}
+    assert by_idx[ids[0]].finish_reason == "cancelled"
+    # 4 tokens so far: the admission's first token + 3 decode steps
+    assert len(by_idx[ids[0]].tokens) == 4
+    assert by_idx[ids[0]].tokens == baseline[0].tokens[:4]
+    assert by_idx[ids[1]].tokens == baseline[1].tokens  # survivor unperturbed
+    assert by_idx[ids[1]].finish_reason == "length"
+    sched.pool.check()
+    assert sched.pool.n_live == 0
+
+
+def test_cancel_queued_and_unknown(rng, unpack_backend):
+    eng = _engine()
+    sched = Scheduler(eng, ServeConfig(n_slots=1))
+    reqs = _requests(eng.cfg, rng, lens=(3, 4), budgets=(4, 4))
+    ids = [sched.submit(r) for r in reqs]
+    sched.step()  # admits req 0 into the only slot; req 1 still queued
+    assert sched.cancel(ids[1])  # dropped from the queue, never admitted
+    assert not sched.cancel(ids[1])  # already cancelled
+    assert not sched.cancel(99)  # unknown
+    comps = sched.run()
+    by_idx = {c.index: c for c in comps}
+    assert by_idx[ids[1]].finish_reason == "cancelled"
+    assert by_idx[ids[1]].tokens == [] and by_idx[ids[1]].slot == -1
+    assert by_idx[ids[0]].finish_reason == "length"
+    assert not sched.cancel(ids[0])  # finished requests can't be cancelled
+
+
+# ---------------------------------------------------------------------------
+# priority admission
+# ---------------------------------------------------------------------------
+def test_priority_admits_before_older_fifo_peers(rng, unpack_backend):
+    """One slot, three due requests: the priority=1 request submitted LAST
+    must admit first; the priority=0 pair then admit in FIFO order."""
+    eng = _engine()
+    sched = Scheduler(eng, ServeConfig(n_slots=1))
+    reqs = _requests(eng.cfg, rng, lens=(3, 3, 3), budgets=(2, 2, 2))
+    reqs[2].priority = 1
+    ids = [sched.submit(r) for r in reqs]
+    sched.run()
+    admits = [idx for _, kind, idx, _ in sched.events if kind == "admit"]
+    assert admits == [ids[2], ids[0], ids[1]]
+
+
+def test_priority_zero_is_plain_fifo(rng, unpack_backend):
+    eng = _engine()
+    sched = Scheduler(eng, ServeConfig(n_slots=1))
+    ids = [sched.submit(r) for r in _requests(eng.cfg, rng, lens=(3, 3), budgets=(2, 2))]
+    sched.run()
+    admits = [idx for _, kind, idx, _ in sched.events if kind == "admit"]
+    assert admits == ids
+
+
+def test_preemption_victim_is_lowest_priority(rng, unpack_backend):
+    """Pool pressure must evict the LOW-priority request even though the
+    high-priority one is younger (plain FIFO would pick the youngest)."""
+    eng = _engine()
+    sched = Scheduler(eng, ServeConfig(n_slots=2, block_size=4, n_blocks=6))
+    low, high = _requests(eng.cfg, rng, lens=(8, 8), budgets=(16, 16))
+    high.priority = 5
+    id_low = sched.submit(low)
+    id_high = sched.submit(high)
+    comps = sched.run()
+    assert sched.stats["preemptions"] > 0
+    preempted = {idx for _, kind, idx, _ in sched.events if kind == "preempt"}
+    assert preempted == {id_low}
+    assert id_high not in preempted
+    assert all(c.finish_reason == "length" for c in comps)
+
+
+# ---------------------------------------------------------------------------
+# the asyncio front-end
+# ---------------------------------------------------------------------------
+def test_async_streams_match_sync_serve(rng, unpack_backend):
+    eng = _engine()
+    reqs = _requests(eng.cfg, rng)
+    sync = eng.serve(reqs, ServeConfig(n_slots=2))
+
+    async def main():
+        async with eng.serve_async(ServeConfig(n_slots=2)) as srv:
+            ids = [srv.submit(r) for r in reqs]
+            streams = await asyncio.gather(
+                *[_collect(srv.tokens(i)) for i in ids]
+            )
+            comps = await srv.drain()
+        return ids, streams, comps
+
+    async def _collect(agen):
+        return [t async for t in agen]
+
+    ids, streams, comps = asyncio.run(main())
+    assert [c.index for c in comps] == ids
+    for c, stream, ref in zip(comps, streams, sync):
+        assert stream == c.tokens == ref.tokens
+        assert c.finish_reason == ref.finish_reason
+
+
+def test_async_cancel_mid_stream(rng, unpack_backend):
+    """Cancel a live request from the event loop after its third token: the
+    stream ends with a cancelled completion, the survivor matches the
+    synchronous reference, and the pool is clean."""
+    eng = _engine()
+    reqs = _requests(eng.cfg, rng, lens=(4, 6), budgets=(10, 10))
+    baseline = eng.serve(reqs, ServeConfig(n_slots=2, block_size=4))
+
+    async def main():
+        async with eng.serve_async(ServeConfig(n_slots=2, block_size=4)) as srv:
+            ids = [srv.submit(r) for r in reqs]
+            got = []
+            async for t in srv.tokens(ids[0]):
+                got.append(t)
+                if len(got) == 3:
+                    assert await srv.cancel(ids[0])
+            comps = await srv.drain()
+            pool = srv.scheduler.pool
+        return got, comps, pool
+
+    got, comps, pool = asyncio.run(main())
+    assert comps[0].finish_reason == "cancelled"
+    # cancel lands at a step boundary: at least the 3 awaited tokens ran
+    assert comps[0].tokens[:3] == got[:3] == baseline[0].tokens[:3]
+    assert comps[0].tokens == baseline[0].tokens[: len(comps[0].tokens)]
+    assert comps[1].tokens == baseline[1].tokens  # survivor unperturbed
+    pool.check()
+    assert pool.n_live == 0
+
+
+def test_async_late_submission_joins_live_batch(rng, unpack_backend):
+    """A request submitted while the engine is already decoding joins the
+    batch and streams to completion — the wake/drive loop keeps serving."""
+    eng = _engine()
+    reqs = _requests(eng.cfg, rng, lens=(3, 5), budgets=(8, 4))
+    sync = eng.serve(reqs, ServeConfig(n_slots=2))
+
+    async def main():
+        async with eng.serve_async(ServeConfig(n_slots=2)) as srv:
+            i0 = srv.submit(reqs[0])
+            # wait for generation to visibly start before the second submit
+            first = await _take(srv.tokens(i0), 2)
+            i1 = srv.submit(reqs[1])
+            c1 = await srv.result(i1)
+            c0 = await srv.result(i0)
+        return first, c0, c1
+
+    async def _take(agen, n):
+        out = []
+        async for t in agen:
+            out.append(t)
+            if len(out) == n:
+                break
+        return out
+
+    first, c0, c1 = asyncio.run(main())
+    assert first == sync[0].tokens[:2]
+    assert c0.tokens == sync[0].tokens
+    assert c1.tokens == sync[1].tokens
+
+
+def test_async_chunked_prefill_streams_identically(rng, unpack_backend):
+    """The async engine composes with chunked prefill: a long prompt chunks
+    through the drive loop and still streams the one-shot token stream."""
+    eng = _engine()
+    reqs = _requests(eng.cfg, rng, lens=(3, 12), budgets=(8, 4))
+    sync = eng.serve(reqs, ServeConfig(n_slots=2, block_size=4))
+
+    async def main():
+        cfg = ServeConfig(n_slots=2, block_size=4, prefill_chunk=3)
+        async with eng.serve_async(cfg) as srv:
+            for r in reqs:
+                srv.submit(r)
+            comps = await srv.drain()
+            chunks = srv.scheduler.stats["prefill_chunks"]
+        return comps, chunks
+
+    comps, chunks = asyncio.run(main())
+    assert chunks == 4  # the 12-token prompt went through the chunk path
+    for c, ref in zip(comps, sync):
+        assert c.tokens == ref.tokens
+
+
+def test_async_submit_requires_entered_engine(unpack_backend):
+    eng = _engine()
+    srv = AsyncServeEngine(eng, ServeConfig(n_slots=1))
+    with pytest.raises(RuntimeError, match="entered"):
+        srv.submit(Request(tokens=np.asarray([1, 2, 3], np.int32)))

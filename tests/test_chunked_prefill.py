@@ -1,0 +1,240 @@
+"""Chunked prefill (DESIGN.md §10): admission split into tail-prefill
+chunks scheduled in mixed batches alongside live decode.
+
+The core contract is BIT-IDENTITY: a chunk is the §7 tail-prefill trace
+with ``start = tokens done so far``, so the pool KV after the final chunk
+equals the one-shot prefill's and every token stream — greedy or sampled,
+quantize_tree or pack_tree — matches whole-prompt admission exactly.
+Only the latency SHAPE changes: long-prompt admissions spread over steps
+instead of stalling neighbors (checked via first_token_step spreading and
+mixed prefill+decode steps).  Chunking must compose with the prefix cache
+(a chunk after a hit starts at the matched offset) and with cancellation
+mid-prefill (blocks return, pool invariants clean); off the fully-paged
+tier the knob is accepted and inert.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, core
+from repro.models import init_lm, set_packed_backend
+from repro.serve import Request, Scheduler, ServeConfig, ServeEngine
+
+MAX_LEN = 24
+_ENGINES = {}
+
+
+@pytest.fixture
+def unpack_backend():
+    set_packed_backend("unpack")
+    yield
+    set_packed_backend("auto")
+
+
+def _engines(arch):
+    if arch not in _ENGINES:
+        cfg = configs.get_reduced(arch)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        scfg = core.SymogConfig(n_bits=2, total_steps=1)
+        st = core.symog_init(params, scfg)
+        qt = core.quantize_tree(params, st, scfg)
+        packed = core.pack_tree(params, st, scfg)
+        _ENGINES[arch] = (
+            ServeEngine(cfg, qt, max_len=MAX_LEN, compute_dtype=jnp.float32),
+            ServeEngine(cfg, packed, max_len=MAX_LEN, compute_dtype=jnp.float32),
+        )
+    return _ENGINES[arch]
+
+
+def _requests(cfg, key, lens=(5, 12, 3, 9), budgets=(6, 4, 5, 3)):
+    """A short-prompt / long-prompt mix: the 12- and 9-token prompts chunk,
+    the others admit one-shot."""
+    return [
+        Request(tokens=np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                                     (L,), 0, cfg.vocab_size)),
+                max_new_tokens=b)
+        for i, (L, b) in enumerate(zip(lens, budgets))
+    ]
+
+
+def _static_reference(eng, req):
+    batch = {"tokens": jnp.asarray(np.asarray(req.tokens)[None])}
+    return np.asarray(eng.generate_static(batch, req.max_new_tokens))[0]
+
+
+# ---------------------------------------------------------------------------
+# token identity: chunked admission == whole-prompt admission == static
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tree", ["quantize_tree", "packed"])
+@pytest.mark.parametrize("chunk", [3, 4])  # 3: chunk boundaries land mid-block
+def test_chunked_serve_matches_static(tree, chunk, rng, unpack_backend):
+    eng = _engines("internlm2-1.8b")[tree == "packed"]
+    reqs = _requests(eng.cfg, rng)
+    comps, sched = eng.serve(
+        reqs,
+        ServeConfig(n_slots=2, block_size=4, prefill_chunk=chunk),
+        return_scheduler=True,
+    )
+    assert sched.chunk == chunk
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
+    # the long prompts (> chunk tokens) actually went through the chunk path
+    n_long = sum(1 for r in reqs if len(r.tokens) > chunk)
+    assert sched.stats["chunked_admissions"] == n_long
+    expected_chunks = sum(-(-len(r.tokens) // chunk) for r in reqs if len(r.tokens) > chunk)
+    assert sched.stats["prefill_chunks"] == expected_chunks
+    sched.pool.check()
+
+
+def test_chunked_sampled_streams_match_one_shot(rng, unpack_backend):
+    """(request, step)-keyed sampling means chunking cannot perturb sampled
+    streams either: the final chunk draws the first token with the same
+    (idx, 0) seed one-shot admission uses."""
+    eng = _engines("internlm2-1.8b")[0]
+    reqs = _requests(eng.cfg, rng)
+    kw = dict(n_slots=2, block_size=4, temperature=0.9, top_k=7, seed=13)
+    one = eng.serve(reqs, ServeConfig(**kw))
+    chunked = eng.serve(reqs, ServeConfig(prefill_chunk=3, **kw))
+    for a, b in zip(one, chunked):
+        assert a.tokens == b.tokens
+
+
+def test_chunk_boundary_mid_block(rng, unpack_backend):
+    """Prompt 10 with block 4 and chunk 3 → chunk starts 0/3/6/9 straddle
+    every block boundary misalignment (3 mod 4, 6 mod 4, ...); the scatter
+    through the host-built row must still land every token."""
+    eng = _engines("internlm2-1.8b")[0]
+    req = Request(
+        tokens=np.asarray(jax.random.randint(rng, (10,), 0, eng.cfg.vocab_size)),
+        max_new_tokens=6,
+    )
+    comps, sched = eng.serve(
+        [req], ServeConfig(n_slots=1, block_size=4, prefill_chunk=3), return_scheduler=True
+    )
+    np.testing.assert_array_equal(np.asarray(comps[0].tokens), _static_reference(eng, req))
+    assert sched.stats["prefill_chunks"] == 4  # 3+3+3+1
+    sched.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# latency shape: chunks run in MIXED batches, admission is spread out
+# ---------------------------------------------------------------------------
+def test_chunks_interleave_with_decode(rng, unpack_backend):
+    """With a short request decoding while a long prompt arrives, the long
+    admission must spread over steps (first_token_step > admitted_step) and
+    its chunks must ride steps that ALSO decoded (prefill_chunks beyond the
+    prefill-only steps), instead of stalling the whole batch."""
+    eng = _engines("internlm2-1.8b")[0]
+    short = Request(
+        tokens=np.asarray(jax.random.randint(rng, (3,), 0, eng.cfg.vocab_size)),
+        max_new_tokens=12,
+    )
+    long = Request(
+        tokens=np.asarray(jax.random.randint(jax.random.fold_in(rng, 1), (12,), 0,
+                                             eng.cfg.vocab_size)),
+        max_new_tokens=4,
+        arrival=3,  # lands while `short` is mid-decode
+    )
+    comps, sched = eng.serve(
+        [short, long], ServeConfig(n_slots=2, block_size=4, prefill_chunk=3),
+        return_scheduler=True,
+    )
+    for req, comp in zip([short, long], comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
+    c_long = comps[1]
+    assert c_long.first_token_step - c_long.admitted_step == 3  # 4 chunks, 1/step
+    # every chunk ran alongside the short request's live decode
+    assert sched.stats["prefill_chunks"] == 4
+    assert sched.stats["prefill_only_steps"] == 0
+    # and the neighbor's stream kept flowing during those steps: one token
+    # per step from its first to its last, zero admission-stall gaps
+    c_short = comps[0]
+    assert c_short.finished_step - c_short.first_token_step == len(c_short.tokens) - 1
+
+
+def test_chunked_admission_ttft_is_honest(rng, unpack_backend):
+    """latency_stats must charge the spread-out admission to the chunked
+    request's TTFT (first_token_step, not admitted_step)."""
+    from repro.serve import latency_stats
+
+    eng = _engines("internlm2-1.8b")[0]
+    req = Request(
+        tokens=np.asarray(jax.random.randint(rng, (12,), 0, eng.cfg.vocab_size)),
+        max_new_tokens=3,
+    )
+    comps, sched = eng.serve(
+        [req], ServeConfig(n_slots=1, block_size=4, prefill_chunk=3), return_scheduler=True
+    )
+    stats = latency_stats(comps)
+    # admitted at step 0, first token at step 3 (4 chunks) → ttft 4
+    assert stats["ttft_steps"]["p50"] == 4.0
+    assert stats["queue_steps"]["p50"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# composition: prefix cache, cancellation mid-prefill, inert off-tier
+# ---------------------------------------------------------------------------
+def test_chunked_prefill_composes_with_prefix_cache(rng, unpack_backend):
+    """A prefix hit moves the chunk start to the matched offset: the second
+    pass over a shared prompt re-prefills only the uncached tail (possibly
+    still chunked) and streams identical tokens."""
+    eng = _engines("internlm2-1.8b")[0]
+    prefix = np.asarray(jax.random.randint(rng, (8,), 0, eng.cfg.vocab_size))
+    tails = [
+        np.asarray(jax.random.randint(jax.random.fold_in(rng, i), (4,), 0, eng.cfg.vocab_size))
+        for i in range(2)
+    ]
+    reqs = [Request(tokens=np.concatenate([prefix, t]), max_new_tokens=4) for t in tails]
+    cfg = ServeConfig(n_slots=1, block_size=4, prefix_cache=True, prefill_chunk=3)
+    comps, sched = eng.serve(reqs, cfg, return_scheduler=True)
+    plain = eng.serve(reqs, ServeConfig(n_slots=1, block_size=4))
+    for a, b in zip(comps, plain):
+        assert a.tokens == b.tokens
+    assert sched.stats["prefix_hits"] == 1  # second request reused the prefix
+    assert sched.stats["prefix_hit_tokens"] == 8
+    # 12-token miss chunks 4× from start 0; the 4-token tail after the hit
+    # fits a final chunk pair (3+1) from start 8
+    assert sched.stats["chunked_admissions"] == 2
+    assert sched.stats["prefill_chunks"] == 6
+    sched.pool.check()
+
+
+def test_cancel_mid_prefill_frees_blocks(rng, unpack_backend):
+    """Cancelling a slot that is still chunk-prefilling returns ALL its
+    blocks (it held the whole prompt's allocation up front) and seals an
+    empty cancelled completion — no token was ever sampled."""
+    eng = _engines("internlm2-1.8b")[0]
+    sched = Scheduler(eng, ServeConfig(n_slots=1, block_size=4, prefill_chunk=3, n_blocks=6))
+    idx = sched.submit(
+        Request(tokens=np.asarray(jax.random.randint(rng, (12,), 0, eng.cfg.vocab_size)),
+                max_new_tokens=4)
+    )
+    sched.step()  # admit + first chunk
+    state = sched._slots[0]
+    assert state is not None and state.prefilling and state.done == 3
+    assert sched.pool.n_free < 6
+    assert sched.cancel(idx)
+    assert sched.pool.n_free == 6
+    sched.pool.check()
+    assert not sched.step()  # queue empty, nothing live
+    comp = sched.run()[0]
+    assert comp.finish_reason == "cancelled"
+    assert comp.tokens == [] and comp.first_token_step == -1
+    assert sched.stats["cancellations"] == 1
+
+
+@pytest.mark.slow
+def test_prefill_chunk_inert_off_tier(rng, unpack_backend):
+    """Off the fully-paged tier (hybrid recurrentgemma) the knob is accepted
+    and structurally inert: no chunking, tokens unchanged."""
+    eng = _engines("recurrentgemma-2b")[0]
+    reqs = _requests(eng.cfg, rng, lens=(5, 9), budgets=(4, 3))
+    comps, sched = eng.serve(
+        reqs, ServeConfig(n_slots=2, block_size=4, prefill_chunk=3), return_scheduler=True
+    )
+    assert sched.chunk == 0
+    assert sched.stats["chunked_admissions"] == 0
+    for req, comp in zip(reqs, comps):
+        np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))

@@ -371,7 +371,7 @@ def test_serve_fused_token_identical_to_static(arch, rng):
     traced window scalar)."""
     from repro import configs
     from repro.models import init_lm
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeConfig, ServeEngine
 
     cfg = configs.get_reduced(arch)
     params = init_lm(jax.random.PRNGKey(0), cfg)
@@ -388,7 +388,7 @@ def test_serve_fused_token_identical_to_static(arch, rng):
     try:
         eng = ServeEngine(cfg, params, max_len=24, compute_dtype=jnp.float32)
         assert eng.attn_backend == "fused-interpret"
-        comps = eng.serve(reqs, n_slots=2)
+        comps = eng.serve(reqs, ServeConfig(n_slots=2))
     finally:
         set_attention_backend("auto")
     for req, comp in zip(reqs, comps):

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro import configs, core
 from repro.models.lm import init_lm
 from repro.models.quantized import set_packed_backend
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 MAX_LEN = 24
 _ENGINES = {}
@@ -77,7 +77,7 @@ def test_identical_prompts_share_and_match_static(tree, rng, unpack_backend):
     prompt = _prompt(rng, 8, eng.cfg.vocab_size)
     reqs = [Request(tokens=prompt, max_new_tokens=6), Request(tokens=prompt, max_new_tokens=6)]
     comps, sched = eng.serve(
-        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+        reqs, ServeConfig(n_slots=2, block_size=4, prefix_cache=True), return_scheduler=True
     )
     _assert_exact(eng, reqs, comps)
     assert sched.stats["prefix_hits"] == 1 and sched.stats["prefix_misses"] == 1
@@ -85,7 +85,7 @@ def test_identical_prompts_share_and_match_static(tree, rng, unpack_backend):
     # the hit attached 1 full block and COW'd the boundary block: strictly
     # fewer fresh allocations than the same workload without sharing
     _, sched_off = eng.serve(
-        reqs, n_slots=2, block_size=4, prefix_cache=False, return_scheduler=True
+        reqs, ServeConfig(n_slots=2, block_size=4), return_scheduler=True
     )
     assert sched.pool.total_allocs < sched_off.pool.total_allocs
     sched.pool.check()
@@ -101,7 +101,7 @@ def test_partial_overlap_non_block_aligned(tree, rng, unpack_backend):
     other = np.concatenate([base[:9], (base[9:12] + 1) % eng.cfg.vocab_size]).astype(np.int32)
     reqs = [Request(tokens=base, max_new_tokens=5), Request(tokens=other, max_new_tokens=5)]
     comps, sched = eng.serve(
-        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+        reqs, ServeConfig(n_slots=2, block_size=4, prefix_cache=True), return_scheduler=True
     )
     _assert_exact(eng, reqs, comps)
     assert sched.stats["prefix_hits"] == 1
@@ -123,7 +123,7 @@ def test_cow_divergence_mid_block(tree, rng, unpack_backend):
         Request(tokens=prompt, max_new_tokens=8),
     ]
     comps, sched = eng.serve(
-        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+        reqs, ServeConfig(n_slots=2, block_size=4, prefix_cache=True), return_scheduler=True
     )
     _assert_exact(eng, reqs, comps)
     assert sched.stats["prefix_cow_copies"] == 1
@@ -142,12 +142,12 @@ def test_cow_divergence_with_sampling(rng, unpack_backend):
     prompt = _prompt(rng, 6, eng.cfg.vocab_size)
     reqs = [Request(tokens=prompt, max_new_tokens=8) for _ in range(2)]
     kw = dict(n_slots=2, block_size=4, temperature=0.9, top_k=7, seed=11)
-    comps, sched = eng.serve(reqs, prefix_cache=True, return_scheduler=True, **kw)
+    comps, sched = eng.serve(reqs, ServeConfig(prefix_cache=True, **kw), return_scheduler=True)
     assert sched.stats["prefix_cow_copies"] == 1
     assert comps[0].tokens != comps[1].tokens  # request-keyed streams diverged
     # oracle: the same workload with the cache off (per-request exactness
     # of the scheduler without sharing is proven in test_scheduler.py)
-    ref = eng.serve(reqs, prefix_cache=False, **kw)
+    ref = eng.serve(reqs, ServeConfig(**kw))
     assert [c.tokens for c in comps] == [c.tokens for c in ref]
     sched.pool.check()
 
@@ -161,7 +161,8 @@ def test_eviction_runs_before_preemption(rng, unpack_backend):
     prompts = [_prompt(jax.random.fold_in(rng, i), 8, eng.cfg.vocab_size) for i in range(5)]
     reqs = [Request(tokens=p, max_new_tokens=6) for p in prompts]
     comps, sched = eng.serve(
-        reqs, n_slots=1, block_size=4, n_blocks=6, prefix_cache=True, return_scheduler=True
+        reqs, ServeConfig(n_slots=1, block_size=4, n_blocks=6, prefix_cache=True),
+        return_scheduler=True,
     )
     _assert_exact(eng, reqs, comps)
     assert sched.stats["prefix_evicted_blocks"] > 0
@@ -180,7 +181,7 @@ def test_hit_after_owner_finished_revives_parked_blocks(rng, unpack_backend):
         Request(tokens=prompt, max_new_tokens=5, arrival=10),
     ]
     comps, sched = eng.serve(
-        reqs, n_slots=1, block_size=4, prefix_cache=True, return_scheduler=True
+        reqs, ServeConfig(n_slots=1, block_size=4, prefix_cache=True), return_scheduler=True
     )
     _assert_exact(eng, reqs, comps)
     assert sched.stats["prefix_hits"] == 1
@@ -200,7 +201,7 @@ def test_ineligible_families_bypass(arch, rng, unpack_backend):
     prompt = _prompt(rng, 8, eng.cfg.vocab_size)
     reqs = [Request(tokens=prompt, max_new_tokens=4) for _ in range(2)]
     comps, sched = eng.serve(
-        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+        reqs, ServeConfig(n_slots=2, block_size=4, prefix_cache=True), return_scheduler=True
     )
     assert sched.prefix is None
     assert sched.stats["prefix_hits"] == 0 and sched.stats["prefix_misses"] == 0
@@ -233,7 +234,8 @@ def test_preempted_restart_hits_its_own_blocks(rng, unpack_backend):
         for i in range(2)
     ]
     comps, sched = eng.serve(
-        reqs, n_slots=2, block_size=4, n_blocks=6, prefix_cache=True, return_scheduler=True
+        reqs, ServeConfig(n_slots=2, block_size=4, n_blocks=6, prefix_cache=True),
+        return_scheduler=True,
     )
     assert sched.stats["preemptions"] >= 1
     _assert_exact(eng, reqs, comps)
@@ -248,10 +250,7 @@ def test_admission_timing_surfaces_hits(rng, unpack_backend):
     reqs = [Request(tokens=prompt, max_new_tokens=3) for _ in range(3)]
     comps, sched = eng.serve(
         reqs,
-        n_slots=3,
-        block_size=4,
-        prefix_cache=True,
-        time_admissions=True,
+        ServeConfig(n_slots=3, block_size=4, prefix_cache=True, time_admissions=True),
         return_scheduler=True,
     )
     _assert_exact(eng, reqs, comps)

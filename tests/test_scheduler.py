@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro import configs, core
 from repro.models import decode_lm, init_lm, prefill_lm, set_packed_backend
-from repro.serve import Request, ServeEngine, latency_stats
+from repro.serve import Request, ServeConfig, ServeEngine, latency_stats
 
 MAX_LEN = 24
 _ENGINES = {}
@@ -88,7 +88,7 @@ def _static_reference(eng, req):
 def test_serve_matches_per_request_static(arch, tree, rng, unpack_backend):
     eng = _engines(arch)[tree == "packed"]
     reqs = _ragged_requests(eng.cfg, rng)
-    comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
+    comps, sched = eng.serve(reqs, ServeConfig(n_slots=2), return_scheduler=True)
     assert [c.index for c in comps] == list(range(len(reqs)))
     for req, comp in zip(reqs, comps):
         np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
@@ -122,7 +122,7 @@ def test_eos_eviction_frees_slots_for_reuse(rng, unpack_backend):
     # early while later requests are still queued
     eos = int(refs[0][2])
     reqs = [dataclasses.replace(r, eos_id=eos) for r in reqs]
-    comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
+    comps, sched = eng.serve(reqs, ServeConfig(n_slots=2), return_scheduler=True)
 
     for ref, comp in zip(refs, comps):
         hits = np.nonzero(ref == eos)[0]
@@ -152,7 +152,7 @@ def test_ragged_arrivals_idle_ticks(rng, unpack_backend):
     eng = _engines("internlm2-1.8b")[0]
     reqs = _ragged_requests(eng.cfg, rng, lens=(4, 5), budgets=(3, 4))
     reqs[1] = dataclasses.replace(reqs[1], arrival=10)
-    comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
+    comps, sched = eng.serve(reqs, ServeConfig(n_slots=2), return_scheduler=True)
     assert sched.stats["idle_steps"] > 0
     for req, comp in zip(reqs, comps):
         np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
@@ -164,7 +164,7 @@ def test_due_requests_admit_past_waiting_head(rng, unpack_backend):
     eng = _engines("internlm2-1.8b")[0]
     reqs = _ragged_requests(eng.cfg, rng, lens=(4, 5, 6), budgets=(3, 4, 3))
     reqs[0] = dataclasses.replace(reqs[0], arrival=40)  # head, far future
-    comps, sched = eng.serve(reqs, n_slots=1, return_scheduler=True)
+    comps, sched = eng.serve(reqs, ServeConfig(n_slots=1), return_scheduler=True)
     admit_order = [r for _, kind, r, _ in sched.events if kind == "admit"]
     assert admit_order[:2] == [1, 2]  # due work ran first, in FIFO order
     assert admit_order[-1] == 0  # the head still ran once due
@@ -182,7 +182,7 @@ def test_admission_compiles_log_many_traces(rng, unpack_backend):
     eng = _engines("internlm2-1.8b")[0]
     lens = list(range(1, 17))
     reqs = _ragged_requests(eng.cfg, rng, lens=lens, budgets=[2] * len(lens))
-    comps, sched = eng.serve(reqs, n_slots=2, return_scheduler=True)
+    comps, sched = eng.serve(reqs, ServeConfig(n_slots=2), return_scheduler=True)
     assert len(comps) == 16
     assert sched.stats["admission_traces"] <= math.floor(math.log2(MAX_LEN)) + 1
     # compiles are engine-memoized: never more than the shapes this run used
@@ -203,7 +203,7 @@ def test_full_length_prompt_at_block_multiple_admits(rng, unpack_backend):
     prompt = np.asarray(jax.random.randint(rng, (32,), 0, cfg.vocab_size))
     reqs = [Request(tokens=prompt, max_new_tokens=4)]  # budget clamps to 1
     for n_slots in (1, 2):  # pool == max_blocks, then the crash shape
-        comps, sched = eng.serve(reqs, n_slots=n_slots, return_scheduler=True)
+        comps, sched = eng.serve(reqs, ServeConfig(n_slots=n_slots), return_scheduler=True)
         assert len(comps) == 1 and len(comps[0].tokens) == 1
         assert comps[0].finish_reason == "length"
         assert sched.pool.n_live == 0
@@ -218,7 +218,7 @@ def test_small_blocks_grow_tables_token_exact(rng, unpack_backend):
     crossings per request) — still token-identical to the dense oracle."""
     eng = _engines("internlm2-1.8b")[0]
     reqs = _ragged_requests(eng.cfg, rng, lens=(3, 6, 4, 5), budgets=(8, 6, 9, 7))
-    comps, sched = eng.serve(reqs, n_slots=2, block_size=4, return_scheduler=True)
+    comps, sched = eng.serve(reqs, ServeConfig(n_slots=2, block_size=4), return_scheduler=True)
     for req, comp in zip(reqs, comps):
         np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
     assert sched.pool.peak_live > 2  # growth actually happened
@@ -231,7 +231,9 @@ def test_pool_exhaustion_preempts_and_replays_exactly(rng, unpack_backend):
     token stream (greedy determinism / (request,step)-keyed seeds)."""
     eng = _engines("internlm2-1.8b")[0]
     reqs = _ragged_requests(eng.cfg, rng, lens=(8, 8), budgets=(16, 16))
-    comps, sched = eng.serve(reqs, n_slots=2, block_size=4, n_blocks=6, return_scheduler=True)
+    comps, sched = eng.serve(
+        reqs, ServeConfig(n_slots=2, block_size=4, n_blocks=6), return_scheduler=True
+    )
     assert sched.stats["preemptions"] >= 1
     for req, comp in zip(reqs, comps):
         np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
@@ -243,7 +245,7 @@ def test_latency_stats_from_completions(rng, unpack_backend):
     eng = _engines("internlm2-1.8b")[0]
     reqs = _ragged_requests(eng.cfg, rng, lens=(4, 5, 6), budgets=(3, 4, 5))
     reqs[2] = dataclasses.replace(reqs[2], arrival=4)
-    comps = eng.serve(reqs, n_slots=2)
+    comps = eng.serve(reqs, ServeConfig(n_slots=2))
     stats = latency_stats(comps)
     assert set(stats) == {"queue_steps", "ttft_steps", "tokens_per_step"}
     for entry in stats.values():
@@ -307,7 +309,7 @@ def test_paged_serve_matches_dense_static_all_archs(arch, tree, rng, unpack_back
     overlap = np.concatenate([np.asarray(reqs[1].tokens)[:5], np.asarray([3], np.int32)])
     reqs.append(dataclasses.replace(reqs[1], tokens=overlap, max_new_tokens=5))
     comps, sched = eng.serve(
-        reqs, n_slots=2, block_size=4, prefix_cache=True, return_scheduler=True
+        reqs, ServeConfig(n_slots=2, block_size=4, prefix_cache=True), return_scheduler=True
     )
     for req, comp in zip(reqs, comps):
         np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
@@ -326,11 +328,11 @@ def test_sampling_reproducible_across_packed_and_quantize_tree(rng, unpack_backe
     e_q, e_p = _engines("internlm2-1.8b")
     reqs = _ragged_requests(e_q.cfg, rng)
     kw = dict(temperature=0.7, top_k=5, seed=123)
-    out_q = [c.tokens for c in e_q.serve(reqs, n_slots=2, **kw)]
-    out_p = [c.tokens for c in e_p.serve(reqs, n_slots=2, **kw)]
+    out_q = [c.tokens for c in e_q.serve(reqs, ServeConfig(n_slots=2, **kw))]
+    out_p = [c.tokens for c in e_p.serve(reqs, ServeConfig(n_slots=2, **kw))]
     assert out_q == out_p
-    assert out_q == [c.tokens for c in e_q.serve(reqs, n_slots=2, **kw)]
-    assert out_q == [c.tokens for c in e_q.serve(reqs, n_slots=3, **kw)]
+    assert out_q == [c.tokens for c in e_q.serve(reqs, ServeConfig(n_slots=2, **kw))]
+    assert out_q == [c.tokens for c in e_q.serve(reqs, ServeConfig(n_slots=3, **kw))]
 
 
 def test_sampled_streams_invariant_to_admission_order_and_batch(rng, unpack_backend):
@@ -343,17 +345,17 @@ def test_sampled_streams_invariant_to_admission_order_and_batch(rng, unpack_back
     eng = _engines("internlm2-1.8b")[0]
     reqs = _ragged_requests(eng.cfg, rng)
     kw = dict(temperature=0.7, top_k=5, seed=123)
-    base = [c.tokens for c in eng.serve(reqs, n_slots=2, **kw)]
+    base = [c.tokens for c in eng.serve(reqs, ServeConfig(n_slots=2, **kw))]
     # batch composition: more slots -> different row neighbors per step
-    assert base == [c.tokens for c in eng.serve(reqs, n_slots=5, **kw)]
+    assert base == [c.tokens for c in eng.serve(reqs, ServeConfig(n_slots=5, **kw))]
     # admission order: staggered arrivals reorder who is admitted when
     staggered = [dataclasses.replace(r, arrival=4 * i) for i, r in enumerate(reqs)]
-    assert base == [c.tokens for c in eng.serve(staggered, n_slots=2, **kw)]
+    assert base == [c.tokens for c in eng.serve(staggered, ServeConfig(n_slots=2, **kw))]
     reverse = [dataclasses.replace(r, arrival=4 * (len(reqs) - i)) for i, r in enumerate(reqs)]
-    assert base == [c.tokens for c in eng.serve(reverse, n_slots=3, **kw)]
+    assert base == [c.tokens for c in eng.serve(reverse, ServeConfig(n_slots=3, **kw))]
     # pool pressure: preemption restarts replay the same streams
     tight = [c.tokens for c in eng.serve(
-        reqs, n_slots=2, block_size=4, n_blocks=-(-MAX_LEN // 4), **kw
+        reqs, ServeConfig(n_slots=2, block_size=4, n_blocks=-(-MAX_LEN // 4), **kw)
     )]
     assert base == tight
 

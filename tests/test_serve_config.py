@@ -1,0 +1,177 @@
+"""ServeConfig (repro.serve.config): the serving surface's one validated
+construction path (DESIGN.md §10).
+
+Contracts: __post_init__ rejects bad knobs and cross-feature conflicts at
+CONSTRUCTION (not deep inside a scheduler subclass); resolve() pins the
+n_slots=0 workload default that used to hide inside serve(); the legacy
+keyword form of serve()/Scheduler still works — same tokens — but warns;
+capabilities() reports structural eligibility with per-clause reasons and
+agrees with the scheduler's own tier test by construction.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, core
+from repro.models import init_lm, set_packed_backend
+from repro.serve import (
+    Request,
+    Scheduler,
+    ServeConfig,
+    ServeEngine,
+    capabilities,
+    prefix_cache_eligible,
+    speculative_eligible,
+)
+from repro.serve.scheduler import fully_paged_tier
+
+MAX_LEN = 24
+_ENGINES = {}
+
+
+@pytest.fixture
+def unpack_backend():
+    set_packed_backend("unpack")
+    yield
+    set_packed_backend("auto")
+
+
+def _engine(arch):
+    if arch not in _ENGINES:
+        cfg = configs.get_reduced(arch)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        scfg = core.SymogConfig(n_bits=2, total_steps=1)
+        st = core.symog_init(params, scfg)
+        qt = core.quantize_tree(params, st, scfg)
+        _ENGINES[arch] = ServeEngine(cfg, qt, max_len=MAX_LEN, compute_dtype=jnp.float32)
+    return _ENGINES[arch]
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"n_slots": -1},
+        {"temperature": -0.1},
+        {"top_k": -2},
+        {"block_size": 0},
+        {"n_blocks": -4},
+        {"prefill_chunk": -1},
+    ],
+)
+def test_bad_knobs_rejected_at_construction(kw):
+    with pytest.raises(ValueError):
+        ServeConfig(**kw)
+
+
+def test_cross_feature_conflicts_rejected_at_construction():
+    spec = object()  # construction-time check never inspects the draft config
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ServeConfig(prefix_cache=True, speculative=spec)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ServeConfig(speculative=spec, prefill_chunk=4)
+    # each feature alone is fine
+    ServeConfig(prefix_cache=True, prefill_chunk=4)
+    ServeConfig(speculative=spec)
+
+
+def test_config_is_frozen():
+    cfg = ServeConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.n_slots = 3
+
+
+# ---------------------------------------------------------------------------
+# resolve(): the n_slots=0 workload default lives HERE, nowhere else
+# ---------------------------------------------------------------------------
+def test_resolve_defaults():
+    assert ServeConfig().resolve(None, [None] * 3).n_slots == 3
+    assert ServeConfig().resolve(None, [None] * 20).n_slots == 8  # capped
+    assert ServeConfig().resolve(None, []).n_slots == 8  # open-ended (async)
+    assert ServeConfig(n_slots=5).resolve(None, [None] * 2).n_slots == 5  # explicit wins
+    # resolve is a pure copy: the original stays auto
+    cfg = ServeConfig()
+    cfg.resolve(None, [None] * 3)
+    assert cfg.n_slots == 0
+
+
+# ---------------------------------------------------------------------------
+# legacy keyword shim: warns, same tokens, both-forms rejected
+# ---------------------------------------------------------------------------
+def test_legacy_serve_kwargs_warn_and_match(rng, unpack_backend):
+    eng = _engine("internlm2-1.8b")
+    reqs = [
+        Request(tokens=np.asarray(jax.random.randint(jax.random.fold_in(rng, i),
+                                                     (4 + i,), 0, eng.cfg.vocab_size)),
+                max_new_tokens=4)
+        for i in range(3)
+    ]
+    new = eng.serve(reqs, ServeConfig(n_slots=2, temperature=0.8, top_k=5, seed=7))
+    with pytest.warns(DeprecationWarning):
+        old = eng.serve(reqs, n_slots=2, temperature=0.8, top_k=5, seed=7)
+    for a, b in zip(new, old):
+        assert a.tokens == b.tokens
+
+
+def test_config_plus_legacy_kwargs_is_an_error(unpack_backend):
+    eng = _engine("internlm2-1.8b")
+    with pytest.raises(TypeError, match="not both"):
+        eng.serve([], ServeConfig(n_slots=2), n_slots=2)
+    with pytest.raises(TypeError, match="not both"):
+        Scheduler(eng, ServeConfig(n_slots=2), temperature=0.5)
+
+
+def test_legacy_scheduler_positional_n_slots_warns(unpack_backend):
+    eng = _engine("internlm2-1.8b")
+    with pytest.warns(DeprecationWarning):
+        sched = Scheduler(eng, 3)
+    assert sched.n_slots == 3
+    assert sched.config == ServeConfig(n_slots=3)
+
+
+# ---------------------------------------------------------------------------
+# capabilities(): one source of truth, with reasons
+# ---------------------------------------------------------------------------
+def test_capabilities_on_fully_paged_tier(unpack_backend):
+    eng = _engine("internlm2-1.8b")
+    caps = eng.capabilities()
+    assert set(caps) == {"fully_paged", "prefix_cache", "chunked_prefill", "speculative"}
+    for name, cap in caps.items():
+        assert bool(cap), name
+        assert cap.reason == ""
+
+
+@pytest.mark.parametrize(
+    "arch, fragment",
+    [
+        ("recurrentgemma-2b", "not an all-attention decoder"),  # hybrid family
+        ("olmoe-1b-7b", "MoE"),  # capacity coupling
+    ],
+)
+def test_capabilities_report_reasons_off_tier(arch, fragment, unpack_backend):
+    eng = _engine(arch)
+    caps = eng.capabilities()
+    assert not caps["chunked_prefill"]
+    assert fragment in caps["chunked_prefill"].reason
+    # the report and the scheduler's own tier test can never disagree
+    assert bool(caps["fully_paged"]) == fully_paged_tier(eng)
+    assert bool(caps["prefix_cache"]) == prefix_cache_eligible(eng)
+    assert bool(caps["speculative"]) == speculative_eligible(eng)
+
+
+def test_mla_blocks_prefix_and_chunked_but_not_speculative(unpack_backend):
+    """deepseek is MLA + MoE: MoE blocks everything, but MLA only appears in
+    the strict-tier reasons — the speculative verdict (allow_mla, §8) must
+    not cite it."""
+    eng = _engine("deepseek-v3-671b")
+    caps = capabilities(eng)
+    assert not caps["prefix_cache"] and "MLA" in caps["prefix_cache"].reason
+    assert not caps["chunked_prefill"] and "MLA" in caps["chunked_prefill"].reason
+    assert not caps["speculative"]  # MoE still blocks §8...
+    assert "MLA" not in caps["speculative"].reason  # ...but MLA alone would not

@@ -25,6 +25,7 @@ from repro import configs, core
 from repro.models import init_lm, set_packed_backend
 from repro.serve import (
     Request,
+    ServeConfig,
     ServeEngine,
     SpeculativeConfig,
     latency_stats,
@@ -93,7 +94,9 @@ def test_greedy_spec_matches_static_exact_twin(tree, rng, unpack_backend):
     eng = e_p if tree == "packed" else e_q
     reqs = _ragged_requests(eng.cfg, rng)
     comps, sched = eng.serve(
-        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+        reqs,
+        ServeConfig(n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3)),
+        return_scheduler=True,
     )
     assert [c.index for c in comps] == list(range(len(reqs)))
     for req, comp in zip(reqs, comps):
@@ -113,7 +116,9 @@ def test_greedy_spec_matches_static_under_rejection(rng, unpack_backend):
     e_f, _, _, packed = _engines("internlm2-1.8b")
     reqs = _ragged_requests(e_f.cfg, rng)
     comps, sched = e_f.serve(
-        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+        reqs,
+        ServeConfig(n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3)),
+        return_scheduler=True,
     )
     for req, comp in zip(reqs, comps):
         np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(e_f, req))
@@ -133,7 +138,9 @@ def test_spec_serve_matches_static_all_eligible_archs(arch, tree, rng, unpack_ba
     eng = e_p if tree == "packed" else e_q
     reqs = _ragged_requests(eng.cfg, rng)
     comps, sched = eng.serve(
-        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+        reqs,
+        ServeConfig(n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3)),
+        return_scheduler=True,
     )
     assert speculative_eligible(eng)
     assert sched.stats["spec_steps"] > 0
@@ -150,7 +157,9 @@ def test_ineligible_arch_bypasses_to_vanilla(arch, rng, unpack_backend):
     assert not speculative_eligible(e_q)
     reqs = _ragged_requests(e_q.cfg, rng, lens=(3, 5), budgets=(6, 4))
     comps, sched = e_q.serve(
-        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+        reqs,
+        ServeConfig(n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3)),
+        return_scheduler=True,
     )
     assert sched.stats["spec_steps"] == 0
     for req, comp in zip(reqs, comps):
@@ -170,7 +179,7 @@ def test_eos_inside_speculated_window_truncates_exactly(rng, unpack_backend):
     eos = int(ref[3])  # appears mid-stream, deep inside a k=4 window
     comps = e_q.serve(
         [Request(tokens=req0.tokens, max_new_tokens=10, eos_id=eos)],
-        speculative=SpeculativeConfig(draft=packed, k=4),
+        ServeConfig(speculative=SpeculativeConfig(draft=packed, k=4)),
     )
     expect = list(ref[: list(ref).index(eos) + 1])
     assert comps[0].tokens == expect
@@ -182,7 +191,8 @@ def test_budget_respected_to_the_token(rng, unpack_backend):
     never overrun (the verify writes past it land in dead positions)."""
     _, e_q, _, packed = _engines("internlm2-1.8b")
     reqs = _ragged_requests(e_q.cfg, rng, lens=(3, 4), budgets=(2, 5))
-    comps = e_q.serve(reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=4))
+    spec_cfg = ServeConfig(n_slots=2, speculative=SpeculativeConfig(draft=packed, k=4))
+    comps = e_q.serve(reqs, spec_cfg)
     for req, comp in zip(reqs, comps):
         assert len(comp.tokens) == req.max_new_tokens
         np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(e_q, req))
@@ -197,10 +207,12 @@ def test_preemption_under_pool_pressure(rng, unpack_backend):
     reqs = _ragged_requests(e_q.cfg, rng, lens=(3, 5, 4), budgets=(10, 8, 6))
     comps, sched = e_q.serve(
         reqs,
-        n_slots=2,
-        block_size=4,
-        n_blocks=-(-MAX_LEN // 4),
-        speculative=SpeculativeConfig(draft=packed, k=3),
+        ServeConfig(
+            n_slots=2,
+            block_size=4,
+            n_blocks=-(-MAX_LEN // 4),
+            speculative=SpeculativeConfig(draft=packed, k=3),
+        ),
         return_scheduler=True,
     )
     for req, comp in zip(reqs, comps):
@@ -219,14 +231,16 @@ def test_sampled_spec_deterministic_across_batch_composition(rng, unpack_backend
     reqs = _ragged_requests(e_f.cfg, rng)
     kw = dict(temperature=0.8, top_k=5, seed=11)
     spec = SpeculativeConfig(draft=packed, k=3)
-    base = [c.tokens for c in e_f.serve(reqs, n_slots=2, speculative=spec, **kw)]
-    assert base == [c.tokens for c in e_f.serve(reqs, n_slots=2, speculative=spec, **kw)]
-    assert base == [c.tokens for c in e_f.serve(reqs, n_slots=4, speculative=spec, **kw)]
+    base = [c.tokens for c in e_f.serve(reqs, ServeConfig(n_slots=2, speculative=spec, **kw))]
+    two = ServeConfig(n_slots=2, speculative=spec, **kw)
+    assert base == [c.tokens for c in e_f.serve(reqs, two)]
+    four = ServeConfig(n_slots=4, speculative=spec, **kw)
+    assert base == [c.tokens for c in e_f.serve(reqs, four)]
     staggered = [
         Request(tokens=r.tokens, max_new_tokens=r.max_new_tokens, arrival=3 * i)
         for i, r in enumerate(reqs)
     ]
-    assert base == [c.tokens for c in e_f.serve(staggered, n_slots=2, speculative=spec, **kw)]
+    assert base == [c.tokens for c in e_f.serve(staggered, two)]
 
 
 def test_sampled_spec_at_cache_boundary(rng, unpack_backend):
@@ -245,9 +259,9 @@ def test_sampled_spec_at_cache_boundary(rng, unpack_backend):
     reqs = [Request(tokens=prompt, max_new_tokens=99)]
     kw = dict(temperature=0.9, top_k=0, seed=3)
     spec = SpeculativeConfig(draft=packed, k=4)
-    comps = e_f.serve(reqs, n_slots=1, speculative=spec, **kw)
+    comps = e_f.serve(reqs, ServeConfig(n_slots=1, speculative=spec, **kw))
     assert len(comps[0].tokens) == MAX_LEN - 8 + 1
-    again = e_f.serve(reqs, n_slots=3, speculative=spec, **kw)
+    again = e_f.serve(reqs, ServeConfig(n_slots=3, speculative=spec, **kw))
     assert comps[0].tokens == again[0].tokens
 
 
@@ -264,8 +278,8 @@ def test_sampled_spec_determinism_with_adaptive_config(rng, unpack_backend, seed
     reqs = _ragged_requests(e_f.cfg, rng)
     kw = dict(temperature=0.9, top_k=0, seed=seed)
     spec = SpeculativeConfig(draft=packed, k=4, adaptive=True)
-    solo = [c.tokens for c in e_f.serve(reqs, n_slots=1, speculative=spec, **kw)]
-    wide = [c.tokens for c in e_f.serve(reqs, n_slots=4, speculative=spec, **kw)]
+    solo = [c.tokens for c in e_f.serve(reqs, ServeConfig(n_slots=1, speculative=spec, **kw))]
+    wide = [c.tokens for c in e_f.serve(reqs, ServeConfig(n_slots=4, speculative=spec, **kw))]
     assert solo == wide
 
 
@@ -275,12 +289,13 @@ def test_adaptive_depth_backs_off_under_rejection(rng, unpack_backend):
     e_f, _, _, packed = _engines("internlm2-1.8b")
     reqs = _ragged_requests(e_f.cfg, rng, lens=(4, 5), budgets=(10, 10))
     _, adaptive = e_f.serve(
-        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=4), return_scheduler=True
+        reqs,
+        ServeConfig(n_slots=2, speculative=SpeculativeConfig(draft=packed, k=4)),
+        return_scheduler=True,
     )
     _, fixed = e_f.serve(
         reqs,
-        n_slots=2,
-        speculative=SpeculativeConfig(draft=packed, k=4, adaptive=False),
+        ServeConfig(n_slots=2, speculative=SpeculativeConfig(draft=packed, k=4, adaptive=False)),
         return_scheduler=True,
     )
     assert adaptive.stats["spec_drafted"] < fixed.stats["spec_drafted"]
@@ -298,7 +313,9 @@ def test_spec_stats_and_latency_surface(rng, unpack_backend):
     _, e_q, _, packed = _engines("internlm2-1.8b")
     reqs = _ragged_requests(e_q.cfg, rng)
     comps, sched = e_q.serve(
-        reqs, n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3), return_scheduler=True
+        reqs,
+        ServeConfig(n_slots=2, speculative=SpeculativeConfig(draft=packed, k=3)),
+        return_scheduler=True,
     )
     assert sched.stats["preemptions"] == 0
     assert sum(c.spec_tokens for c in comps) == sched.stats["spec_emitted"]
@@ -318,16 +335,21 @@ def test_verify_traces_memoized_per_depth(rng, unpack_backend):
     spec = SpeculativeConfig(draft=packed, k=3)
     fns = e_f.speculative_fns(greedy=True, top_k=0)
     n0 = fns.verify_compiles  # the engine memo is shared across tests
-    e_f.serve(reqs, speculative=spec)
+    e_f.serve(reqs, ServeConfig(speculative=spec))
     n1 = fns.verify_compiles
     assert n1 - n0 <= 3  # at most one trace per adaptive depth in [1, k]
-    e_f.serve(reqs, speculative=spec)
+    e_f.serve(reqs, ServeConfig(speculative=spec))
     assert fns.verify_compiles == n1
 
 
 def test_prefix_cache_and_speculative_are_exclusive(rng, unpack_backend):
+    """The conflict is rejected at ServeConfig construction (DESIGN.md
+    §10), before any scheduler exists — and the legacy kwarg shim routes
+    through the same validation."""
     _, e_q, _, packed = _engines("internlm2-1.8b")
     with pytest.raises(ValueError, match="mutually exclusive"):
+        ServeConfig(speculative=SpeculativeConfig(draft=packed, k=2), prefix_cache=True)
+    with pytest.raises(ValueError, match="mutually exclusive"), pytest.warns(DeprecationWarning):
         e_q.serve(
             _ragged_requests(e_q.cfg, rng, lens=(3,), budgets=(2,)),
             speculative=SpeculativeConfig(draft=packed, k=2),
@@ -347,7 +369,7 @@ def test_decode_verify_lm_bitwise_matches_sequential_decode(rng, unpack_backend)
 
     _, e_q, _, _ = _engines("gemma2-27b")  # windowed layers: the risky mask path
     cfg = e_q.cfg
-    sched = Scheduler(e_q, 2, block_size=4)
+    sched = Scheduler(e_q, ServeConfig(n_slots=2, block_size=4))
     for r in _ragged_requests(cfg, rng, lens=(5, 7), budgets=(8, 8)):
         sched.submit(r)
     sched._grow_tables(horizon=4)
