@@ -26,21 +26,29 @@ PEAK = 197e12  # bf16 FLOP/s per v5e chip
 # ---------------------------------------------------------------------------
 def paged_attention_bytes(
     *, B: int, T: int, K: int, G: int, hd: int, max_blocks: int, block: int,
-    kv_bytes: int = 2, act_bytes: int = 2,
+    kv_bytes: float = 2, act_bytes: int = 2, kv_bits: int = 0,
 ) -> Dict[str, float]:
     """Bytes per fused paged-attention call vs the composed path it replaces.
 
     Fused: each pool block is DMA'd once per (batch, kv-head) grid step at
-    the POOL dtype (int8 fixed-point or bf16 — ``kv_bytes``), plus the
-    block-table scalars and q/out; the (B, S, ...) logical view never
-    exists.  Composed: the same pool reads, PLUS the gather writes the
-    logical k and v views at compute dtype and attention reads them back —
-    two extra full-cache round-trips per call."""
+    the POOL dtype, plus the block-table scalars and q/out; the (B, S, ...)
+    logical view never exists.  ``kv_bits`` in {8, 4} selects the per-block
+    SYMOG pools (DESIGN.md §11): the k/v streams carry kv_bits/8 bytes per
+    element — int4 packs two lanes per int8 word, so a sub-byte wordlength
+    really does halve the pool stream — plus one int32 scale exponent per
+    (block, kv head) per stream; otherwise ``kv_bytes`` gives the pool
+    dtype width (legacy int8 = 1, bf16 = 2).  Composed: the same pool
+    reads, PLUS the gather writes the logical k and v views at compute
+    dtype and attention reads them back — two extra full-cache round-trips
+    per call."""
     S = max_blocks * block
+    if kv_bits:
+        kv_bytes = kv_bits / 8
     pool_reads = 2 * B * S * K * hd * kv_bytes  # k + v pools, once each
     table = B * max_blocks * 4  # int32 block-table reads
+    scales = 2 * B * max_blocks * K * 4 if kv_bits else 0  # int32 exponents
     q_out = 2 * B * T * K * G * hd * act_bytes
-    fused = pool_reads + table + q_out
+    fused = pool_reads + table + scales + q_out
     view = 2 * B * S * K * hd * act_bytes  # materialized k + v logical views
     composed = fused + 2 * view  # written by the gather, read back by attn
     return {"fused": fused, "composed": composed, "ratio": composed / fused}

@@ -31,7 +31,11 @@ composed path exactly: kv_pos <= q_pos (causal), q_pos - kv_pos < window
 masked logits at -1e30 before the max and exp'd terms zeroed so a fully
 masked block contributes nothing.  int8 fixed-point pools dequantize in
 the kernel (× 2^-KV_F, an exponent shift) — ``kv_scale`` is static on the
-pool dtype.
+pool dtype.  Per-block SYMOG pools (DESIGN.md §11) instead carry int32
+exponent leaves: the ``_quant`` kernel variants read each (block, head)'s
+exponent through a (1, 1)-block operand indexed by the SAME prefetched
+table as the data block, unpack packed int4 words with a lane concatenate,
+and dequantize with one exp2 multiply inside the loop.
 
 The online recurrence per block j (m running max, l denominator, o acc):
 
@@ -116,28 +120,100 @@ def _attn_kernel(bt_ref, pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
         _finish(o_ref, l_ref, acc_ref)
 
 
+def _unpack_int4(words):
+    """Split-halves int4 unpack (see ref.unpack_int4): the low nibbles are
+    lanes [0, w) and the high nibbles lanes [w, 2w), so unpacking is one
+    lane-axis concatenate — Mosaic-friendly, no interleave reshuffle."""
+    x = words.astype(jnp.int32)
+    return jnp.concatenate([(x << 28) >> 28, x >> 4], axis=-1)
+
+
+def _attn_kernel_quant(bt_ref, pos_ref, win_ref, q_ref, k_ref, v_ref,
+                       ke_ref, ve_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                       block: int, nb: int, g: int, scale: float, cap: float,
+                       kv_bits: int):
+    """Per-block-scale variant: k/v arrive as int8 mantissa words (int4
+    packs two lanes per word) and ``ke/ve`` carry this (block, head)'s
+    power-of-two exponent — dequant is unpack + one exp2 multiply."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tg, hd = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[...].reshape(tg, hd).astype(jnp.float32)
+    kw = k_ref[...].reshape(block, k_ref.shape[3])
+    vw = v_ref[...].reshape(block, v_ref.shape[3])
+    if kv_bits == 4:
+        kw, vw = _unpack_int4(kw), _unpack_int4(vw)
+    k = kw.astype(jnp.float32) * jnp.exp2(ke_ref[0, 0].astype(jnp.float32))
+    v = vw.astype(jnp.float32) * jnp.exp2(ve_ref[0, 0].astype(jnp.float32))
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap > 0:
+        s = jnp.tanh(s / cap) * cap
+
+    q_pos = pos_ref[b] + jax.lax.broadcasted_iota(jnp.int32, (tg, 1), 0) // g
+    kv_pos = j * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    mask = (kv_pos <= q_pos) & (q_pos - kv_pos < win_ref[0])
+    _online_update(mask, s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nb - 1)
+    def _done():
+        _finish(o_ref, l_ref, acc_ref)
+
+
 def paged_attention_padded(q, k_pool, v_pool, block_tables, pos0, window, *,
                            g: int, scale: float, cap: float, kv_scale: float,
+                           k_exp=None, v_exp=None, kv_bits: int = 0,
                            interpret: bool = False):
     """q (B, K, T·G, hd) float; k/v pools (n_blocks, block, K, hd) float or
     int8; block_tables (B, max_blocks) int32; pos0 (B,) int32 first query
     position per row (queries contiguous); window (1,) int32 (2^30 =
-    unwindowed).  Returns (B, K, T·G, hd) f32-accumulated in q's dtype."""
+    unwindowed).  Returns (B, K, T·G, hd) f32-accumulated in q's dtype.
+
+    Per-block-scale pools pass ``k_exp``/``v_exp`` (n_blocks, K) int32
+    exponents plus ``kv_bits`` (8, or 4 for packed pools whose last dim is
+    hd/2); exponents ride as ordinary operands whose (1, 1) BlockSpec is
+    indexed through the same scalar-prefetched table as the data blocks."""
     B, K, tg, hd = q.shape
     block = k_pool.shape[1]
     nb = block_tables.shape[1]
+    quant = k_exp is not None
+    hdw = k_pool.shape[3]  # hd, or hd//2 for packed int4 words
+    in_specs = [
+        pl.BlockSpec((1, 1, tg, hd), lambda b, kh, j, bt, pos, win: (b, kh, 0, 0)),
+        pl.BlockSpec(
+            (1, block, 1, hdw), lambda b, kh, j, bt, pos, win: (bt[b, j], 0, kh, 0)
+        ),
+        pl.BlockSpec(
+            (1, block, 1, hdw), lambda b, kh, j, bt, pos, win: (bt[b, j], 0, kh, 0)
+        ),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda b, kh, j, bt, pos, win: (bt[b, j], kh)),
+            pl.BlockSpec((1, 1), lambda b, kh, j, bt, pos, win: (bt[b, j], kh)),
+        ]
+        operands += [k_exp, v_exp]
+        body = functools.partial(
+            _attn_kernel_quant, block=block, nb=nb, g=g, scale=scale, cap=cap,
+            kv_bits=kv_bits,
+        )
+    else:
+        body = functools.partial(
+            _attn_kernel, block=block, nb=nb, g=g, scale=scale, cap=cap,
+            kv_scale=kv_scale,
+        )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, K, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, tg, hd), lambda b, kh, j, bt, pos, win: (b, kh, 0, 0)),
-            pl.BlockSpec(
-                (1, block, 1, hd), lambda b, kh, j, bt, pos, win: (bt[b, j], 0, kh, 0)
-            ),
-            pl.BlockSpec(
-                (1, block, 1, hd), lambda b, kh, j, bt, pos, win: (bt[b, j], 0, kh, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, tg, hd), lambda b, kh, j, bt, pos, win: (b, kh, 0, 0)
         ),
@@ -148,14 +224,11 @@ def paged_attention_padded(q, k_pool, v_pool, block_tables, pos0, window, *,
         ],
     )
     return pl.pallas_call(
-        functools.partial(
-            _attn_kernel, block=block, nb=nb, g=g, scale=scale, cap=cap,
-            kv_scale=kv_scale,
-        ),
+        body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, tg, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, pos0, window, q, k_pool, v_pool)
+    )(block_tables, pos0, window, *operands)
 
 
 def _mla_kernel(bt_ref, pos_ref, qe_ref, qr_ref, ckv_ref, kr_ref, o_ref,
@@ -197,25 +270,89 @@ def _mla_kernel(bt_ref, pos_ref, qe_ref, qr_ref, ckv_ref, kr_ref, o_ref,
         o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)[None]
 
 
+def _mla_kernel_quant(bt_ref, pos_ref, qe_ref, qr_ref, ckv_ref, kr_ref,
+                      ce_ref, re_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                      block: int, nb: int, h: int, scale: float, kv_bits: int):
+    """Per-block-scale MLA variant: both pools carry int8 mantissa words
+    (int4 packs two rank lanes per word) and a scalar power-of-two exponent
+    per physical block (the compressed stream has no head axis)."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    th, r = qe_ref.shape[1], qe_ref.shape[2]
+    rope = qr_ref.shape[2]
+    qe = qe_ref[...].reshape(th, r).astype(jnp.float32)
+    qr = qr_ref[...].reshape(th, rope).astype(jnp.float32)
+    cw = ckv_ref[...].reshape(block, ckv_ref.shape[2])
+    rw = kr_ref[...].reshape(block, kr_ref.shape[2])
+    if kv_bits == 4:
+        cw, rw = _unpack_int4(cw), _unpack_int4(rw)
+    ckv = cw.astype(jnp.float32) * jnp.exp2(ce_ref[0, 0].astype(jnp.float32))
+    kr = rw.astype(jnp.float32) * jnp.exp2(re_ref[0, 0].astype(jnp.float32))
+
+    s = (
+        jnp.dot(qe, ckv.T, preferred_element_type=jnp.float32)
+        + jnp.dot(qr, kr.T, preferred_element_type=jnp.float32)
+    ) * scale
+
+    q_pos = pos_ref[b] + jax.lax.broadcasted_iota(jnp.int32, (th, 1), 0) // h
+    kv_pos = j * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    mask = kv_pos <= q_pos
+    _online_update(mask, s, ckv, m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nb - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)[None]
+
+
 def paged_attention_mla_padded(q_eff, q_rope, ckv_pool, krope_pool,
                                block_tables, pos0, *, h: int, scale: float,
-                               kv_scale: float, interpret: bool = False):
+                               kv_scale: float, ckv_exp=None, kr_exp=None,
+                               kv_bits: int = 0, interpret: bool = False):
     """q_eff (B, T·H, r), q_rope (B, T·H, rope); pools (n_blocks, block, r)
     and (n_blocks, block, rope).  Absorbed MLA decode: the value stream is
-    the compressed c_kv itself, so out is (B, T·H, r)."""
+    the compressed c_kv itself, so out is (B, T·H, r).  Per-block-scale
+    pools pass ``ckv_exp``/``kr_exp`` (n_blocks,) int32 exponents plus
+    ``kv_bits`` (8, or 4 for packed pools whose last dim is halved)."""
     B, th, r = q_eff.shape
     rope = q_rope.shape[2]
     block = ckv_pool.shape[1]
     nb = block_tables.shape[1]
+    quant = ckv_exp is not None
+    rw, ropew = ckv_pool.shape[2], krope_pool.shape[2]  # halved when packed
+    in_specs = [
+        pl.BlockSpec((1, th, r), lambda b, j, bt, pos: (b, 0, 0)),
+        pl.BlockSpec((1, th, rope), lambda b, j, bt, pos: (b, 0, 0)),
+        pl.BlockSpec((1, block, rw), lambda b, j, bt, pos: (bt[b, j], 0, 0)),
+        pl.BlockSpec((1, block, ropew), lambda b, j, bt, pos: (bt[b, j], 0, 0)),
+    ]
+    operands = [q_eff, q_rope, ckv_pool, krope_pool]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda b, j, bt, pos: (bt[b, j], 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt, pos: (bt[b, j], 0)),
+        ]
+        operands += [ckv_exp.reshape(-1, 1), kr_exp.reshape(-1, 1)]
+        body = functools.partial(
+            _mla_kernel_quant, block=block, nb=nb, h=h, scale=scale,
+            kv_bits=kv_bits,
+        )
+    else:
+        body = functools.partial(
+            _mla_kernel, block=block, nb=nb, h=h, scale=scale, kv_scale=kv_scale
+        )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, nb),
-        in_specs=[
-            pl.BlockSpec((1, th, r), lambda b, j, bt, pos: (b, 0, 0)),
-            pl.BlockSpec((1, th, rope), lambda b, j, bt, pos: (b, 0, 0)),
-            pl.BlockSpec((1, block, r), lambda b, j, bt, pos: (bt[b, j], 0, 0)),
-            pl.BlockSpec((1, block, rope), lambda b, j, bt, pos: (bt[b, j], 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, th, r), lambda b, j, bt, pos: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((th, 1), jnp.float32),
@@ -224,10 +361,8 @@ def paged_attention_mla_padded(q_eff, q_rope, ckv_pool, krope_pool,
         ],
     )
     return pl.pallas_call(
-        functools.partial(
-            _mla_kernel, block=block, nb=nb, h=h, scale=scale, kv_scale=kv_scale
-        ),
+        body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, th, r), q_eff.dtype),
         interpret=interpret,
-    )(block_tables, pos0, q_eff, q_rope, ckv_pool, krope_pool)
+    )(block_tables, pos0, *operands)

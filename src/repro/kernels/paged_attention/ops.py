@@ -28,10 +28,12 @@ _NO_WINDOW = 2**30  # models.config.GLOBAL_WINDOW (no models import: layering)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "cap", "kv_scale", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("scale", "cap", "kv_scale", "kv_bits", "interpret", "out_dtype"),
 )
-def _paged_attention(q, k_pool, v_pool, block_tables, pos0, window, *,
-                     scale, cap, kv_scale, interpret, out_dtype):
+def _paged_attention(q, k_pool, v_pool, block_tables, pos0, window, k_exp,
+                     v_exp, *, scale, cap, kv_scale, kv_bits, interpret,
+                     out_dtype):
     B, T, K, G, hd = q.shape
     q2 = q.transpose(0, 2, 1, 3, 4).reshape(B, K, T * G, hd)
     out = paged_attention_padded(
@@ -39,7 +41,8 @@ def _paged_attention(q, k_pool, v_pool, block_tables, pos0, window, *,
         block_tables.astype(jnp.int32),
         pos0.astype(jnp.int32),
         window,
-        g=G, scale=scale, cap=cap, kv_scale=kv_scale, interpret=interpret,
+        g=G, scale=scale, cap=cap, kv_scale=kv_scale,
+        k_exp=k_exp, v_exp=v_exp, kv_bits=kv_bits, interpret=interpret,
     )
     out = out.reshape(B, K, T, G, hd).transpose(0, 2, 1, 3, 4)
     return out.astype(out_dtype) if out_dtype is not None else out
@@ -47,6 +50,7 @@ def _paged_attention(q, k_pool, v_pool, block_tables, pos0, window, *,
 
 def paged_attention(q, k_pool, v_pool, block_tables, pos0, *, scale: float,
                     cap: float = 0.0, window=None, kv_scale: float = 1.0,
+                    k_scale_exp=None, v_scale_exp=None, kv_bits: int = 0,
                     interpret: bool = True, out_dtype=None):
     """Fused paged GQA/MQA attention.
 
@@ -55,21 +59,28 @@ def paged_attention(q, k_pool, v_pool, block_tables, pos0, *, scale: float,
     pos0 (B,) int32.  ``window`` None, a Python int, or a traced int32
     scalar; ``cap`` the logit softcap (0 = off).  Masking, windowing and
     int8 dequantization all happen inside the online-softmax loop — the
-    (B, max_blocks·block, ...) logical view is never materialized."""
+    (B, max_blocks·block, ...) logical view is never materialized.
+
+    Per-block SYMOG pools pass ``k_scale_exp``/``v_scale_exp`` (n_blocks,
+    K) int32 exponent leaves and ``kv_bits`` in {8, 4}; int4 pools pack two
+    lanes per int8 word, so their last dim is hd/2 and the kernel unpacks
+    in-lane (``kv_scale`` is ignored on this path)."""
     w = _NO_WINDOW if window is None else window
     w = jnp.asarray(w, jnp.int32).reshape(1)
     return _paged_attention(
-        q, k_pool, v_pool, block_tables, pos0, w,
-        scale=scale, cap=cap, kv_scale=kv_scale, interpret=interpret,
-        out_dtype=out_dtype,
+        q, k_pool, v_pool, block_tables, pos0, w, k_scale_exp, v_scale_exp,
+        scale=scale, cap=cap, kv_scale=kv_scale, kv_bits=kv_bits,
+        interpret=interpret, out_dtype=out_dtype,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "kv_scale", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("scale", "kv_scale", "kv_bits", "interpret", "out_dtype"),
 )
 def _paged_attention_mla(q_eff, q_rope, ckv_pool, krope_pool, block_tables,
-                         pos0, *, scale, kv_scale, interpret, out_dtype):
+                         pos0, ckv_exp, kr_exp, *, scale, kv_scale, kv_bits,
+                         interpret, out_dtype):
     B, T, H, r = q_eff.shape
     rope = q_rope.shape[-1]
     out = paged_attention_mla_padded(
@@ -78,7 +89,8 @@ def _paged_attention_mla(q_eff, q_rope, ckv_pool, krope_pool, block_tables,
         ckv_pool, krope_pool,
         block_tables.astype(jnp.int32),
         pos0.astype(jnp.int32),
-        h=H, scale=scale, kv_scale=kv_scale, interpret=interpret,
+        h=H, scale=scale, kv_scale=kv_scale,
+        ckv_exp=ckv_exp, kr_exp=kr_exp, kv_bits=kv_bits, interpret=interpret,
     )
     out = out.reshape(B, T, H, r)
     return out.astype(out_dtype) if out_dtype is not None else out
@@ -86,14 +98,20 @@ def _paged_attention_mla(q_eff, q_rope, ckv_pool, krope_pool, block_tables,
 
 def paged_attention_mla(q_eff, q_rope, ckv_pool, krope_pool, block_tables,
                         pos0, *, scale: float, kv_scale: float = 1.0,
-                        interpret: bool = True, out_dtype=None):
+                        ckv_scale_exp=None, kr_scale_exp=None,
+                        kv_bits: int = 0, interpret: bool = True,
+                        out_dtype=None):
     """Fused paged MLA absorbed decode (DESIGN.md §9).
 
     q_eff (B, T, H, r) rank-space queries; q_rope (B, T, H, rope); pools
     (n_blocks, block, r) / (n_blocks, block, rope).  Logits are
     q_eff·c_kv + q_rope·k_rope and the VALUE stream is c_kv itself, so the
-    result (B, T, H, r) still needs the caller's kv_b_v expansion."""
+    result (B, T, H, r) still needs the caller's kv_b_v expansion.
+    Per-block SYMOG pools pass ``ckv_scale_exp``/``kr_scale_exp``
+    (n_blocks,) int32 exponents and ``kv_bits`` in {8, 4}."""
     return _paged_attention_mla(
         q_eff, q_rope, ckv_pool, krope_pool, block_tables, pos0,
-        scale=scale, kv_scale=kv_scale, interpret=interpret, out_dtype=out_dtype,
+        ckv_scale_exp, kr_scale_exp,
+        scale=scale, kv_scale=kv_scale, kv_bits=kv_bits, interpret=interpret,
+        out_dtype=out_dtype,
     )

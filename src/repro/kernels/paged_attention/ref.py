@@ -21,12 +21,41 @@ def gather_logical(pool, block_tables):
     return flat[idx.reshape(block_tables.shape[0], -1)]
 
 
+def unpack_int4(packed):
+    """Split-halves int4 unpack: word i of a packed row holds lane i in its
+    low nibble and lane i + w/2 in its high (sign-carrying) nibble, so the
+    unpack is a lane-axis concatenate — no interleave reshuffle."""
+    x = packed.astype(jnp.int32)
+    lo = (x << 28) >> 28  # arithmetic shifts sign-extend the low nibble
+    hi = x >> 4
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def dequant_logical(pool, exp_leaf, block_tables, *, kv_bits):
+    """Gathered logical view of a SYMOG-quantized pool: int4 words unpacked,
+    then every row of physical block p scaled by 2^exp_leaf[p] (per KV head
+    where the exponent leaf carries a head axis)."""
+    data = gather_logical(pool, block_tables)
+    if kv_bits == 4:
+        data = unpack_int4(data)
+    block = pool.shape[1]
+    e = jnp.repeat(exp_leaf[block_tables], block, axis=1)  # (B, S[, K])
+    scale = jnp.exp2(e.astype(jnp.float32))
+    scale = scale[:, :, None] if e.ndim == 2 else scale[:, :, :, None]
+    return data.astype(jnp.float32) * scale
+
+
 def paged_attention_ref(q, k_pool, v_pool, block_tables, pos0, *, scale,
-                        cap=0.0, window=None, kv_scale=1.0):
+                        cap=0.0, window=None, kv_scale=1.0,
+                        k_scale_exp=None, v_scale_exp=None, kv_bits=0):
     """Composed reference for ``paged_attention`` (same contract)."""
     B, T, K, G, hd = q.shape
-    k = gather_logical(k_pool, block_tables).astype(jnp.float32) * kv_scale
-    v = gather_logical(v_pool, block_tables).astype(jnp.float32) * kv_scale
+    if k_scale_exp is not None:
+        k = dequant_logical(k_pool, k_scale_exp, block_tables, kv_bits=kv_bits)
+        v = dequant_logical(v_pool, v_scale_exp, block_tables, kv_bits=kv_bits)
+    else:
+        k = gather_logical(k_pool, block_tables).astype(jnp.float32) * kv_scale
+        v = gather_logical(v_pool, block_tables).astype(jnp.float32) * kv_scale
     S = k.shape[1]
     kv_pos = jnp.arange(S, dtype=jnp.int32)
     q_pos = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
@@ -44,11 +73,16 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, pos0, *, scale,
 
 
 def paged_attention_mla_ref(q_eff, q_rope, ckv_pool, krope_pool,
-                            block_tables, pos0, *, scale, kv_scale=1.0):
+                            block_tables, pos0, *, scale, kv_scale=1.0,
+                            ckv_scale_exp=None, kr_scale_exp=None, kv_bits=0):
     """Composed reference for ``paged_attention_mla`` (same contract)."""
     B, T, H, r = q_eff.shape
-    c_kv = gather_logical(ckv_pool, block_tables).astype(jnp.float32) * kv_scale
-    k_rope = gather_logical(krope_pool, block_tables).astype(jnp.float32) * kv_scale
+    if ckv_scale_exp is not None:
+        c_kv = dequant_logical(ckv_pool, ckv_scale_exp, block_tables, kv_bits=kv_bits)
+        k_rope = dequant_logical(krope_pool, kr_scale_exp, block_tables, kv_bits=kv_bits)
+    else:
+        c_kv = gather_logical(ckv_pool, block_tables).astype(jnp.float32) * kv_scale
+        k_rope = gather_logical(krope_pool, block_tables).astype(jnp.float32) * kv_scale
     S = c_kv.shape[1]
     kv_pos = jnp.arange(S, dtype=jnp.int32)
     q_pos = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]

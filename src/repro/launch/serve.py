@@ -32,6 +32,8 @@ prompts across steps, and ``warn_inert_flags`` reads
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import math
 import time
 
 import numpy as np
@@ -73,6 +75,41 @@ def warn_inert_flags(eng: ServeEngine, config: ServeConfig) -> None:
         if requested and not caps[cap]:
             print(f"WARNING: {flag} is structurally inert on {arch} "
                   f"({caps[cap].reason}) — {effect}")
+
+
+def kv_pool_report(eng: ServeEngine, config: ServeConfig) -> None:
+    """One line of DESIGN.md §6/§11 capacity math for the paged KV pool:
+    bytes per decode slot at the engine's KV dtype (per-block SYMOG
+    mantissas + int32 scale leaves when quantized) next to the bf16 pool
+    of the same geometry — so a --kv-bits run shows what the bits buy."""
+    from repro.models.lm import PAGED_CACHE_LEAVES, scan_groups
+
+    blk = config.block_size
+    n_per_slot = math.ceil(eng.max_len / blk)
+    qbits = eng.kv_quant_bits
+    shapes = eng.prefill_cache_shapes()
+    quant = bf16 = 0
+    for g in scan_groups(eng.cfg):
+        axis = 1 if g.stacked else 0
+        for j in range(len(g.unit)):
+            for name, sd in shapes[g.name][f"sub{j}"].items():
+                if not (g.paged[j] and name in PAGED_CACHE_LEAVES):
+                    continue
+                stack = sd.shape[0] if g.stacked else 1
+                feat = int(np.prod(sd.shape[axis + 2 :]))
+                width = sd.shape[-1]
+                bf16 += stack * n_per_slot * blk * feat * 2
+                if qbits:
+                    quant += stack * n_per_slot * (
+                        blk * feat * qbits // 8 + (feat // width) * 4)
+                else:
+                    quant += stack * n_per_slot * blk * feat * sd.dtype.itemsize
+    if not bf16:
+        return
+    print(f"  kv pool: {quant} bytes/slot (kv_bits={qbits or 16}, "
+          f"block={blk}) vs {bf16} at bf16 — "
+          f"{bf16 / quant:.1f}x the dense-bf16 slot capacity on the same "
+          f"HBM budget")
 
 
 def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
@@ -168,6 +205,10 @@ def main() -> None:
     ap.add_argument("--packed", action="store_true",
                     help="serve the pack_tree int8-word artifact end to end")
     ap.add_argument("--n-bits", type=int, default=2)
+    ap.add_argument("--kv-bits", type=int, default=16, choices=(16, 8, 4),
+                    help="KV cache wordlength: 8/4 select the per-block "
+                         "SYMOG fixed-point paged pools on decoder archs "
+                         "(DESIGN.md §11); 16 keeps bf16")
     ap.add_argument("--continuous", action="store_true",
                     help="ragged-arrival workload through the continuous-"
                          "batching scheduler vs the static loop")
@@ -207,6 +248,9 @@ def main() -> None:
         ap.error("--speculative and --prefix-cache are mutually exclusive (DESIGN.md §8)")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.kv_bits != 16:
+        cfg = dataclasses.replace(
+            cfg, kv_cache_dtype={8: "int8_fp", 4: "int4_fp"}[args.kv_bits])
     params = init_lm(jax.random.PRNGKey(args.seed), cfg)
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)
@@ -225,6 +269,10 @@ def main() -> None:
                + (cfg.prefix_len if cfg.family == "vlm" else 0))
     dtype = jnp.float32 if args.reduced else jnp.bfloat16
     eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=dtype)
+    if args.kv_bits != 16 and not eng.kv_quant_bits:
+        print(f"WARNING: --kv-bits {args.kv_bits} is structurally inert on "
+              f"{cfg.name} (family '{cfg.family}' has no paged decoder KV "
+              "pool) — the cache keeps its legacy dtype")
 
     if args.continuous:
         spec = None
@@ -238,6 +286,7 @@ def main() -> None:
                                 prefix_cache=args.prefix_cache, speculative=spec,
                                 prefill_chunk=args.prefill_chunk)
         warn_inert_flags(eng, serve_cfg)
+        kv_pool_report(eng, serve_cfg)
         extras = {k: v for k, v in batch.items() if k != "tokens"} or None
         reqs = make_ragged_workload(cfg, n_requests=args.requests,
                                     prompt_len=args.prompt_len, steps=args.steps,

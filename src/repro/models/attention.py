@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels.dispatch import resolve_attention_backend
 from repro.kernels.paged_attention import paged_attention, paged_attention_mla
+from repro.kernels.paged_attention.ref import unpack_int4
 from repro.models.layers import (
     apply_rope,
     dense_apply,
@@ -36,10 +37,20 @@ Q_CHUNK_DEFAULT = 1024  # chunk queries when T exceeds this
 
 # ---------------------------------------------------------------------------
 # fixed-point KV cache (beyond-paper: the paper's §3.1 quantizer applied to
-# the decode-dominant resident bytes).  Power-of-two scale Δ=2^-KV_F — the
-# dequantize is an exponent add, exact, no calibration state.
+# the decode-dominant resident bytes).  Two regimes:
+#   - DENSE/ring caches: one global power-of-two scale Δ=2^-KV_F — the
+#     dequantize is an exponent add, exact, no calibration state.
+#   - PAGED pools (DESIGN.md §11): per-block, per-head SYMOG scales.  Each
+#     physical block carries an int32 exponent in a ``<leaf>_scale`` sibling
+#     leaf, calibrated once from the k/v vector at the block's first slot
+#     and never re-rounded (write-once-read-many), so hit/miss/chunked
+#     traces stay bit-identical.  int4 packs two lanes per int8 word
+#     (split halves: low nibbles = lanes [0, w/2), high = [w/2, w)).
 # ---------------------------------------------------------------------------
 KV_F = 5  # Δ = 2^-5: int8 range ±3.97, resolution 1/32 (post-norm k/v ~O(1))
+
+KV_QMAX = {8: 127, 4: 7}  # symmetric mantissa range per wordlength
+KV_EXP_MIN, KV_EXP_MAX = -20, 20  # sane exponent clamp (2^±20 stays finite)
 
 
 def cache_write(x, like_dtype):
@@ -54,6 +65,36 @@ def cache_read(c, dtype):
     if c.dtype == jnp.int8:
         return (c.astype(dtype) * jnp.asarray(2.0 ** -KV_F, dtype))
     return c.astype(dtype)
+
+
+def block_scale_exp(new, qmax):
+    """Per-entry SYMOG exponent: smallest e with amax/2^e ≤ qmax/2.
+
+    ``new`` (N, ..., width) float; the amax runs over the feature axis, so
+    the result (N, ...) is per KV head where the entry carries a head axis.
+    The extra margin bit (+1) leaves factor-2 headroom for the block's
+    later tokens, which the calibration entry never sees."""
+    amax = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1)
+    e = jnp.ceil(jnp.log2(jnp.maximum(amax, 2.0**-30)) + 1.0 - math.log2(qmax))
+    return jnp.clip(e, KV_EXP_MIN, KV_EXP_MAX).astype(jnp.int32)
+
+
+def quantize_fixed(x, e, qmax):
+    """Round x to int8 mantissas under per-entry exponents ``e`` (broadcast
+    over the trailing feature axis)."""
+    scale = jnp.exp2(-e.astype(jnp.float32))[..., None]
+    q = jnp.round(x.astype(jnp.float32) * scale)
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+
+def pack_int4(x):
+    """Pack 2w int4 mantissas into w int8 words, split halves: word i holds
+    lane i in its low nibble and lane i + w in its high (sign) nibble — the
+    unpack is a lane concatenate (kernels.paged_attention.ref.unpack_int4)."""
+    w = x.shape[-1] // 2
+    x = x.astype(jnp.int32)
+    b = (x[..., :w] & 15) | (x[..., w:] << 4)
+    return jnp.where(b >= 128, b - 256, b).astype(jnp.int8)
 
 
 
@@ -260,6 +301,65 @@ def _pool_dequant_scale(pool) -> float:
     return 2.0 ** -KV_F if pool.dtype == jnp.int8 else 1.0
 
 
+def paged_quant_update(pool, exp_leaf, new, idx):
+    """Scatter entries into a SYMOG-quantized pool (DESIGN.md §11).
+
+    pool (n_blocks, block, ..., w) int8 mantissa words; exp_leaf (n_blocks,
+    ...) int32 per-block exponents; new (N, ..., width) float entries; idx
+    (N,) flat token indices.  A block's exponent is calibrated ONCE, from
+    the entry at its first slot (idx % block == 0) — non-start entries
+    scatter their candidate exponent into the trash row instead, so a later
+    chunk/tail/verify write never re-rounds KV an earlier pass committed.
+    The exponent is a pure function of (params, token, position), which is
+    what keeps hit, miss and chunked traces bit-identical."""
+    nb, block = pool.shape[:2]
+    bits = 4 if pool.shape[-1] * 2 == new.shape[-1] else 8
+    qmax = KV_QMAX[bits]
+    bid = idx // block
+    tgt = jnp.where(idx % block == 0, bid, 0)  # non-start exponents -> trash
+    exp_leaf = exp_leaf.at[tgt].set(block_scale_exp(new, qmax))
+    q = quantize_fixed(new, exp_leaf[bid], qmax)
+    if bits == 4:
+        q = pack_int4(q)
+    flat = pool.reshape((nb * block,) + pool.shape[2:])
+    return flat.at[idx].set(q).reshape(pool.shape), exp_leaf
+
+
+def _paged_write(cache, names, news, idx):
+    """Dict-preserving scatter into paged leaves: leaves with a
+    ``<name>_scale`` sibling quantize at write with the block's scale
+    (``paged_quant_update``); everything else keeps ``paged_update``.
+    ``news`` are flat (N, ...) entries matching ``idx`` (N,)."""
+    out = dict(cache)
+    for name, new in zip(names, news):
+        sname = name + "_scale"
+        if sname in cache:
+            out[name], out[sname] = paged_quant_update(
+                cache[name], cache[sname], new, idx
+            )
+        else:
+            out[name] = paged_update(cache[name], new, idx)
+    return out
+
+
+def _paged_read(cache, name, block_tables, dtype, width):
+    """Composed-path gather + dequantize of one paged leaf.
+
+    Per-block-scale leaves unpack int4 words (pool last dim w = width/2)
+    and scale every row of physical block p by 2^exp[p] (per head where the
+    exponent leaf carries one); KV_F/float leaves keep ``cache_read``."""
+    sname = name + "_scale"
+    if sname not in cache:
+        return cache_read(paged_gather(cache[name], block_tables), dtype)
+    data = paged_gather(cache[name], block_tables)
+    if cache[name].shape[-1] * 2 == width:
+        data = unpack_int4(data)
+    block = cache[name].shape[1]
+    e = jnp.repeat(cache[sname][block_tables], block, axis=1)  # (B, S[, K])
+    scale = jnp.exp2(e.astype(jnp.float32))[..., None]
+    return (data.astype(jnp.float32) * scale).astype(dtype)
+
+
 def _fused_paged_attn(q, cache, block_tables, positions, *, cfg, window,
                       backend, compute_dtype):
     """Fused-kernel replacement for gather → mask → ``_qk_attn`` over a
@@ -268,11 +368,14 @@ def _fused_paged_attn(q, cache, block_tables, positions, *, cfg, window,
     B, T = q.shape[:2]
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     scale = cfg.query_scale if cfg.query_scale is not None else hd**-0.5
+    quant = "k_scale" in cache
     out = paged_attention(
         q.reshape(B, T, K, H // K, hd),
         cache["k"], cache["v"], block_tables, positions[:, 0],
         scale=scale, cap=cfg.softcap, window=window,
         kv_scale=_pool_dequant_scale(cache["k"]),
+        k_scale_exp=cache.get("k_scale"), v_scale_exp=cache.get("v_scale"),
+        kv_bits=(4 if cache["k"].shape[-1] * 2 == hd else 8) if quant else 0,
         interpret=backend == "fused-interpret", out_dtype=compute_dtype,
     )
     return out.reshape(B, T, H, hd)
@@ -283,10 +386,16 @@ def _fused_paged_mla(q_eff, q_rope, cache, block_tables, positions, *, cfg,
     """Fused absorbed-MLA decode over the compressed c_kv/k_rope pools.
     Returns the rank-space (B, T, H, r) output — callers still apply the
     kv_b_v expansion."""
+    quant = "c_kv_scale" in cache
+    kv_bits = 0
+    if quant:
+        kv_bits = 4 if cache["c_kv"].shape[-1] * 2 == q_eff.shape[-1] else 8
     return paged_attention_mla(
         q_eff, q_rope, cache["c_kv"], cache["k_rope"], block_tables,
         positions[:, 0], scale=_mla_scale(cfg),
         kv_scale=_pool_dequant_scale(cache["c_kv"]),
+        ckv_scale_exp=cache.get("c_kv_scale"),
+        kr_scale_exp=cache.get("k_rope_scale"), kv_bits=kv_bits,
         interpret=backend == "fused-interpret", out_dtype=compute_dtype,
     )
 
@@ -339,10 +448,7 @@ def attn_prefill_paged(
     pos_t = positions[0]  # (T,) global positions of the tail bucket
     idx = bt_row[pos_t // block] * block + pos_t % block
     idx = jnp.where(jnp.arange(T, dtype=jnp.int32) < seq_len, idx, 0)  # pads -> trash
-    cache = {
-        "k": paged_update(cache["k"], k_new[0], idx),
-        "v": paged_update(cache["v"], v_new[0], idx),
-    }
+    cache = _paged_write(cache, ("k", "v"), (k_new[0], v_new[0]), idx)
     backend = resolve_attention_backend()
     if backend != "composed":
         out = _fused_paged_attn(
@@ -351,8 +457,8 @@ def attn_prefill_paged(
         )
         y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
         return y, cache
-    k = cache_read(paged_gather(cache["k"], bt_row[None]), compute_dtype)
-    v = cache_read(paged_gather(cache["v"], bt_row[None]), compute_dtype)
+    k = _paged_read(cache, "k", bt_row[None], compute_dtype, hd)
+    v = _paged_read(cache, "v", bt_row[None], compute_dtype, hd)
     S = k.shape[1]
     kv_pos = jnp.arange(S, dtype=jnp.int32)
     mask = make_mask(positions, kv_pos[None, :], causal=True, window=window)
@@ -385,11 +491,8 @@ def _verify_scatter(cache, names, news, idx):
     Rows own disjoint blocks and positions within a row are distinct, so
     only trash-redirected indices may collide (garbage either way)."""
     B, T = idx.shape
-    flat_idx = idx.reshape(B * T)
-    out = dict(cache)
-    for name, new in zip(names, news):
-        out[name] = paged_update(cache[name], new.reshape((B * T,) + new.shape[2:]), flat_idx)
-    return out
+    news = [new.reshape((B * T,) + new.shape[2:]) for new in news]
+    return _paged_write(cache, names, news, idx.reshape(B * T))
 
 
 def attn_verify_paged(
@@ -438,8 +541,8 @@ def attn_verify_paged(
             backend=backend, compute_dtype=compute_dtype,
         )
         return dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype), cache
-    k = cache_read(paged_gather(cache["k"], block_tables), compute_dtype)
-    v = cache_read(paged_gather(cache["v"], block_tables), compute_dtype)
+    k = _paged_read(cache, "k", block_tables, compute_dtype, hd)
+    v = _paged_read(cache, "v", block_tables, compute_dtype, hd)
     S = k.shape[1]
     kv_pos = jnp.arange(S, dtype=jnp.int32)
     mask = make_mask(positions, kv_pos[None, :], causal=True, window=window)
@@ -483,10 +586,7 @@ def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=100
             if not per_row:
                 raise ValueError("paged decode requires per-row (B,) positions")
             idx = paged_token_index(block_tables, positions[:, 0], cache["k"].shape[1])
-            cache = {
-                "k": paged_update(cache["k"], k_new[:, 0], idx),
-                "v": paged_update(cache["v"], v_new[:, 0], idx),
-            }
+            cache = _paged_write(cache, ("k", "v"), (k_new[:, 0], v_new[:, 0]), idx)
             backend = resolve_attention_backend()
             if backend != "composed":
                 out = _fused_paged_attn(
@@ -495,8 +595,8 @@ def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=100
                 )
                 y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
                 return y, cache
-            k = cache_read(paged_gather(cache["k"], block_tables), compute_dtype)
-            v = cache_read(paged_gather(cache["v"], block_tables), compute_dtype)
+            k = _paged_read(cache, "k", block_tables, compute_dtype, hd)
+            v = _paged_read(cache, "v", block_tables, compute_dtype, hd)
         else:
             cache = {
                 "k": cache_update_rows(cache["k"], k_new, pos, per_row=per_row),
@@ -622,10 +722,7 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
         if not per_row:
             raise ValueError("paged decode requires per-row (B,) positions")
         idx = paged_token_index(block_tables, positions[:, 0], cache["c_kv"].shape[1])
-        cache = {
-            "c_kv": paged_update(cache["c_kv"], c_new[:, 0], idx),
-            "k_rope": paged_update(cache["k_rope"], kr_new[:, 0], idx),
-        }
+        cache = _paged_write(cache, ("c_kv", "k_rope"), (c_new[:, 0], kr_new[:, 0]), idx)
         backend = resolve_attention_backend()
         if backend != "composed":
             out_c = _fused_paged_mla(
@@ -637,8 +734,8 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
             )
             y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
             return y, cache
-        c_kv = cache_read(paged_gather(cache["c_kv"], block_tables), compute_dtype)
-        k_rope = cache_read(paged_gather(cache["k_rope"], block_tables), compute_dtype)
+        c_kv = _paged_read(cache, "c_kv", block_tables, compute_dtype, r)
+        k_rope = _paged_read(cache, "k_rope", block_tables, compute_dtype, cfg.qk_rope_dim)
     else:
         cache = {
             "c_kv": cache_update_rows(cache["c_kv"], c_new, pos, per_row=per_row),
@@ -702,8 +799,8 @@ def mla_verify_paged(
         )
         y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
         return y, cache
-    c_kv = cache_read(paged_gather(cache["c_kv"], block_tables), compute_dtype)
-    k_rope = cache_read(paged_gather(cache["k_rope"], block_tables), compute_dtype)
+    c_kv = _paged_read(cache, "c_kv", block_tables, compute_dtype, cfg.kv_lora_rank)
+    k_rope = _paged_read(cache, "k_rope", block_tables, compute_dtype, cfg.qk_rope_dim)
     S = c_kv.shape[1]
     kv_pos = jnp.arange(S, dtype=jnp.int32)
     mask = (kv_pos[None, None, None, :] <= positions[:, None, :, None])  # (B,1,T,S)

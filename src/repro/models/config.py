@@ -60,8 +60,12 @@ class ModelConfig:
     # mesh axes the expert dim shards over.  2-D ('data','model') puts ONE
     # deepseek expert per chip: weights fully local, zero FSDP re-gather.
     ep_axes: tuple = ("model",)
-    # 'bf16' | 'int8_fp': fixed-point KV cache (the paper's §3.1 quantizer
-    # with Δ=2^-5 applied to the decode-dominant resident bytes — §Perf)
+    # 'bf16' | 'int8_fp' | 'int4_fp': fixed-point KV cache (the paper's
+    # §3.1 quantizer applied to the decode-dominant resident bytes —
+    # §Perf).  Dense/ring caches use the global Δ=2^-5 int8 grid
+    # (int4_fp degrades to the compute dtype there); paged decoder pools
+    # instead store int8/packed-int4 mantissas with a per-(block, head)
+    # power-of-two scale calibrated at block fill (DESIGN.md §11).
     kv_cache_dtype: str = "bf16"
     # mla (deepseek)
     use_mla: bool = False

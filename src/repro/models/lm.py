@@ -49,6 +49,10 @@ from repro.models.layers import (
 # state, ring-buffer occupancy maps, encdec cross k/v — is O(1) or fixed-size
 # per slot and stays resident at its per-row layout (DESIGN.md §6).
 PAGED_CACHE_LEAVES = frozenset({"k", "v", "c_kv", "k_rope"})
+# SYMOG-quantized pools carry an int32 per-block exponent sibling per data
+# leaf ("k" -> "k_scale", ...); the scheduler synthesizes them and the
+# attention layer quantizes at write / dequantizes at read (DESIGN.md §11).
+PAGED_SCALE_LEAVES = frozenset({n + "_scale" for n in PAGED_CACHE_LEAVES})
 _PAGED_KINDS = frozenset({"A", "D", "E"})
 
 

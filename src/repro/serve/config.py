@@ -128,8 +128,6 @@ def _tier_reasons(engine, *, allow_mla: bool) -> list:
         r.append("MoE capacity competition couples tokens across the batch")
     if cfg.use_mla and not allow_mla:
         r.append("MLA's compressed cache has no tail-prefill trace (DESIGN.md §7)")
-    if cfg.kv_cache_dtype == "int8_fp":
-        r.append("int8 KV re-rounds, splitting tail numerics from the full-prefill oracle")
     if not r and not fully_paged_tier(engine, allow_mla=allow_mla):
         r.append("non-paged per-row cache state (recurrent/SSD/ring/cross-kv)")
     return r

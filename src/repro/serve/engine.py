@@ -35,9 +35,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.models.attention import (
+    KV_QMAX,
+    block_scale_exp,
+    cache_read,
+    pack_int4,
+    quantize_fixed,
+)
 from repro.models.config import ModelConfig
 from repro.models.lm import (
     PAGED_CACHE_LEAVES,
+    PAGED_SCALE_LEAVES,
     decode_lm,
     prefill_lm,
     prefill_prefix_lm,
@@ -85,6 +93,35 @@ def _scatter_blocks(pool, src, bt_row, axis, p_blocks):
     if axis == 0:
         return pool.at[ids].set(src)
     return pool.at[:, ids].set(src)
+
+
+def _scatter_blocks_quant(pool, exp_leaf, src, bt_row, axis, p_blocks):
+    """Quantizing variant of ``_scatter_blocks`` for per-block SYMOG pools
+    (DESIGN.md §11): dequantize the prefill leaf (float, or KV_F int8),
+    calibrate each written block's exponent from its FIRST token, quantize
+    every token under its block's scale, and scatter the int8 / packed-int4
+    mantissas plus the exponent rows."""
+    block = pool.shape[axis + 1]
+    src = cache_read(jnp.squeeze(src, axis=axis), jnp.float32)
+    need = p_blocks * block
+    t = src.shape[axis]
+    if need > t:
+        pad = [(0, 0)] * src.ndim
+        pad[axis] = (0, need - t)
+        src = jnp.pad(src, pad)
+    elif need < t:
+        src = jax.lax.slice_in_dim(src, 0, need, axis=axis)
+    src = src.reshape(src.shape[:axis] + (p_blocks, block) + src.shape[axis + 1 :])
+    bits = 4 if pool.shape[-1] * 2 == src.shape[-1] else 8
+    qmax = KV_QMAX[bits]
+    e = block_scale_exp(jax.lax.index_in_dim(src, 0, axis + 1, keepdims=False), qmax)
+    q = quantize_fixed(src, jnp.expand_dims(e, axis + 1), qmax)
+    if bits == 4:
+        q = pack_int4(q)
+    ids = bt_row[:p_blocks]
+    if axis == 0:
+        return pool.at[ids].set(q), exp_leaf.at[ids].set(e)
+    return pool.at[:, ids].set(q), exp_leaf.at[:, ids].set(e)
 
 
 def filter_logits(logits, temperature, top_k: int):
@@ -198,7 +235,9 @@ class SchedulerFns:
                 for j in range(len(g.unit)):
                     sub = {}
                     for name, leaf in caches[g.name][f"sub{j}"].items():
-                        if g.paged[j] and name in PAGED_CACHE_LEAVES:
+                        if g.paged[j] and (
+                            name in PAGED_CACHE_LEAVES or name in PAGED_SCALE_LEAVES
+                        ):
                             if axis == 0:
                                 leaf = leaf.at[dst].set(leaf[src])
                             else:
@@ -251,7 +290,13 @@ class SchedulerFns:
                     src = one[g.name][f"sub{j}"]
                     for name, leaf in src.items():
                         if g.paged[j] and name in PAGED_CACHE_LEAVES:
-                            dst[name] = _scatter_blocks(dst[name], leaf, bt_row, axis, p_blocks)
+                            sname = name + "_scale"
+                            if sname in dst:
+                                dst[name], dst[sname] = _scatter_blocks_quant(
+                                    dst[name], dst[sname], leaf, bt_row, axis, p_blocks
+                                )
+                            else:
+                                dst[name] = _scatter_blocks(dst[name], leaf, bt_row, axis, p_blocks)
                         else:
                             dst[name] = jax.lax.dynamic_update_slice_in_dim(
                                 dst[name], leaf.astype(dst[name].dtype), slot, axis
@@ -304,6 +349,17 @@ class ServeEngine:
         self._sched_fns: Dict[Any, SchedulerFns] = {}
         self._cache_shapes = None
         self._fingerprint = None
+
+    @property
+    def kv_quant_bits(self) -> int:
+        """Wordlength of the per-block SYMOG paged KV pool: 8 (int8_fp) or
+        4 (int4_fp) for decoder-family engines, 0 otherwise.  Non-decoder
+        families keep the legacy rule — dense/ring caches at KV_F int8 for
+        int8_fp and compute dtype elsewhere (int4_fp degrades to float
+        there), so nothing outside the paged decoder stack changes."""
+        if self.cfg.family != "decoder":
+            return 0
+        return {"int8_fp": 8, "int4_fp": 4}.get(self.cfg.kv_cache_dtype, 0)
 
     def params_fingerprint(self) -> str:
         """Within-process identity of the served artifact, namespacing the

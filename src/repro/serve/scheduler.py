@@ -173,18 +173,17 @@ def fully_paged_tier(engine, *, allow_mla: bool = False) -> bool:
     speculative controller (§8) and chunked prefill (§10) share.  Holds for
     all-attention decoders only: vlm's per-request patch prefix, encdec
     cross-kv, recurrent/SSD/ring per-row state and MoE capacity coupling
-    all fail it, and int8 KV re-rounds (splitting tail-prefill numerics
-    from the full-prefill oracle).  ``allow_mla``: MLA's compressed
-    c_kv/k_rope leaves do page and the speculative verify implements the
-    absorbed multi-token form, so §8 admits MLA where §7/§10 do not.
-    ``engine.capabilities()`` wraps this test with per-clause reasons."""
+    all fail it.  Quantized KV pools (int8_fp/int4_fp) are tier-ELIGIBLE
+    since DESIGN.md §11: per-block scales are calibrated once at the
+    block's first write and never re-rounded, and every admission attends
+    the quantized pool itself, so hit/miss/chunked traces stay
+    bit-identical — the pool is its own oracle.  ``allow_mla``: MLA's
+    compressed c_kv/k_rope leaves do page and the speculative verify
+    implements the absorbed multi-token form, so §8 admits MLA where
+    §7/§10 do not.  ``engine.capabilities()`` wraps this test with
+    per-clause reasons."""
     cfg = engine.cfg
-    if (
-        cfg.family != "decoder"
-        or cfg.moe
-        or (cfg.use_mla and not allow_mla)
-        or cfg.kv_cache_dtype == "int8_fp"
-    ):
+    if cfg.family != "decoder" or cfg.moe or (cfg.use_mla and not allow_mla):
         return False
     shapes = engine.prefill_cache_shapes()
     for g in scan_groups(cfg):
@@ -322,12 +321,17 @@ class Scheduler:
         self._block_tables = jnp.zeros((S, self.max_blocks), jnp.int32)
 
         caps = engine.capabilities()
+        # per-block quantized pools (DESIGN.md §11): on the fully-paged tier
+        # EVERY admission routes through the §7 tail-prefill trace (start=0
+        # on a miss), so miss logits come from the same quantized-pool
+        # attention that hits and chunks run — the pool is its own oracle
+        # and hit/miss streams stay bit-identical
+        self._quant_admit = bool(engine.kv_quant_bits) and bool(caps["fully_paged"])
         # prefix cache (DESIGN.md §7): only the fully-paged tier can share —
         # every cache leaf of every group must live in the block pool, which
         # holds exactly for all-attention decoders (no MoE capacity coupling,
-        # no MLA absorbed state quirks, no int8 KV re-rounding splitting the
-        # tail-prefill numerics from the full-prefill oracle).  Elsewhere the
-        # flag is accepted and the cache is structurally inert.
+        # no MLA absorbed state quirks).  Elsewhere the flag is accepted and
+        # the cache is structurally inert.
         self.prefix: Optional[PrefixCache] = None
         if config.prefix_cache and not self._offset and caps["prefix_cache"]:
             self.prefix = PrefixCache(self.pool, blk, engine.params_fingerprint())
@@ -392,10 +396,16 @@ class Scheduler:
         Paged leaves (GroupSpec.paged ∩ PAGED_CACHE_LEAVES) become shared
         (n_blocks+1, block, ...) pools — +1 for the trash block — replacing
         the per-slot max_len rows entirely; everything else keeps its
-        per-row layout with the batch axis widened from 1 to n_slots."""
+        per-row layout with the batch axis widened from 1 to n_slots.
+
+        With ``engine.kv_quant_bits`` set (DESIGN.md §11) the paged data
+        pools hold int8 mantissa words (last dim halved at 4 bits — two
+        lanes per word) and each gains an int32 ``<name>_scale`` sibling of
+        one exponent per (physical block[, KV head])."""
         shapes = self.eng.prefill_cache_shapes()
         S, blk = self.n_slots, self.block_size
         n_phys = self.n_blocks + 1
+        qbits = self.eng.kv_quant_bits
         pool = {}
         for g in self._groups:
             axis = 1 if g.stacked else 0
@@ -404,7 +414,18 @@ class Scheduler:
                 sub = {}
                 for name, sd in shapes[g.name][f"sub{j}"].items():
                     if g.paged[j] and name in PAGED_CACHE_LEAVES:
-                        shape = sd.shape[:axis] + (n_phys, blk) + sd.shape[axis + 2 :]
+                        feat = sd.shape[axis + 2 :]
+                        if qbits:
+                            if qbits == 4:
+                                feat = feat[:-1] + (feat[-1] // 2,)
+                            sub[name] = jnp.zeros(
+                                sd.shape[:axis] + (n_phys, blk) + feat, jnp.int8
+                            )
+                            sub[name + "_scale"] = jnp.zeros(
+                                sd.shape[:axis] + (n_phys,) + feat[:-1], jnp.int32
+                            )
+                            continue
+                        shape = sd.shape[:axis] + (n_phys, blk) + feat
                     else:
                         shape = sd.shape[:axis] + (S,) + sd.shape[axis + 1 :]
                     sub[name] = jnp.zeros(shape, sd.dtype)
@@ -668,8 +689,12 @@ class Scheduler:
         row = np.zeros(self.max_blocks, np.int32)
         row[: len(blocks)] = np.asarray(blocks, np.int32) + 1  # physical ids
         self._block_tables = self._block_tables.at[slot].set(jnp.asarray(row))
-        if start:
-            # prefix hit: prefill only the uncached tail, traced start offset
+        if start or (self._quant_admit and not req.extras):
+            # prefix hit: prefill only the uncached tail, traced start offset.
+            # Quantized pools route MISSES (start=0) through the same trace so
+            # the first sampled token always comes from quantized-pool
+            # attention — dense-prefill logits would split hit/miss numerics
+            # (DESIGN.md §11).
             tail = lp - start
             bucket = self._bucket(tail)
             padded = np.zeros(bucket, np.int32)

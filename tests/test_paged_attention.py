@@ -33,20 +33,33 @@ from repro.kernels.paged_attention.ref import (
 )
 from repro.models.attention import (
     KV_F,
+    KV_QMAX,
     AttnConfig,
     MLAConfig,
     attn_decode,
     attn_init,
     attn_prefill_paged,
     attn_verify_paged,
+    block_scale_exp,
     cache_write,
     mla_decode,
     mla_init,
     mla_verify_paged,
+    pack_int4,
     paged_gather,
+    quantize_fixed,
 )
 
 KV_SCALE = 2.0**-KV_F
+
+
+def _quant_pool(pool, bits):
+    """Per-block SYMOG quantization of a float pool, first-position
+    calibrated — exactly the serving write path's arithmetic (§11)."""
+    qmax = KV_QMAX[bits]
+    e = block_scale_exp(pool[:, 0], qmax)  # (n_blocks[, K])
+    q = quantize_fixed(pool, e[:, None], qmax)
+    return (pack_int4(q) if bits == 4 else q), e
 
 
 @pytest.fixture
@@ -131,6 +144,56 @@ def test_kernel_int8_fixed_point_pools(block, rng):
         q, kp, vp, bt, pos0, scale=0.25, kv_scale=KV_SCALE, interpret=True
     )
     want = paged_attention_ref(q, kp, vp, bt, pos0, scale=0.25, kv_scale=KV_SCALE)
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize(
+    "layout,T,window,cap",
+    [
+        ("gqa", 1, None, 0.0),  # plain grouped decode
+        ("gqa", 1, 5, 8.0),  # sliding window + softcap
+        ("mqa", 1, None, 0.0),  # K=1 multi-query
+        ("gqa", 4, 7, 0.0),  # windowed verify rows
+    ],
+)
+def test_kernel_per_block_quantized_pools(bits, layout, T, window, cap, rng):
+    """DESIGN.md §11: per-(block, head) exponent dequantization — and the
+    int4 word unpack — happen INSIDE the online-softmax loop.  The oracle
+    gets the SAME quantized pool + exponents, so parity is exact to kernel
+    tolerance (the quantized pool is its own oracle)."""
+    K, G = {"gqa": (2, 2), "mqa": (1, 4)}[layout]
+    q, kp, vp, bt, pos0 = _case(
+        jax.random.fold_in(rng, bits), B=3, T=T, K=K, G=G, hd=16,
+        block=8, max_blocks=3,
+    )
+    k_q, ke = _quant_pool(kp, bits)
+    v_q, ve = _quant_pool(vp, bits)
+    assert k_q.dtype == jnp.int8
+    assert k_q.shape[-1] == (8 if bits == 4 else 16)
+    kw = dict(scale=16**-0.5, cap=cap, window=window,
+              k_scale_exp=ke, v_scale_exp=ve, kv_bits=bits)
+    got = paged_attention(q, k_q, v_q, bt, pos0, interpret=True, **kw)
+    want = paged_attention_ref(q, k_q, v_q, bt, pos0, **kw)
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_mla_kernel_per_block_quantized_pools(bits, rng):
+    B, T, H, r, rope, block = 2, 1, 4, 32, 16, 8
+    n_blocks = B * 3 + 1
+    ks = jax.random.split(rng, 6)
+    q_eff = jax.random.normal(ks[0], (B, T, H, r), jnp.float32)
+    q_rope = jax.random.normal(ks[1], (B, T, H, rope), jnp.float32)
+    ckv = jax.random.normal(ks[2], (n_blocks, block, r), jnp.float32)
+    kr = jax.random.normal(ks[3], (n_blocks, block, rope), jnp.float32)
+    bt = _tables(ks[4], B, 3, n_blocks)
+    pos0 = jax.random.randint(ks[5], (B,), 0, 3 * block).astype(jnp.int32)
+    ckv_q, ce = _quant_pool(ckv, bits)
+    kr_q, re = _quant_pool(kr, bits)
+    kw = dict(scale=0.1, ckv_scale_exp=ce, kr_scale_exp=re, kv_bits=bits)
+    got = paged_attention_mla(q_eff, q_rope, ckv_q, kr_q, bt, pos0, interpret=True, **kw)
+    want = paged_attention_mla_ref(q_eff, q_rope, ckv_q, kr_q, bt, pos0, **kw)
     _assert_close(got, want)
 
 
@@ -228,6 +291,80 @@ def test_attn_decode_layer_parity(window, softcap, int8, rng, fused_interpret):
         np.testing.assert_array_equal(np.asarray(c_f[name]), np.asarray(c_c[name]))
 
 
+def _quantize_cache(cache, names, bits):
+    """Convert float pool leaves to SYMOG form: int8/packed-int4 mantissas
+    plus the ``<name>_scale`` int32 exponent sibling (§11)."""
+    out = dict(cache)
+    for name in names:
+        out[name], out[name + "_scale"] = _quant_pool(cache[name], bits)
+    return out
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_attn_decode_layer_parity_quantized(bits, rng, fused_interpret):
+    """Quantized pools at the layer level: the ``k_scale`` sibling routes
+    both backends through per-block dequant, and the write path quantizes
+    the new token into the pool — scatter AND scale updates bit-identical
+    across backends."""
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=16)
+    params, cache, bt, key = _layer_case(rng, cfg, B=3, max_blocks=3, block=8)
+    cache = _quantize_cache(cache, ("k", "v"), bits)
+    x = jax.random.normal(key, (3, 1, cfg.d_model), jnp.float32)
+    pos = jnp.array([5, 13, 2], jnp.int32)
+
+    (y_f, c_f), (y_c, c_c) = _run_both(
+        lambda: attn_decode(
+            params, x, cache, pos, cfg=cfg, compute_dtype=jnp.float32,
+            block_tables=bt,
+        )
+    )
+    _assert_close(y_f, y_c)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        assert c_f[name].dtype == (jnp.int32 if name.endswith("_scale") else jnp.int8)
+        np.testing.assert_array_equal(np.asarray(c_f[name]), np.asarray(c_c[name]))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_attn_verify_layer_parity_quantized(bits, rng, fused_interpret):
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=16)
+    params, cache, bt, key = _layer_case(rng, cfg, B=2, max_blocks=3, block=8)
+    cache = _quantize_cache(cache, ("k", "v"), bits)
+    T = 4
+    x = jax.random.normal(key, (2, T, cfg.d_model), jnp.float32)
+    positions = jnp.array([3, 9], jnp.int32)[:, None] + jnp.arange(T, dtype=jnp.int32)
+    valid = jnp.array([[True] * 4, [True, True, True, False]])
+
+    (y_f, c_f), (y_c, c_c) = _run_both(
+        lambda: attn_verify_paged(
+            params, x, cache, bt, positions, cfg=cfg, valid=valid,
+            compute_dtype=jnp.float32,
+        )
+    )
+    _assert_close(y_f, y_c)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(np.asarray(c_f[name]), np.asarray(c_c[name]))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_attn_prefill_layer_parity_quantized(bits, rng, fused_interpret):
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=16)
+    params, cache, bt, key = _layer_case(rng, cfg, B=1, max_blocks=4, block=8)
+    cache = _quantize_cache(cache, ("k", "v"), bits)
+    T, seq_len, start = 8, 5, 6
+    x = jax.random.normal(key, (1, T, cfg.d_model), jnp.float32)
+    positions = (start + jnp.arange(T, dtype=jnp.int32))[None, :]
+
+    (y_f, c_f), (y_c, c_c) = _run_both(
+        lambda: attn_prefill_paged(
+            params, x, cache, bt[0], positions, cfg=cfg,
+            seq_len=jnp.int32(seq_len), compute_dtype=jnp.float32,
+        )
+    )
+    _assert_close(y_f[:, :seq_len], y_c[:, :seq_len])
+    for name in ("k", "v", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(np.asarray(c_f[name]), np.asarray(c_c[name]))
+
+
 @pytest.mark.parametrize("window", [None, 6])
 def test_attn_verify_layer_parity(window, rng, fused_interpret):
     cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=16)
@@ -294,6 +431,25 @@ def test_mla_decode_layer_parity(rng, fused_interpret):
     )
     _assert_close(y_f, y_c)
     np.testing.assert_array_equal(np.asarray(c_f["c_kv"]), np.asarray(c_c["c_kv"]))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_mla_decode_layer_parity_quantized(bits, rng, fused_interpret):
+    cfg = MLAConfig(d_model=32, n_heads=4, q_lora_rank=24, kv_lora_rank=16,
+                    qk_nope_dim=8, qk_rope_dim=8, v_head_dim=8)
+    params, cache, bt, key = _mla_layer_case(rng, cfg, B=2, max_blocks=3, block=8)
+    cache = _quantize_cache(cache, ("c_kv", "k_rope"), bits)
+    x = jax.random.normal(key, (2, 1, cfg.d_model), jnp.float32)
+    pos = jnp.array([7, 15], jnp.int32)
+
+    (y_f, c_f), (y_c, c_c) = _run_both(
+        lambda: mla_decode(
+            params, x, cache, pos, cfg=cfg, compute_dtype=jnp.float32, block_tables=bt
+        )
+    )
+    _assert_close(y_f, y_c)
+    for name in ("c_kv", "k_rope", "c_kv_scale", "k_rope_scale"):
+        np.testing.assert_array_equal(np.asarray(c_f[name]), np.asarray(c_c[name]))
 
 
 def test_mla_verify_layer_parity(rng, fused_interpret):

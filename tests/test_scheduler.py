@@ -318,6 +318,64 @@ def test_paged_serve_matches_dense_static_all_archs(arch, tree, rng, unpack_back
         assert sched.stats["prefix_cow_copies"] >= 1
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "internlm2-1.8b",
+        "olmoe-1b-7b",
+        "whisper-large-v3",
+        "recurrentgemma-2b",
+        "mamba2-2.7b",
+        "deepseek-v3-671b",
+        "paligemma-3b",
+        "granite-34b",
+        "gemma2-27b",
+        "gemma3-4b",
+    ],
+)
+@pytest.mark.parametrize("kv_dtype", ["int8_fp", "int4_fp"])
+def test_paged_serve_kv_dtype_sweep_all_archs(arch, kv_dtype, rng, unpack_backend):
+    """The §11 sweep: every arch serves under int8_fp and int4_fp.  Decoder
+    families get the per-block quantized pool, whose oracle is ITSELF —
+    serve-twice replays must be bit-identical (dense-static equality is
+    deliberately NOT asserted: the pool rounds KV, the dense loop doesn't).
+    Fully-paged-tier archs additionally share prefixes hit≡miss.  Non-
+    decoder families keep the legacy dense cache behaviour — the dtype flag
+    degrades structurally and the dense-static oracle must still hold
+    exactly (the bf16 control for every family is the sweep above)."""
+    cfg = dataclasses.replace(configs.get_reduced(arch), kv_cache_dtype=kv_dtype)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    max_len = MAX_LEN + (cfg.prefix_len if cfg.family == "vlm" else 0)
+    eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=jnp.float32)
+    assert bool(eng.kv_quant_bits) == (cfg.family == "decoder")
+
+    extras = None
+    if cfg.family == "encdec":
+        frames = jax.random.normal(rng, (1, cfg.encoder_len, cfg.d_model)) * 0.1
+        extras = {"frames": np.asarray(frames)}
+    if cfg.family == "vlm":
+        patches = jax.random.normal(rng, (1, cfg.prefix_len, cfg.d_model)) * 0.1
+        extras = {"patches": np.asarray(patches)}
+    reqs = _ragged_requests(cfg, rng, lens=(3, 6), budgets=(5, 3), extras=extras)
+    reqs.append(dataclasses.replace(reqs[1], max_new_tokens=4))  # exact repeat
+    scfg = ServeConfig(n_slots=2, block_size=4, prefix_cache=True)
+    comps, sched = eng.serve(reqs, scfg, return_scheduler=True)
+    if eng.kv_quant_bits:
+        replay = eng.serve(reqs, scfg)
+        for a, b in zip(comps, replay):
+            np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+        if sched.prefix is not None:  # tier archs: hit re-reads the miss's blocks
+            assert sched.stats["prefix_hits"] >= 1
+            n = min(len(comps[1].tokens), len(comps[2].tokens))
+            np.testing.assert_array_equal(
+                np.asarray(comps[2].tokens)[:n], np.asarray(comps[1].tokens)[:n]
+            )
+    else:
+        for req, comp in zip(reqs, comps):
+            np.testing.assert_array_equal(np.asarray(comp.tokens), _static_reference(eng, req))
+
+
 # ---------------------------------------------------------------------------
 # sampling
 # ---------------------------------------------------------------------------

@@ -147,6 +147,27 @@ def test_capabilities_on_fully_paged_tier(unpack_backend):
         assert cap.reason == ""
 
 
+@pytest.mark.parametrize("dtype", ["bf16", "int8_fp", "int4_fp"])
+def test_quantized_kv_decoders_stay_on_tier(dtype):
+    """PR 8 truth table: per-block SYMOG pools are write-once-read-many
+    (DESIGN.md §11), so quantized KV no longer re-rounds on replay — int8
+    and int4 decoder configs keep EVERY capability, with no stale 'int8 KV
+    re-rounds' reason anywhere in the report."""
+    cfg = dataclasses.replace(
+        configs.get_reduced("internlm2-1.8b"), kv_cache_dtype=dtype
+    )
+    eng = ServeEngine(
+        cfg, init_lm(jax.random.PRNGKey(0), cfg), max_len=MAX_LEN,
+        compute_dtype=jnp.float32,
+    )
+    assert eng.kv_quant_bits == {"bf16": 0, "int8_fp": 8, "int4_fp": 4}[dtype]
+    caps = eng.capabilities()
+    for name, cap in caps.items():
+        assert bool(cap), (name, cap.reason)
+        assert "re-rounds" not in cap.reason
+    assert bool(caps["fully_paged"]) == fully_paged_tier(eng)
+
+
 @pytest.mark.parametrize(
     "arch, fragment",
     [
