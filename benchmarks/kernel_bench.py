@@ -154,6 +154,7 @@ def run() -> None:
     run_fused_kernel_bench()
     run_serve_bench()
     run_capacity_bench()
+    run_sharded_capacity_bench()
     run_kv_quant_bench()
     run_prefix_cache_bench()
     run_speculative_bench()
@@ -478,6 +479,49 @@ def run_capacity_bench() -> None:
         "capacity (target >= 12x: ~4x bytes/token x on-demand paging)",
         ref_us=_ref_us(),
         capacity_ratio=round(ratio_q, 3),
+    )
+
+
+def run_sharded_capacity_bench() -> None:
+    """Per-device resident pool bytes under the §12 mesh placement.
+
+    Deterministic byte model, not a timing: ``pool_bytes_per_device``
+    (the same accounting ``serve/sharding.py`` uses to place the pool)
+    prices the int4 paged pool on a hypothetical 8-way model mesh vs
+    single-device — data leaves shard their KV-head axis 8 ways, scale
+    exponents stay replicated.  Gated metric ``pool_shard_ratio`` =
+    single-device resident bytes / per-device resident bytes at 8 shards
+    (floor 6.0: below 8 because the replicated scales don't shrink; a
+    placement bug that silently replicates the pool would read 1.0).
+    """
+    import dataclasses as _dc
+
+    from repro import configs
+    from repro.models.lm import init_lm
+    from repro.serve import ServeEngine
+    from repro.serve.sharding import pool_bytes_per_device
+
+    # 8 KV heads so the head axis divides an 8-way model mesh exactly
+    cfg = _dc.replace(
+        configs.get_reduced("internlm2-1.8b"),
+        n_heads=8,
+        n_kv_heads=8,
+        head_dim=32,
+        d_model=256,
+        kv_cache_dtype="int4_fp",
+    )
+    eng = ServeEngine(cfg, init_lm(jax.random.PRNGKey(0), cfg), max_len=64)
+    block, n_blocks = 16, 64
+    total, single = pool_bytes_per_device(eng, block, n_blocks)
+    _, per_dev = pool_bytes_per_device(eng, block, n_blocks, model_shards=8)
+    ratio = single / per_dev
+    emit(
+        "serve_sharded_capacity",
+        0.0,
+        f"int4 pool {total} B total: {single} B/device unsharded vs "
+        f"{per_dev} B/device on an 8-way model mesh -> {ratio:.2f}x "
+        "headroom per device (floor 6.0; scales replicate, data shards)",
+        pool_shard_ratio=round(ratio, 3),
     )
 
 

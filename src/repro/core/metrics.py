@@ -45,7 +45,8 @@ def mode_stats(w: jax.Array, delta, n_bits: int) -> Dict[str, jax.Array]:
         "count": counts,
         "mean": mean,
         "std": jnp.sqrt(var),
-        "centers": (jnp.arange(n_modes, dtype=jnp.float32) - q) * jnp.asarray(delta, jnp.float32).reshape(-1)[0],
+        "centers": (jnp.arange(n_modes, dtype=jnp.float32) - q)
+        * jnp.asarray(delta, jnp.float32).reshape(-1)[0],
     }
 
 

@@ -20,7 +20,9 @@ import jax.numpy as jnp
 Schedule = Callable[..., "jnp.ndarray"]
 
 
-def exponential_lambda(lambda0: float = 10.0, alpha: float = 9.0, total_steps: int = 1000) -> Schedule:
+def exponential_lambda(
+    lambda0: float = 10.0, alpha: float = 9.0, total_steps: int = 1000
+) -> Schedule:
     """λ(s) = λ_0 · exp(α · s / total_steps);  α = α_E·E with the paper's
     recommendation α_E = 9/E, i.e. α = 9 over the whole run."""
 

@@ -27,7 +27,9 @@ def sse_for_f(w: jax.Array, f, n_bits: int) -> jax.Array:
     return jnp.sum(jnp.square(err.astype(jnp.float32)))
 
 
-def optimal_f(w: jax.Array, n_bits: int, f_min: int = F_MIN, f_max: int = F_MAX) -> Tuple[jax.Array, jax.Array]:
+def optimal_f(
+    w: jax.Array, n_bits: int, f_min: int = F_MIN, f_max: int = F_MAX
+) -> Tuple[jax.Array, jax.Array]:
     """Return (f*, Δ*=2^{-f*}) minimizing the quantization SSE of ``w``.
 
     Ties break toward the smaller f (larger Δ), matching the paper's

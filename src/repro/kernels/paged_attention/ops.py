@@ -11,6 +11,15 @@ site satisfies (decode T=1, speculative verify, bucketed tail prefill).
 per-layer window scalar the gemma2/3 scan bodies carry.  ``kv_scale`` is
 the pool dequantization scale: 1.0 for float pools, 2^-KV_F for the int8
 fixed-point cache (static on the pool dtype — the caller passes it).
+
+Under an ambient mesh with a ``model`` axis (DESIGN.md §12) the public
+wrappers shard-map over KV heads when they divide: each model shard runs
+the SAME kernel on its local (B, T, K/m, G, hd) query slice against its
+local pool slice — attention is embarrassingly parallel across KV-head
+groups, so no collective appears; the o-projection's contraction psum is
+GSPMD's job outside this op.  MLA shards the H query heads instead and
+reads the (replicated) rank-space pools whole.  Heads that don't divide
+fall back to the unsharded call (GSPMD replicates).
 """
 from __future__ import annotations
 
@@ -18,11 +27,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.paged_attention.kernel import (
     paged_attention_padded,
     paged_attention_mla_padded,
 )
+from repro.nn.sharding import current_mesh, mesh_axis_size
 
 _NO_WINDOW = 2**30  # models.config.GLOBAL_WINDOW (no models import: layering)
 
@@ -67,11 +79,27 @@ def paged_attention(q, k_pool, v_pool, block_tables, pos0, *, scale: float,
     in-lane (``kv_scale`` is ignored on this path)."""
     w = _NO_WINDOW if window is None else window
     w = jnp.asarray(w, jnp.int32).reshape(1)
-    return _paged_attention(
-        q, k_pool, v_pool, block_tables, pos0, w, k_scale_exp, v_scale_exp,
+    call = functools.partial(
+        _paged_attention,
         scale=scale, cap=cap, kv_scale=kv_scale, kv_bits=kv_bits,
         interpret=interpret, out_dtype=out_dtype,
     )
+    mesh = current_mesh()
+    m = mesh_axis_size(mesh, "model")
+    if m > 1 and q.shape[2] % m == 0:
+        # §12 head slicing: pools and queries split on the KV-head axis,
+        # tables/positions/window replicated — each shard's kernel sees a
+        # (B, T, K/m, G, hd) problem against its local pool slice
+        heads, exp = P(None, None, "model"), P(None, "model")
+        in_specs = (
+            heads, heads, heads, P(), P(), P(),
+            exp if k_scale_exp is not None else P(),
+            exp if v_scale_exp is not None else P(),
+        )
+        return shard_map(
+            call, mesh=mesh, in_specs=in_specs, out_specs=heads, check_rep=False
+        )(q, k_pool, v_pool, block_tables, pos0, w, k_scale_exp, v_scale_exp)
+    return call(q, k_pool, v_pool, block_tables, pos0, w, k_scale_exp, v_scale_exp)
 
 
 @functools.partial(
@@ -109,9 +137,22 @@ def paged_attention_mla(q_eff, q_rope, ckv_pool, krope_pool, block_tables,
     result (B, T, H, r) still needs the caller's kv_b_v expansion.
     Per-block SYMOG pools pass ``ckv_scale_exp``/``kr_scale_exp``
     (n_blocks,) int32 exponents and ``kv_bits`` in {8, 4}."""
-    return _paged_attention_mla(
-        q_eff, q_rope, ckv_pool, krope_pool, block_tables, pos0,
-        ckv_scale_exp, kr_scale_exp,
+    call = functools.partial(
+        _paged_attention_mla,
         scale=scale, kv_scale=kv_scale, kv_bits=kv_bits, interpret=interpret,
         out_dtype=out_dtype,
     )
+    mesh = current_mesh()
+    m = mesh_axis_size(mesh, "model")
+    if m > 1 and q_eff.shape[2] % m == 0:
+        # MLA has no KV-head axis — shard the H QUERY heads and read the
+        # (replicated) rank-space pools whole on every shard (§12: their
+        # bytes are already compressed by the low-rank factor)
+        heads = P(None, None, "model")
+        in_specs = (heads, heads, P(), P(), P(), P(), P(), P())
+        return shard_map(
+            call, mesh=mesh, in_specs=in_specs, out_specs=heads, check_rep=False
+        )(q_eff, q_rope, ckv_pool, krope_pool, block_tables, pos0,
+          ckv_scale_exp, kr_scale_exp)
+    return call(q_eff, q_rope, ckv_pool, krope_pool, block_tables, pos0,
+                ckv_scale_exp, kr_scale_exp)

@@ -42,7 +42,9 @@ from repro.models.config import ModelConfig
 from repro.models.lm import decode_lm, init_lm, prefill_lm
 from repro.train import init_train_state, make_train_step
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun")
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun"
+)
 
 # TPU v5e constants (roofline denominators)
 V5E = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
@@ -79,7 +81,7 @@ def _lower_cell(arch: str, shape: str, multi_pod: bool, overrides=None,
     cell = SHAPES[shape]
     specs = input_specs(cfg, shape)
 
-    with jax.set_mesh(mesh):
+    with mesh:
         if cell.kind == "train":
             # deepseek: bf16 momentum (optimizer-state compression) — fp32
             # momentum for 654B expert params alone is 10.2 GiB/chip
@@ -234,7 +236,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, quantized: bool = False) ->
 
     # logical (global, trip-count-exact) cost from the jaxpr
     t0 = time.time()
-    with jax.set_mesh(mesh):  # model sharding constraints need the ambient mesh
+    with mesh:  # model sharding constraints need the ambient mesh
         logical = jaxpr_cost(fn, *fargs)
     rec["trace_s"] = round(time.time() - t0, 1)
     rec["logical"] = logical

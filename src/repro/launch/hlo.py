@@ -42,7 +42,7 @@ _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
 _REF_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
-_TRIP_RE = re.compile(r'known_trip_count..:..n.:.(\d+)')
+_TRIP_RE = re.compile(r"known_trip_count..:..n.:.(\d+)")
 _WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)"
                        r"|while\(.*?\).*?body=%?([\w.\-]+).*?condition=%?([\w.\-]+)")
 _S32_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")

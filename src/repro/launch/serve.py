@@ -110,6 +110,13 @@ def kv_pool_report(eng: ServeEngine, config: ServeConfig) -> None:
           f"block={blk}) vs {bf16} at bf16 — "
           f"{bf16 / quant:.1f}x the dense-bf16 slot capacity on the same "
           f"HBM budget")
+    if eng.model_shards() > 1:
+        from repro.serve.sharding import pool_bytes_per_device
+
+        total, per_dev = pool_bytes_per_device(eng, blk, n_per_slot)
+        print(f"  sharded pool: {per_dev} of {total} bytes/slot resident per "
+              f"device ({total / per_dev:.1f}x capacity at {eng.model_shards()} "
+              "model shards; scale leaves and block tables replicated)")
 
 
 def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
@@ -241,13 +248,43 @@ def main() -> None:
                     help="--speculative: bit-width of the packed draft artifact")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="--speculative: max draft tokens per verify round")
+    ap.add_argument("--mesh", default="",
+                    help="serve sharded on a DxM (data, model) device mesh "
+                         "(DESIGN.md §12), e.g. --mesh 2x4: packed weight "
+                         "words and the paged KV pool shard over 'model' "
+                         "per the nn/sharding rules; 'dxm' auto-sizes to "
+                         "1 x device_count.  Simulate on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    ap.add_argument("--moe-impl", default="", choices=("dispatch", "ep"),
+                    help="override cfg.moe_impl: 'ep' routes MoE layers "
+                         "through the shard_map all_to_all expert-parallel "
+                         "dispatch (needs --mesh with a model axis > 1; "
+                         "reduced MoE configs default to 'dispatch'). "
+                         "No-op on dense archs")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.speculative and args.prefix_cache:
         ap.error("--speculative and --prefix-cache are mutually exclusive (DESIGN.md §8)")
 
+    mesh = None
+    if args.mesh:
+        if args.mesh == "dxm":
+            d, m = 1, jax.device_count()
+        else:
+            try:
+                d, m = (int(s) for s in args.mesh.lower().split("x"))
+            except ValueError:
+                ap.error(f"--mesh must be DxM (e.g. 2x4) or 'dxm', got {args.mesh!r}")
+        if d * m > jax.device_count():
+            ap.error(f"--mesh {d}x{m} needs {d * m} devices, have {jax.device_count()}")
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        print(f"mesh: {d} data x {m} model over {d * m} "
+              f"{jax.devices()[0].platform} devices")
+
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.moe_impl:
+        cfg = dataclasses.replace(cfg, moe_impl=args.moe_impl)
     if args.kv_bits != 16:
         cfg = dataclasses.replace(
             cfg, kv_cache_dtype={8: "int8_fp", 4: "int4_fp"}[args.kv_bits])
@@ -268,7 +305,13 @@ def main() -> None:
     max_len = (args.prompt_len + args.steps + args.system_prompt_len
                + (cfg.prefix_len if cfg.family == "vlm" else 0))
     dtype = jnp.float32 if args.reduced else jnp.bfloat16
-    eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=dtype)
+    eng = ServeEngine(cfg, params, max_len=max_len, compute_dtype=dtype, mesh=mesh)
+    if mesh is not None:
+        caps = eng.capabilities()
+        ep = caps["ep_moe"]
+        print(f"  sharded: profile '{eng.sharding_profile or cfg.sharding_profile}', "
+              f"{eng.model_shards()} model shards; ep_moe: "
+              f"{'on' if ep else 'off (' + ep.reason + ')'}")
     if args.kv_bits != 16 and not eng.kv_quant_bits:
         print(f"WARNING: --kv-bits {args.kv_bits} is structurally inert on "
               f"{cfg.name} (family '{cfg.family}' has no paged decoder KV "
@@ -298,11 +341,12 @@ def main() -> None:
             sst = core.symog_init(params, scfg)
             if args.packed:
                 qeng = ServeEngine.from_symog(cfg, params, sst, scfg,
-                                              max_len=max_len, compute_dtype=dtype)
+                                              max_len=max_len, compute_dtype=dtype,
+                                              mesh=mesh)
                 label = f"packed {args.n_bits}-bit"
             else:
                 qeng = ServeEngine(cfg, core.quantize_tree(params, sst, scfg),
-                                   max_len=max_len, compute_dtype=dtype)
+                                   max_len=max_len, compute_dtype=dtype, mesh=mesh)
                 label = f"quantized {args.n_bits}-bit"
             run_continuous(qeng, reqs, serve_cfg, label=label)
         return
@@ -317,7 +361,7 @@ def main() -> None:
         scfg = core.SymogConfig(n_bits=args.n_bits, total_steps=1)
         sst = core.symog_init(params, scfg)
         qparams = core.quantize_tree(params, sst, scfg)
-        qeng = ServeEngine(cfg, qparams, max_len=max_len, compute_dtype=dtype)
+        qeng = ServeEngine(cfg, qparams, max_len=max_len, compute_dtype=dtype, mesh=mesh)
         out_q = qeng.generate(batch, args.steps)
         agree = float(np.mean(np.asarray(out_q) == np.asarray(out_float)))
         qm = core.quant_error_metrics(params, sst, scfg)
@@ -327,7 +371,7 @@ def main() -> None:
 
     if args.packed:
         peng = ServeEngine.from_symog(cfg, params, sst, scfg,
-                                      max_len=max_len, compute_dtype=dtype)
+                                      max_len=max_len, compute_dtype=dtype, mesh=mesh)
         t0 = time.time()
         out_p = peng.generate(batch, args.steps)
         dt = time.time() - t0

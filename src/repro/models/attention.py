@@ -56,7 +56,8 @@ KV_EXP_MIN, KV_EXP_MAX = -20, 20  # sane exponent clamp (2^±20 stays finite)
 def cache_write(x, like_dtype):
     """Quantize a new cache entry when the cache is int8 fixed-point."""
     if like_dtype == jnp.int8:
-        return jnp.clip(jnp.round(x.astype(jnp.float32) * (2.0 ** KV_F)), -127, 127).astype(jnp.int8)
+        scaled = jnp.round(x.astype(jnp.float32) * (2.0**KV_F))
+        return jnp.clip(scaled, -127, 127).astype(jnp.int8)
     return x.astype(like_dtype)
 
 
@@ -116,11 +117,38 @@ def attn_init(key, cfg: AttnConfig, dtype=jnp.float32):
     ks = jax.random.split(key, 4)
     std = 1.0 / math.sqrt(cfg.d_model)
     p = {
-        "q_proj": dense_init(ks[0], (cfg.d_model,), (cfg.n_heads, cfg.head_dim), bias=cfg.bias, stddev=std, dtype=dtype),
-        "k_proj": dense_init(ks[1], (cfg.d_model,), (cfg.n_kv_heads, cfg.head_dim), bias=cfg.bias, stddev=std, dtype=dtype),
-        "v_proj": dense_init(ks[2], (cfg.d_model,), (cfg.n_kv_heads, cfg.head_dim), bias=cfg.bias, stddev=std, dtype=dtype),
-        "o_proj": dense_init(ks[3], (cfg.n_heads, cfg.head_dim), (cfg.d_model,), bias=cfg.bias,
-                             stddev=1.0 / math.sqrt(cfg.n_heads * cfg.head_dim), dtype=dtype),
+        "q_proj": dense_init(
+            ks[0],
+            (cfg.d_model,),
+            (cfg.n_heads, cfg.head_dim),
+            bias=cfg.bias,
+            stddev=std,
+            dtype=dtype,
+        ),
+        "k_proj": dense_init(
+            ks[1],
+            (cfg.d_model,),
+            (cfg.n_kv_heads, cfg.head_dim),
+            bias=cfg.bias,
+            stddev=std,
+            dtype=dtype,
+        ),
+        "v_proj": dense_init(
+            ks[2],
+            (cfg.d_model,),
+            (cfg.n_kv_heads, cfg.head_dim),
+            bias=cfg.bias,
+            stddev=std,
+            dtype=dtype,
+        ),
+        "o_proj": dense_init(
+            ks[3],
+            (cfg.n_heads, cfg.head_dim),
+            (cfg.d_model,),
+            bias=cfg.bias,
+            stddev=1.0 / math.sqrt(cfg.n_heads * cfg.head_dim),
+            dtype=dtype,
+        ),
     }
     if cfg.qk_norm:
         p["q_norm"] = rmsnorm_init(cfg.head_dim, dtype)
@@ -615,7 +643,9 @@ def attn_decode(p, x, cache, pos, *, cfg: AttnConfig, window=None, rope_base=100
         mask = jnp.ones((B, 1, S), bool)
     q = q.reshape(B, 1, K, G, hd)
     scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
-    out = _qk_attn(q, k.astype(compute_dtype), v.astype(compute_dtype), mask, scale=scale, cap=cfg.softcap)
+    out = _qk_attn(
+        q, k.astype(compute_dtype), v.astype(compute_dtype), mask, scale=scale, cap=cfg.softcap
+    )
     out = out.reshape(B, 1, H, hd)
     y = dense_apply(p["o_proj"], out, n_in=2, compute_dtype=compute_dtype)
     return y, cache
@@ -643,13 +673,25 @@ def mla_init(key, cfg: MLAConfig, dtype=jnp.float32):
     return {
         "q_a_proj": dense_init(ks[0], (D,), (r.q_lora_rank,), stddev=sd(D), dtype=dtype),
         "q_a_norm": rmsnorm_init(r.q_lora_rank, dtype),
-        "q_b_proj": dense_init(ks[1], (r.q_lora_rank,), (H, r.qk_nope_dim + r.qk_rope_dim), stddev=sd(r.q_lora_rank), dtype=dtype),
+        "q_b_proj": dense_init(
+            ks[1],
+            (r.q_lora_rank,),
+            (H, r.qk_nope_dim + r.qk_rope_dim),
+            stddev=sd(r.q_lora_rank),
+            dtype=dtype,
+        ),
         "kv_a_proj": dense_init(ks[2], (D,), (r.kv_lora_rank,), stddev=sd(D), dtype=dtype),
         "kv_a_norm": rmsnorm_init(r.kv_lora_rank, dtype),
         "k_rope_proj": dense_init(ks[3], (D,), (r.qk_rope_dim,), stddev=sd(D), dtype=dtype),
-        "kv_b_k_proj": dense_init(ks[4], (r.kv_lora_rank,), (H, r.qk_nope_dim), stddev=sd(r.kv_lora_rank), dtype=dtype),
-        "kv_b_v_proj": dense_init(ks[5], (r.kv_lora_rank,), (H, r.v_head_dim), stddev=sd(r.kv_lora_rank), dtype=dtype),
-        "o_proj": dense_init(ks[6], (H, r.v_head_dim), (D,), stddev=sd(H * r.v_head_dim), dtype=dtype),
+        "kv_b_k_proj": dense_init(
+            ks[4], (r.kv_lora_rank,), (H, r.qk_nope_dim), stddev=sd(r.kv_lora_rank), dtype=dtype
+        ),
+        "kv_b_v_proj": dense_init(
+            ks[5], (r.kv_lora_rank,), (H, r.v_head_dim), stddev=sd(r.kv_lora_rank), dtype=dtype
+        ),
+        "o_proj": dense_init(
+            ks[6], (H, r.v_head_dim), (D,), stddev=sd(H * r.v_head_dim), dtype=dtype
+        ),
     }
 
 
@@ -668,8 +710,12 @@ def mla_apply(p, x, *, cfg: MLAConfig, positions, causal=True, window=None,
     q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
     q_rope = apply_rope(q_rope, positions, rope_base)
 
-    c_kv = rmsnorm_apply(p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype))  # (B,T,r)
-    k_rope = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]  # (B,T,1,rope)
+    c_kv = rmsnorm_apply(
+        p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype)
+    )  # (B,T,r)
+    k_rope = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[
+        ..., None, :
+    ]  # (B,T,1,rope)
     k_rope = apply_rope(k_rope, positions, rope_base)[..., 0, :]
     k_nope = dense_apply(p["kv_b_k_proj"], c_kv, compute_dtype=compute_dtype)  # (B,T,H,nope)
     v = dense_apply(p["kv_b_v_proj"], c_kv, compute_dtype=compute_dtype)  # (B,T,H,v)
@@ -713,9 +759,13 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
     q_rope = apply_rope(q_rope, positions, rope_base)
     # absorb kv_b_k:  (B,1,H,n) x (r,H,n) -> (B,1,H,r).  as_dense: Packed
     # serving weights dequantize on the fly for the absorbed contraction.
-    q_eff = jnp.einsum("BTHn,rHn->BTHr", q_nope, as_dense(p["kv_b_k_proj"]["kernel"], compute_dtype))
+    q_eff = jnp.einsum(
+        "BTHn,rHn->BTHr", q_nope, as_dense(p["kv_b_k_proj"]["kernel"], compute_dtype)
+    )
 
-    c_new = rmsnorm_apply(p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype))
+    c_new = rmsnorm_apply(
+        p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype)
+    )
     kr_new = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]
     kr_new = apply_rope(kr_new, positions, rope_base)[..., 0, :]
     if block_tables is not None:
@@ -741,7 +791,8 @@ def mla_decode(p, x, cache, pos, *, cfg: MLAConfig, rope_base=10000.0,
             "c_kv": cache_update_rows(cache["c_kv"], c_new, pos, per_row=per_row),
             "k_rope": cache_update_rows(cache["k_rope"], kr_new, pos, per_row=per_row),
         }
-        c_kv, k_rope = cache_read(cache["c_kv"], compute_dtype), cache_read(cache["k_rope"], compute_dtype)
+        c_kv = cache_read(cache["c_kv"], compute_dtype)
+        k_rope = cache_read(cache["k_rope"], compute_dtype)
     S = c_kv.shape[1]
     kv_pos = jnp.arange(S, dtype=jnp.int32)
     mask = (kv_pos[None, :] <= positions)[:, None, None, :]  # (B,1,1,S)
@@ -781,9 +832,13 @@ def mla_verify_paged(
     q = dense_apply(p["q_b_proj"], cq, compute_dtype=compute_dtype)
     q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
     q_rope = apply_rope(q_rope, positions, rope_base)
-    q_eff = jnp.einsum("BTHn,rHn->BTHr", q_nope, as_dense(p["kv_b_k_proj"]["kernel"], compute_dtype))
+    q_eff = jnp.einsum(
+        "BTHn,rHn->BTHr", q_nope, as_dense(p["kv_b_k_proj"]["kernel"], compute_dtype)
+    )
 
-    c_new = rmsnorm_apply(p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype))
+    c_new = rmsnorm_apply(
+        p["kv_a_norm"], dense_apply(p["kv_a_proj"], x, compute_dtype=compute_dtype)
+    )
     kr_new = dense_apply(p["k_rope_proj"], x, compute_dtype=compute_dtype)[..., None, :]
     kr_new = apply_rope(kr_new, positions, rope_base)[..., 0, :]
     idx = verify_token_index(block_tables, positions, cache["c_kv"].shape[1], valid)

@@ -46,6 +46,7 @@ from repro.models.layers import (
 )
 from repro.models.mlp import MLPConfig, mlp_apply, mlp_init
 from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.nn.sharding import current_mesh, mesh_axis_size
 from repro.models.rglru import (
     RGLRUConfig,
     rglru_block_apply,
@@ -89,7 +90,23 @@ def _mla_cfg(cfg: ModelConfig) -> MLAConfig:
 
 
 def _mlp_cfg(cfg: ModelConfig) -> MLPConfig:
-    return MLPConfig(d_model=cfg.d_model, d_ff=cfg.d_ff, gated=cfg.mlp_gated, act=cfg.act, bias=cfg.attn_bias)
+    return MLPConfig(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, gated=cfg.mlp_gated, act=cfg.act, bias=cfg.attn_bias
+    )
+
+
+def _ep_active(cfg: ModelConfig) -> bool:
+    """True when the ambient mesh (``with mesh:`` — readable mid-trace)
+    carries the config's EP axes at total size > 1 and the expert count
+    divides over them: the condition under which ``moe_impl='ep'`` actually
+    dispatches the shard_map expert-parallel path (DESIGN.md §12).
+    Single-device tracing falls back to the scatter/gather dispatch — the
+    same routing decisions, so the fallback is token-compatible."""
+    mesh = current_mesh()
+    if mesh is None:
+        return False
+    ep = mesh_axis_size(mesh, *cfg.ep_axes)
+    return ep > 1 and cfg.n_experts % ep == 0
 
 
 def _moe_cfg(cfg: ModelConfig) -> MoEConfig:
@@ -107,7 +124,9 @@ def _moe_cfg(cfg: ModelConfig) -> MoEConfig:
 
 
 def _rglru_cfg(cfg: ModelConfig) -> RGLRUConfig:
-    return RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_rnn, n_heads=cfg.rnn_heads, conv_width=cfg.conv_width)
+    return RGLRUConfig(
+        d_model=cfg.d_model, d_rnn=cfg.d_rnn, n_heads=cfg.rnn_heads, conv_width=cfg.conv_width
+    )
 
 
 def _ssd_cfg(cfg: ModelConfig) -> SSDConfig:
@@ -123,7 +142,9 @@ def _ssd_cfg(cfg: ModelConfig) -> SSDConfig:
 
 
 def _norm_init(cfg: ModelConfig, dtype):
-    return rmsnorm_init(cfg.d_model, dtype) if cfg.norm == "rmsnorm" else layernorm_init(cfg.d_model, dtype)
+    if cfg.norm == "rmsnorm":
+        return rmsnorm_init(cfg.d_model, dtype)
+    return layernorm_init(cfg.d_model, dtype)
 
 
 def _norm_apply(cfg: ModelConfig, p, x):
@@ -240,13 +261,17 @@ def block_apply(
                           window=window, prefix_len=prefix_len,
                           rope_base=rope_base, compute_dtype=compute_dtype)
             if cache_len:
-                cache = _mla_prefill_cache(p["attn"], h, cfg, cache_len, positions, rope_base, compute_dtype)
+                cache = _mla_prefill_cache(
+                    p["attn"], h, cfg, cache_len, positions, rope_base, compute_dtype
+                )
         else:
             y = attn_apply(p["attn"], h, cfg=_attn_cfg(cfg), positions=positions, causal=causal,
                            window=window, prefix_len=prefix_len,
                            rope_base=rope_base, compute_dtype=compute_dtype)
             if cache_len:
-                cache = _attn_prefill_cache(p["attn"], h, cfg, cache_len, positions, rope_base, compute_dtype)
+                cache = _attn_prefill_cache(
+                    p["attn"], h, cfg, cache_len, positions, rope_base, compute_dtype
+                )
         # tag BEFORE the post-norm: the saved tensor must be the all-reduced
         # sublayer output itself, else the rematted backward re-runs the
         # collective to rebuild the norm input (measured in §Perf it.2).
@@ -260,23 +285,28 @@ def block_apply(
             h = _norm_apply(cfg, p["cross_norm"], x)
             k_c = dense_apply(p["cross_attn"]["k_proj"], enc_out, compute_dtype=compute_dtype)
             v_c = dense_apply(p["cross_attn"]["v_proj"], enc_out, compute_dtype=compute_dtype)
-            y = attn_apply(p["cross_attn"], h, cfg=_attn_cfg(cfg), positions=positions, causal=False,
-                           rope_base=rope_base, compute_dtype=compute_dtype, kv=(k_c, v_c))
+            y = attn_apply(
+                p["cross_attn"],
+                h,
+                cfg=_attn_cfg(cfg),
+                positions=positions,
+                causal=False,
+                rope_base=rope_base,
+                compute_dtype=compute_dtype,
+                kv=(k_c, v_c),
+            )
             x = x + _tag(y, "block_out")
 
     h = _norm_apply(cfg, p["pre_mlp_norm"], x)
     if kind == "E":
-        if cfg.moe_impl == "ep":
-            if seq_len is not None:
-                # the shard_map EP dispatch has no padded-token masking yet:
-                # bucket padding would compete for expert capacity and
-                # silently break serve()==generate_static — refuse loudly
-                raise NotImplementedError(
-                    "bucketed prefill (seq_len) is not supported with moe_impl='ep'")
+        if cfg.moe_impl == "ep" and _ep_active(cfg):
             from repro.models.moe_ep import moe_apply_ep
 
+            # capacity_mult mirrors the dispatch path's capacity_factor so
+            # the two routings drop (or don't) under the same pressure
             y, aux = moe_apply_ep(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype,
-                                  ep_axes=tuple(cfg.ep_axes))
+                                  ep_axes=tuple(cfg.ep_axes), seq_len=seq_len,
+                                  capacity_mult=cfg.capacity_factor)
         else:
             y, aux = moe_apply(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype,
                                seq_len=seq_len)
@@ -288,7 +318,9 @@ def block_apply(
     return x + y, aux, cache
 
 
-def _attn_prefill_cache(pa, h, cfg: ModelConfig, cache_len: int, positions, rope_base, compute_dtype):
+def _attn_prefill_cache(
+    pa, h, cfg: ModelConfig, cache_len: int, positions, rope_base, compute_dtype
+):
     """Recompute roped k/v (cheap vs attention) and pad into the cache buffer."""
     k = dense_apply(pa["k_proj"], h, compute_dtype=compute_dtype)
     v = dense_apply(pa["v_proj"], h, compute_dtype=compute_dtype)
@@ -308,8 +340,12 @@ def _attn_prefill_cache(pa, h, cfg: ModelConfig, cache_len: int, positions, rope
     return {"k": attn_mod.cache_write(k, dt), "v": attn_mod.cache_write(v, dt)}
 
 
-def _mla_prefill_cache(pa, h, cfg: ModelConfig, cache_len: int, positions, rope_base, compute_dtype):
-    c_kv = rmsnorm_apply(pa["kv_a_norm"], dense_apply(pa["kv_a_proj"], h, compute_dtype=compute_dtype))
+def _mla_prefill_cache(
+    pa, h, cfg: ModelConfig, cache_len: int, positions, rope_base, compute_dtype
+):
+    c_kv = rmsnorm_apply(
+        pa["kv_a_norm"], dense_apply(pa["kv_a_proj"], h, compute_dtype=compute_dtype)
+    )
     k_rope = dense_apply(pa["k_rope_proj"], h, compute_dtype=compute_dtype)[..., None, :]
     k_rope = apply_rope(k_rope, positions, rope_base)[..., 0, :]
     pad = cache_len - h.shape[1]
@@ -503,12 +539,16 @@ def block_decode(
     keep their resident per-row layouts regardless (DESIGN.md §6)."""
     if kind == "M":
         h = _norm_apply(cfg, p["pre_norm"], x)
-        y, cache = ssd_block_decode(p["ssd"], h, cache, cfg=_ssd_cfg(cfg), compute_dtype=compute_dtype)
+        y, cache = ssd_block_decode(
+            p["ssd"], h, cache, cfg=_ssd_cfg(cfg), compute_dtype=compute_dtype
+        )
         return x + y, cache
 
     if kind == "R":
         h = _norm_apply(cfg, p["pre_norm"], x)
-        y, cache = rglru_block_decode(p["rglru"], h, cache, cfg=_rglru_cfg(cfg), compute_dtype=compute_dtype)
+        y, cache = rglru_block_decode(
+            p["rglru"], h, cache, cfg=_rglru_cfg(cfg), compute_dtype=compute_dtype
+        )
         x = x + y
     else:
         h = _norm_apply(cfg, p["pre_norm"], x)
@@ -541,11 +581,22 @@ def block_decode(
         # table: the invariant continuous batching needs for token-exactness
         # vs per-request static decode.  The classic uniform loop keeps the
         # bounded capacity (a static batch never mixes unrelated rows).
-        if dropless_moe:
-            cap = x.shape[0]
+        if cfg.moe_impl == "ep" and _ep_active(cfg):
+            # expert-parallel decode (DESIGN.md §12): experts sharded over
+            # the EP axes, tokens routed by all_to_all; ``dropless`` sizes
+            # the EP capacities at their worst-case bounds so the same
+            # row-independence invariant holds
+            from repro.models.moe_ep import moe_apply_ep
+
+            y, _ = moe_apply_ep(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype,
+                                ep_axes=tuple(cfg.ep_axes), dropless=dropless_moe)
         else:
-            cap = max(cfg.top_k, math.ceil(2.0 * x.shape[0] * cfg.top_k / cfg.n_experts))
-        y, _ = moe_apply(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype, capacity=cap)
+            if dropless_moe:
+                cap = x.shape[0]
+            else:
+                cap = max(cfg.top_k, math.ceil(2.0 * x.shape[0] * cfg.top_k / cfg.n_experts))
+            y, _ = moe_apply(p["moe"], h, cfg=_moe_cfg(cfg), compute_dtype=compute_dtype,
+                             capacity=cap)
     else:
         y = mlp_apply(p["mlp"], h, cfg=_mlp_cfg(cfg), compute_dtype=compute_dtype)
     if cfg.post_norm:

@@ -98,7 +98,8 @@ _VGG_PLANS = {
     # (paper's VGG7 for CIFAR-10: Simonyan-style small net used by BC/TWN)
     "vgg7": [128, 128, "M", 256, 256, "M", 512, 512, "M"],
     "vgg11": [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
-    "vgg16": [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M", 512, 512, 512, "M"],
+    "vgg16": [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M"]
+    + [512, 512, 512, "M"],
 }
 _VGG_FC = {"vgg7": [1024], "vgg11": [4096, 4096], "vgg16": [4096, 4096]}
 

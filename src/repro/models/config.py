@@ -148,7 +148,8 @@ class ModelConfig:
         for k in kinds:
             if k == "M":
                 R, N, H = self.d_inner, self.ssm_state, self.ssm_heads
-                total += D * (2 * R + 2 * N + H) + (self.conv_width * (R + 2 * N)) + R * D + 3 * H + R
+                total += D * (2 * R + 2 * N + H) + self.conv_width * (R + 2 * N)
+                total += R * D + 3 * H + R
                 continue
             if k == "R":
                 R, H = self.d_rnn, self.rnn_heads
@@ -158,13 +159,15 @@ class ModelConfig:
                 continue
             # attention
             if self.use_mla:
-                total += D * self.q_lora_rank + self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                total += D * self.q_lora_rank
+                total += self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
                 total += D * self.kv_lora_rank + D * self.qk_rope_dim
                 total += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
                 total += self.n_heads * self.v_head_dim * D
             else:
                 hd = self.head_dim
-                total += D * self.n_heads * hd + 2 * D * self.n_kv_heads * hd + self.n_heads * hd * D
+                total += D * self.n_heads * hd + 2 * D * self.n_kv_heads * hd
+                total += self.n_heads * hd * D
             # ffn
             if k == "E":
                 total += D * self.n_experts  # router
@@ -181,7 +184,8 @@ class ModelConfig:
             per += 2 * D * self.d_ff
             # decoder cross-attn adds another attention per decoder layer
             total += self.n_encoder_layers * per
-            total += self.n_layers * (D * self.n_heads * hd + 2 * D * self.n_kv_heads * hd + self.n_heads * hd * D)
+            per_dec = D * self.n_heads * hd + 2 * D * self.n_kv_heads * hd + self.n_heads * hd * D
+            total += self.n_layers * per_dec
         return total
 
     def active_param_count(self) -> int:

@@ -110,7 +110,9 @@ class ForwardOut(NamedTuple):
 
 
 def _norm_init(cfg, dtype):
-    return rmsnorm_init(cfg.d_model, dtype) if cfg.norm == "rmsnorm" else layernorm_init(cfg.d_model, dtype)
+    if cfg.norm == "rmsnorm":
+        return rmsnorm_init(cfg.d_model, dtype)
+    return layernorm_init(cfg.d_model, dtype)
 
 
 def _norm_apply(cfg, p, x):
@@ -325,7 +327,9 @@ def forward_lm(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
         else:
             x = jax.lax.dynamic_slice_in_dim(x, seq_len - 1, 1, axis=1)
     logits, hidden = _head(params, cfg, x)
-    return ForwardOut(logits=logits, aux=aux, caches=(caches if prefill_len else None), hidden=hidden)
+    return ForwardOut(
+        logits=logits, aux=aux, caches=(caches if prefill_len else None), hidden=hidden
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -400,8 +404,8 @@ def decode_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
         half = D // 2
         i = jnp.arange(half, dtype=jnp.float32)
         ang = pos_v[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / D)[None, :]
-        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, None, :].astype(compute_dtype)
-        x = x + pe
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, None, :]
+        x = x + pe.astype(compute_dtype)
 
     def _gate_cache(new_c, old_c):
         """Revert inactive rows' cache writes (every leaf is batch-leading
@@ -485,8 +489,9 @@ def prefill_lm(params, batch, cfg: ModelConfig, *, max_len: int,
                 p_sub = gp[f"sub{j}"]
 
                 def cross_kv(p_l):
-                    k = dense_apply(p_l["cross_attn"]["k_proj"], enc_out, compute_dtype=compute_dtype)
-                    v = dense_apply(p_l["cross_attn"]["v_proj"], enc_out, compute_dtype=compute_dtype)
+                    ca = p_l["cross_attn"]
+                    k = dense_apply(ca["k_proj"], enc_out, compute_dtype=compute_dtype)
+                    v = dense_apply(ca["v_proj"], enc_out, compute_dtype=compute_dtype)
                     return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
 
                 if spec.stacked:
@@ -683,7 +688,9 @@ def decode_verify_lm(params, caches, tokens, pos, cfg: ModelConfig, *,
 # ---------------------------------------------------------------------------
 # losses
 # ---------------------------------------------------------------------------
-def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     if mask is None:
@@ -705,7 +712,10 @@ def _mtp_loss(params, cfg: ModelConfig, hidden, tokens, compute_dtype):
     x, _, _ = block_apply(mtp["block"], x, cfg=cfg, kind=kind, positions=pos,
                           window=None, rope_base=cfg.rope_base, compute_dtype=compute_dtype)
     hN = _norm_apply(cfg, mtp["final_norm"], x)
-    logits = embed_logits(params["embed"], hN) if cfg.tie_lm_head else dense_apply(params["lm_head"], hN.astype(jnp.float32))
+    if cfg.tie_lm_head:
+        logits = embed_logits(params["embed"], hN)
+    else:
+        logits = dense_apply(params["lm_head"], hN.astype(jnp.float32))
     # logits[:, i] (built from token i & h_i) predicts token i+2
     return cross_entropy(logits[:, : T - 2], tokens[:, 2:])
 

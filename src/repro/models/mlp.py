@@ -25,13 +25,23 @@ def mlp_init(key, cfg: MLPConfig, dtype=jnp.float32):
     sd_out = 1.0 / math.sqrt(cfg.d_ff)
     if cfg.gated:
         return {
-            "gate_proj": dense_init(ks[0], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype),
-            "up_proj": dense_init(ks[1], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype),
-            "down_proj": dense_init(ks[2], (cfg.d_ff,), (cfg.d_model,), bias=cfg.bias, stddev=sd_out, dtype=dtype),
+            "gate_proj": dense_init(
+                ks[0], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype
+            ),
+            "up_proj": dense_init(
+                ks[1], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype
+            ),
+            "down_proj": dense_init(
+                ks[2], (cfg.d_ff,), (cfg.d_model,), bias=cfg.bias, stddev=sd_out, dtype=dtype
+            ),
         }
     return {
-        "fc1": dense_init(ks[0], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype),
-        "fc2": dense_init(ks[1], (cfg.d_ff,), (cfg.d_model,), bias=cfg.bias, stddev=sd_out, dtype=dtype),
+        "fc1": dense_init(
+            ks[0], (cfg.d_model,), (cfg.d_ff,), bias=cfg.bias, stddev=sd_in, dtype=dtype
+        ),
+        "fc2": dense_init(
+            ks[1], (cfg.d_ff,), (cfg.d_model,), bias=cfg.bias, stddev=sd_out, dtype=dtype
+        ),
     }
 
 

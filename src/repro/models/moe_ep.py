@@ -25,52 +25,92 @@ Wire bytes per device per layer ≈ 2·tokens_local·k·D·bytes — the all-to-
 minimum.  Gradients flow through all_to_all (transpose = reverse routing);
 tests/test_moe_ep.py checks exact agreement with the dense reference for
 both 1-D and 2-D EP meshes.
+
+Serving additions (DESIGN.md §12): ``seq_len`` masks bucketed-prefill
+padding out of capacity competition (mirroring moe.py), and ``dropless``
+sizes both capacities at their worst-case bounds so no assignment can ever
+drop — the row-independence invariant continuous batching needs.  Trace
+under ``with mesh:`` (the engine's ``_with_backend`` enters it).
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 
 from repro.models.layers import act_fn
 from repro.models.moe import MoEConfig, _route
 from repro.models.quantized import tree_has_packed, unpack_params
+from repro.nn.sharding import current_mesh
 
 
-def _positions_for(dest: jax.Array, n_dest: int, cap: int):
+def _positions_for(dest: jax.Array, n_dest: int, cap: int, mask: Optional[jax.Array] = None):
     """dest (A,) int32 → (slot, keep): positions within each destination's
-    capacity-bounded buffer (first-come priority)."""
+    capacity-bounded buffer (first-come priority).  ``mask`` excludes rows
+    from BOTH the output (keep=False) and the slot numbering — a masked-out
+    assignment (bucket padding, another copy's ownership partition) must
+    not consume capacity that drops a real one."""
     onehot = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32)  # (A, n_dest)
+    if mask is not None:
+        onehot = onehot * mask.astype(jnp.int32)[:, None]
     pos_all = jnp.cumsum(onehot, axis=0) - 1
     pos = jnp.take_along_axis(pos_all, dest[:, None], axis=1)[:, 0]
     keep = pos < cap
-    return jnp.minimum(pos, cap - 1), keep
+    if mask is not None:
+        keep = keep & mask
+    return jnp.minimum(jnp.maximum(pos, 0), cap - 1), keep
 
 
-def moe_apply_ep(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
-                 ep_axes=("model",), dp_axes=("pod", "data"),
-                 capacity_mult: float = 2.0) -> Tuple[jax.Array, Dict]:
-    """x (B,T,D) global → (B,T,D).  Trace under jax.set_mesh(mesh)."""
+def moe_apply_ep(
+    p,
+    x,
+    *,
+    cfg: MoEConfig,
+    compute_dtype=jnp.bfloat16,
+    ep_axes=("model",),
+    dp_axes=("pod", "data"),
+    capacity_mult: float = 2.0,
+    seq_len=None,
+    dropless: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """x (B,T,D) global → (B,T,D).  Trace under ``with mesh:``.
+
+    ``seq_len`` (traced scalar or None): bucketed-prefill valid length —
+    positions >= seq_len are padding and are masked out of routing capacity
+    (their output rows are junk, as in moe.py).  ``dropless``: size the
+    send capacity at the ownership-partition worst case and the per-expert
+    capacity at the one-assignment-per-token bound, so no assignment ever
+    drops — decode rows stay independent of who shares the batch."""
     if tree_has_packed(p):
         # shard_map bodies below index raw kernels; densify Packed serving
         # leaves up front (exact) until the EP path grows a packed kernel.
         p = unpack_params(p, jnp.float32)
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
+    if mesh is None:
+        raise ValueError("moe_apply_ep must trace under an ambient mesh (`with mesh:`)")
     ep_axes = tuple(a for a in ep_axes if a in mesh.axis_names)
     assert ep_axes, (mesh.axis_names,)
     # tokens ALWAYS shard over the batch axes (even when 'data' is also an
     # EP axis — 2-D EP); x is replicated only over the non-batch EP axes,
     # and assignments are partitioned across exactly those replicas.
     dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+    # shape-aware fallback (mirrors nn/sharding.pspec_for): drop batch axes
+    # that don't divide B — serving admission prefills are a batch of ONE,
+    # which replicates over 'data' and (when 'data' is an EP axis) folds it
+    # into the assignment-ownership partition instead
+    B = x.shape[0]
+    while dp and B % math.prod(mesh.shape[a] for a in dp) != 0:
+        dp = dp[:-1]
     repl_axes = tuple(a for a in ep_axes if a not in dp)
     ep_total = math.prod(mesh.shape[a] for a in ep_axes)
     msize = math.prod(mesh.shape[a] for a in repl_axes) if repl_axes else 1
     E, k = cfg.n_experts, cfg.top_k
     assert E % ep_total == 0, (E, ep_total)
     E_local = E // ep_total
-    B, T, D = x.shape
+    _, T, D = x.shape
     P = jax.sharding.PartitionSpec
 
     we = p["experts"]
@@ -78,30 +118,34 @@ def moe_apply_ep(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
 
     in_specs = [
         P(dp if dp else None, None, None),  # x: batch over dp, repl over ep-complement
-        P(),                                # router
-        P(ep_axes, None, None),             # gate_proj (E, D, F)
-        P(ep_axes, None, None),             # up_proj
-        P(ep_axes, None, None),             # down_proj
+        P(),  # seq_len scalar
+        P(),  # router
+        P(ep_axes, None, None),  # gate_proj (E, D, F)
+        P(ep_axes, None, None),  # up_proj
+        P(ep_axes, None, None),  # down_proj
     ]
     shared_args = ()
     if cfg.n_shared_experts:
         sh = p["shared"]
-        shared_args = (sh["gate_proj"]["kernel"], sh["up_proj"]["kernel"],
-                       sh["down_proj"]["kernel"])
+        shared_args = (
+            sh["gate_proj"]["kernel"],
+            sh["up_proj"]["kernel"],
+            sh["down_proj"]["kernel"],
+        )
         in_specs += [P(None, "model"), P(None, "model"), P("model", None)]
     out_specs = (P(dp if dp else None, None, None), P(), P())
 
-    def body(x_l, router_w, gate_w, up_w, down_w, *shared_ws):
+    def body(x_l, valid_len, router_w, gate_w, up_w, down_w, *shared_ws):
         Bl, Tl, _ = x_l.shape
         N = Bl * Tl
         xf = x_l.reshape(N, D)
         gates, idx, _, aux = _route({"router": {"kernel": router_w}}, xf, cfg)
 
-        a_ids = idx.T.reshape(-1)                      # (A=kN,) global expert
+        a_ids = idx.T.reshape(-1)  # (A=kN,) global expert
         A = a_ids.shape[0]
         token_ids = jnp.tile(jnp.arange(N, dtype=jnp.int32), (k,))
         g_flat = gates.T.reshape(-1).astype(jnp.float32)
-        dest = a_ids // E_local                        # destination device
+        dest = a_ids // E_local  # destination device
         local_eid = a_ids % E_local
 
         # partition the (replicated) assignment set across the repl axes —
@@ -113,10 +157,20 @@ def moe_apply_ep(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
             own = (jnp.arange(A, dtype=jnp.int32) % msize) == midx
         else:
             own = jnp.ones((A,), bool)
+        # bucketed-prefill padding (positions >= seq_len) must not compete
+        # for capacity — its junk output rows are masked the same way
+        # moe.py masks the dispatch path
+        token_valid = jnp.arange(Tl, dtype=jnp.int32) < valid_len
+        token_valid = jnp.broadcast_to(token_valid[None, :], (Bl, Tl)).reshape(N)
+        own = own & token_valid[token_ids]
 
-        c_send = max(1, int(math.ceil(capacity_mult * A / (msize * ep_total))))
-        slot, keep = _positions_for(dest, ep_total, c_send)
-        keep = keep & own
+        if dropless:
+            # ownership is a strided 1/msize partition: at most ceil(A/msize)
+            # assignments per copy, all of which could target one destination
+            c_send = max(1, -(-A // msize))
+        else:
+            c_send = max(1, int(math.ceil(capacity_mult * A / (msize * ep_total))))
+        slot, keep = _positions_for(dest, ep_total, c_send, mask=own)
         keepf = keep.astype(compute_dtype)
 
         xb = xf.astype(compute_dtype)
@@ -134,10 +188,15 @@ def moe_apply_ep(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
         re_ = recv_e.reshape(X)
 
         # ---- per-local-expert buffers ----------------------------------------
-        c_loc = max(1, int(math.ceil(capacity_mult * X / max(E_local, 1))))
+        if dropless:
+            # a token's top-k experts are distinct, so ONE expert sees at
+            # most one assignment per global token: capacity B·T never drops
+            c_loc = max(1, min(X, B * T))
+        else:
+            c_loc = max(1, int(math.ceil(capacity_mult * X / max(E_local, 1))))
         valid = re_ >= 0
-        eslot, ekeep = _positions_for(jnp.where(valid, re_, 0), E_local, c_loc)
-        ekeepf = (ekeep & valid).astype(compute_dtype)
+        eslot, ekeep = _positions_for(jnp.where(valid, re_, 0), E_local, c_loc, mask=valid)
+        ekeepf = ekeep.astype(compute_dtype)
         buf = jnp.zeros((E_local, c_loc, D), compute_dtype)
         buf = buf.at[jnp.where(valid, re_, 0), eslot].add(rx * ekeepf[:, None])
 
@@ -147,8 +206,9 @@ def moe_apply_ep(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
 
         # ---- back to source layout --------------------------------------------
         y_rows = out_buf[jnp.where(valid, re_, 0), eslot] * ekeepf[:, None]
-        back = jax.lax.all_to_all(y_rows.reshape(ep_total, c_send, D), axis,
-                                  split_axis=0, concat_axis=0, tiled=True)
+        back = jax.lax.all_to_all(
+            y_rows.reshape(ep_total, c_send, D), axis, split_axis=0, concat_axis=0, tiled=True
+        )
         y_send = back.reshape(ep_total, c_send, D)
 
         # ---- local combine + sum over the assignment partitions ---------------
@@ -170,10 +230,11 @@ def moe_apply_ep(p, x, *, cfg: MoEConfig, compute_dtype=jnp.bfloat16,
         aux = {kk: jax.lax.pmean(v, all_axes) for kk, v in aux.items()}
         return y.reshape(Bl, Tl, D), aux["moe_aux_loss"], aux["moe_z_loss"]
 
-    y, aux_l, z_l = jax.shard_map(
-        body, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs, check_vma=False,
+    y, aux_l, z_l = shard_map(
+        body, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs, check_rep=False
     )(
         x,
+        jnp.asarray(T if seq_len is None else seq_len, jnp.int32),
         p["router"]["kernel"],
         we["gate_proj"]["kernel"],
         we["up_proj"]["kernel"],

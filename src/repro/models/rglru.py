@@ -60,7 +60,9 @@ def rglru_init(key, cfg: RGLRUConfig, dtype=jnp.float32):
                 "bias": jnp.zeros((H, dh), dtype),
             },
         },
-        "out_proj": dense_init(jax.random.fold_in(key, 7), (R,), (D,), stddev=1.0 / math.sqrt(R), dtype=dtype),
+        "out_proj": dense_init(
+            jax.random.fold_in(key, 7), (R,), (D,), stddev=1.0 / math.sqrt(R), dtype=dtype
+        ),
     }
 
 
@@ -69,7 +71,9 @@ def _block_diag_gate(gp, x, H: int, compute_dtype):
     B, T, R = x.shape
     dh = R // H
     xh = x.reshape(B, T, H, dh)
-    y = jnp.einsum("BTHi,Hij->BTHj", xh.astype(compute_dtype), as_dense(gp["kernel"], compute_dtype))
+    y = jnp.einsum(
+        "BTHi,Hij->BTHj", xh.astype(compute_dtype), as_dense(gp["kernel"], compute_dtype)
+    )
     y = y + gp["bias"].astype(compute_dtype)
     return jax.nn.sigmoid(y.astype(jnp.float32)).reshape(B, T, R)
 

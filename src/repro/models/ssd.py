@@ -53,7 +53,9 @@ def ssd_init(key, cfg: SSDConfig, dtype=jnp.float32):
         "in_proj_B": dense_init(ks[2], (D,), (N,), stddev=sd, dtype=dtype),
         "in_proj_C": dense_init(ks[3], (D,), (N,), stddev=sd, dtype=dtype),
         "in_proj_dt": dense_init(ks[4], (D,), (H,), stddev=sd, dtype=dtype),
-        "conv1d": {"kernel": (jax.random.normal(ks[6], (cfg.conv_width, conv_dim)) * 0.1).astype(dtype)},
+        "conv1d": {
+            "kernel": (jax.random.normal(ks[6], (cfg.conv_width, conv_dim)) * 0.1).astype(dtype)
+        },
         "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
         "ssm_D": jnp.ones((H,), jnp.float32),
         "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),  # softplus^-1

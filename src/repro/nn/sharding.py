@@ -24,7 +24,31 @@ import numpy as np
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax 0.4.x keeps the ambient mesh in the pjit resource env (entered via
+# ``with mesh:``) — newer jax exposes jax.set_mesh/get_abstract_mesh instead.
+from jax._src.mesh import thread_resources as _thread_resources
+
 from repro.nn.tree import tree_map_with_path
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The ambient physical mesh (``with mesh:``), or None outside one.
+
+    Readable mid-trace: the mesh context is a thread-local Python global,
+    not a traced value, so sharded dispatch decisions (moe_ep routing, the
+    paged-attention head-slicing wrapper) can branch on it while jit is
+    tracing — the decision is baked into the trace, which is exactly the
+    engine-pins-at-construction contract DESIGN.md §4 already gives the
+    packed/attention backends."""
+    m = _thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def mesh_axis_size(mesh: Optional[Mesh], *names: str) -> int:
+    """Product of the named mesh axes that exist on ``mesh`` (1 if none)."""
+    if mesh is None:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in names if a in mesh.axis_names] or [1]))
 
 # ---------------------------------------------------------------------------
 # Logical rules: (path regex, logical axes per dim).  First match wins.

@@ -142,17 +142,51 @@ def capabilities(engine) -> Dict[str, Capability]:
     chunked_prefill — ``prefill_chunk`` would actually chunk (the tail-
                       prefill trace exists for this architecture; §10);
     speculative     — draft/verify rounds would actually speculate (§8;
-                      MLA allowed — the absorbed verify form exists).
+                      MLA allowed — the absorbed verify form exists);
+    ep_moe          — MoE layers would route expert-parallel through the
+                      shard_map all_to_all dispatch (§12): requires
+                      ``moe_impl='ep'``, a pinned mesh whose ``ep_axes``
+                      multiply past 1, and experts divisible by that
+                      product.  Dense engines report the no-experts reason;
+                      eligible engines off a mesh fall back to the pjit
+                      dispatch (the serving output contract either way).
 
     The launcher's inert-flag warnings and the scheduler's own eligibility
     decisions both read THIS report, so they can never disagree.
     """
     strict = _tier_reasons(engine, allow_mla=False)
     with_mla = _tier_reasons(engine, allow_mla=True)
+    ep = _ep_moe_reasons(engine)
     full = Capability(not strict, "; ".join(strict))
     return {
         "fully_paged": full,
         "prefix_cache": full,
         "chunked_prefill": full,
         "speculative": Capability(not with_mla, "; ".join(with_mla)),
+        "ep_moe": Capability(not ep, "; ".join(ep)),
     }
+
+
+def _ep_moe_reasons(engine) -> list:
+    """Why ``engine`` would not decode MoE layers expert-parallel (empty
+    when it would).  Mirrors ``models.blocks._ep_active`` plus the config
+    preconditions, so the report and the dispatch can never disagree."""
+    from repro.nn.sharding import mesh_axis_size
+
+    cfg = engine.cfg
+    r = []
+    if not cfg.moe:
+        r.append("no MoE layers")
+        return r
+    if cfg.moe_impl != "ep":
+        r.append(f"moe_impl '{cfg.moe_impl}' is the pjit dispatch, not the EP shard_map")
+    mesh = getattr(engine, "mesh", None)
+    if mesh is None:
+        r.append("no mesh pinned on the engine")
+        return r
+    ep = mesh_axis_size(mesh, *cfg.ep_axes)
+    if ep <= 1:
+        r.append(f"ep_axes {tuple(cfg.ep_axes)} multiply to 1 on this mesh")
+    elif cfg.n_experts % ep:
+        r.append(f"{cfg.n_experts} experts do not divide over {ep} EP shards")
+    return r

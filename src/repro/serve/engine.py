@@ -63,6 +63,7 @@ from repro.models.quantized import (
     tree_has_packed,
     unpack_params,
 )
+from repro.nn.sharding import current_mesh, make_rules, mesh_axis_size, shardings_for_tree
 from repro.nn.tree import tree_bytes
 
 
@@ -315,6 +316,13 @@ class ServeEngine:
     params: Any
     max_len: int
     compute_dtype: Any = jnp.bfloat16
+    # multi-device serving (DESIGN.md §12): a (data, model) Mesh shards the
+    # packed weight words over the nn/sharding logical rules and the paged
+    # KV pool over KV heads; None (and a 1-device mesh) serves exactly as
+    # before.  Like the kernel backends, the mesh is PINNED at construction
+    # — every jitted trace runs under ``with self.mesh:``.
+    mesh: Any = None
+    sharding_profile: str = ""  # defaults to cfg.sharding_profile
 
     def __post_init__(self):
         cfg, cd = self.cfg, self.compute_dtype
@@ -324,6 +332,16 @@ class ServeEngine:
         # trace from the globals (construct a new engine to switch).
         self.backend = resolve_backend()
         self.attn_backend = resolve_attention_backend()
+        if self.mesh is None:
+            self.mesh = current_mesh()  # constructing under `with mesh:` pins it
+        self.rules = None
+        if self.mesh is not None:
+            self.rules = make_rules(self.mesh, self.sharding_profile or cfg.sharding_profile)
+            # place every param leaf (Packed int8 words flatten as <p>/0 and
+            # match their parent's rule; per-layer exponents ride along) —
+            # the admission/decode traces then consume pre-sharded weights
+            # and GSPMD propagates the layout through the forward
+            self.params = jax.device_put(self.params, shardings_for_tree(self.rules, self.params))
         if self.packed and self.backend == "dense":
             # Off-TPU there is no fused dequant kernel and unpack-then-dot
             # re-pays the unpack every matmul — slower than float serving.
@@ -424,10 +442,21 @@ class ServeEngine:
         set_packed_backend(self.backend)
         set_attention_backend(self.attn_backend)
         try:
+            if self.mesh is not None:
+                # the ambient mesh is part of the pinned trace environment:
+                # moe_ep routing and the paged-attention head-slicing
+                # wrapper both branch on current_mesh() while tracing
+                with self.mesh:
+                    return fn(*args)
             return fn(*args)
         finally:
             set_packed_backend(prev_p)
             set_attention_backend(prev_a)
+
+    def model_shards(self) -> int:
+        """Size of the mesh's ``model`` axis (1 off-mesh) — the tensor/KV-
+        head/expert parallel degree the §12 pool math is over."""
+        return mesh_axis_size(self.mesh, "model")
 
     @classmethod
     def from_symog(
@@ -439,12 +468,21 @@ class ServeEngine:
         *,
         max_len: int,
         compute_dtype=jnp.bfloat16,
+        mesh=None,
+        sharding_profile: str = "",
     ) -> "ServeEngine":
         """Pack a SYMOG-trained float tree and serve the Packed artifact."""
         from repro.core.symog import pack_tree
 
         tree = pack_tree(params, symog_state, symog_cfg)
-        return cls(cfg, tree, max_len=max_len, compute_dtype=compute_dtype)
+        return cls(
+            cfg,
+            tree,
+            max_len=max_len,
+            compute_dtype=compute_dtype,
+            mesh=mesh,
+            sharding_profile=sharding_profile,
+        )
 
     def weight_bytes(self) -> int:
         """Resident param bytes (Packed leaves count their int8 words — the
@@ -459,10 +497,10 @@ class ServeEngine:
 
     def capabilities(self):
         """Structural serving capabilities of this engine with reasons —
-        ``{fully_paged, prefix_cache, chunked_prefill, speculative}``, each
-        a truthy/falsy ``serve.Capability``.  The one source of truth the
-        launcher's inert-flag warnings and the scheduler's own eligibility
-        decisions both read (DESIGN.md §7/§8/§10)."""
+        ``{fully_paged, prefix_cache, chunked_prefill, speculative,
+        ep_moe}``, each a truthy/falsy ``serve.Capability``.  The one source
+        of truth the launcher's inert-flag warnings and the scheduler's own
+        eligibility decisions both read (DESIGN.md §7/§8/§10/§12)."""
         from repro.serve.config import capabilities
 
         return capabilities(self)

@@ -107,6 +107,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import NamedSharding, PartitionSpec
+
 from repro.models.lm import PAGED_CACHE_LEAVES, scan_groups
 from repro.serve.blockpool import BlockPool
 from repro.serve.config import ServeConfig
@@ -318,7 +320,9 @@ class Scheduler:
         self.pool = BlockPool(self.n_blocks, blk)
         # physical block ids = logical + 1; row 0 of every pool leaf is the
         # trash block evicted slots write into (their table rows are zeroed)
-        self._block_tables = jnp.zeros((S, self.max_blocks), jnp.int32)
+        # (replicated on a mesh — the single-row .at[] edits stay identical
+        # on every device, DESIGN.md §12)
+        self._block_tables = self._replicate(jnp.zeros((S, self.max_blocks), jnp.int32))
 
         caps = engine.capabilities()
         # per-block quantized pools (DESIGN.md §11): on the fully-paged tier
@@ -351,10 +355,10 @@ class Scheduler:
         # previous step's device handles straight back and only downloads
         # the sampled tokens (EOS/budget bookkeeping); admission/eviction
         # touch single rows via .at[slot].set
-        self._tokens = jnp.zeros((S,), jnp.int32)
-        self._pos = jnp.zeros((S,), jnp.int32)
-        self._active = jnp.zeros((S,), bool)
-        self._seed0 = jnp.zeros((S,), jnp.int32)
+        self._tokens = self._replicate(jnp.zeros((S,), jnp.int32))
+        self._pos = self._replicate(jnp.zeros((S,), jnp.int32))
+        self._active = self._replicate(jnp.zeros((S,), bool))
+        self._seed0 = self._replicate(jnp.zeros((S,), jnp.int32))
         self._slots: List[Optional[_Slot]] = [None] * S
         self._n_live = 0
         self._queue: collections.deque = collections.deque()
@@ -391,6 +395,39 @@ class Scheduler:
     # ------------------------------------------------------------------
     # cache pool
     # ------------------------------------------------------------------
+    def _replicate(self, x):
+        """Pin host bookkeeping arrays replicated on the engine's mesh (a
+        no-op off-mesh): slot state and block tables are edited one row at a
+        time on the host path, and an explicit replicated placement keeps
+        those edits out of GSPMD's layout search."""
+        mesh = getattr(self.eng, "mesh", None)
+        if mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(mesh, PartitionSpec()))
+
+    def _shard_pool(self, pool):
+        """Apply the §12 placement to a freshly-built cache pool: paged DATA
+        leaves shard their KV-head axis over the mesh's ``model`` mapping
+        (``serve.sharding.pool_pspec`` — replicated when heads don't
+        divide), while ``_scale`` exponent siblings and every non-paged
+        per-row leaf replicate."""
+        mesh, rules = getattr(self.eng, "mesh", None), getattr(self.eng, "rules", None)
+        if mesh is None or rules is None:
+            return pool
+        from repro.serve.sharding import pool_pspec
+
+        for g in self._groups:
+            axis = 1 if g.stacked else 0
+            for j in range(len(g.unit)):
+                sub = pool[g.name][f"sub{j}"]
+                for name, leaf in sub.items():
+                    if g.paged[j] and name in PAGED_CACHE_LEAVES:
+                        spec = pool_pspec(rules, leaf.shape, axis)
+                    else:
+                        spec = PartitionSpec()
+                    sub[name] = jax.device_put(leaf, NamedSharding(mesh, spec))
+        return pool
+
     def _init_caches(self):
         """Zero cache pool with exactly the prefill trace's leaf dtypes.
         Paged leaves (GroupSpec.paged ∩ PAGED_CACHE_LEAVES) become shared
@@ -431,7 +468,7 @@ class Scheduler:
                     sub[name] = jnp.zeros(shape, sd.dtype)
                 sub_pool[f"sub{j}"] = sub
             pool[g.name] = sub_pool
-        return pool
+        return self._shard_pool(pool)
 
     def cache_bytes(self) -> int:
         """Resident KV bytes of the pool (the §6 capacity-math numerator)."""

@@ -1,0 +1,57 @@
+"""Unit tests for the bench regression gate (benchmarks/compare_bench.py).
+
+The gate runs in CI against a JSON artifact; these tests pin its contract
+in-process (no subprocess, no bench run): a baseline entry MISSING from the
+current run is a hard failure — a bench that silently stops producing an
+entry (e.g. the gated ``serve_sharded_capacity`` capacity model) must not
+pass the gate — while extra current-only entries are allowed.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+
+from compare_bench import _compare  # noqa: E402
+
+
+BASE = {
+    "fixedpoint_matmul": {"us_per_call": 800.0, "ref_us": 100.0},
+    "serve_sharded_capacity": {
+        "us_per_call": 0.0,
+        "metrics": {"pool_shard_ratio": 6.0},
+    },
+}
+
+
+def test_missing_baseline_entry_fails_gate():
+    cur = {"fixedpoint_matmul": {"us_per_call": 820.0, "ref_us": 101.0}}
+    failures, rows = _compare(BASE, cur, 2.0)
+    assert failures == ["serve_sharded_capacity: missing from current run"]
+    missing = dict((r[0], r) for r in rows)["serve_sharded_capacity"]
+    assert missing[1] == "missing" and missing[-1] is False
+
+
+def test_present_entries_and_floors_pass():
+    cur = {
+        "fixedpoint_matmul": {"us_per_call": 1500.0, "ref_us": 100.0},
+        "serve_sharded_capacity": {
+            "us_per_call": 0.0,
+            "metrics": {"pool_shard_ratio": 7.5},
+        },
+        "brand_new_entry": {"us_per_call": 9e9},  # current-only: allowed
+    }
+    failures, rows = _compare(BASE, cur, 2.0)
+    assert failures == []
+    assert len(rows) == 2  # one row per BASELINE entry, new ones don't gate
+
+
+def test_metric_floor_still_enforced_when_entry_present():
+    cur = {
+        "fixedpoint_matmul": {"us_per_call": 820.0, "ref_us": 101.0},
+        "serve_sharded_capacity": {
+            "us_per_call": 0.0,
+            "metrics": {"pool_shard_ratio": 1.0},
+        },
+    }
+    failures, _ = _compare(BASE, cur, 2.0)
+    assert failures == ["serve_sharded_capacity.pool_shard_ratio: 1.0 below floor 6.0"]

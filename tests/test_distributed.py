@@ -24,6 +24,7 @@ _COMPRESSED_PSUM_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     from functools import partial
+    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.distributed import compressed_psum_int8, CompressionState
 
@@ -31,8 +32,8 @@ _COMPRESSED_PSUM_SCRIPT = textwrap.dedent("""
     key = jax.random.PRNGKey(0)
     grads = jax.random.normal(key, (8, 64)) * 0.1  # one row per shard
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
-             out_specs=(P(), P("data")))
+    @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+             out_specs=(P(), P("data")), check_rep=False)
     def reduce_once(g, err):
         mean, st = compressed_psum_int8({"w": g}, CompressionState(err={"w": err}), "data")
         return mean["w"], st.err["w"]
@@ -55,13 +56,10 @@ _COMPRESSED_PSUM_SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-seed failure: int8-compressed psum error-feedback bound "
-    "(ACCUM_REL < 0.02) not met on the CPU ring emulation; tracked since the "
-    "seed commit",
-)
 def test_compressed_psum_int8_subprocess():
+    # fixed with the mesh-aware serving PR: the script targeted a newer jax
+    # API surface (jax.shard_map); ported to jax.experimental.shard_map the
+    # error-feedback bound holds with ~40x margin on the simulated mesh
     r = subprocess.run(
         [sys.executable, "-c", _COMPRESSED_PSUM_SCRIPT],
         capture_output=True, text=True, timeout=600,
@@ -70,6 +68,66 @@ def test_compressed_psum_int8_subprocess():
     )
     assert r.returncode == 0, r.stdout + r.stderr
     assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# compressed all-reduce, in-process (the CI `multidevice` job runs pytest
+# itself under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+# ---------------------------------------------------------------------------
+def _reduce_once_fn(mesh):
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import CompressionState, compressed_psum_int8
+
+    @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+             out_specs=(P(), P("data")), check_rep=False)
+    def reduce_once(g, err):
+        mean, st = compressed_psum_int8(
+            {"w": g}, CompressionState(err={"w": err}), "data")
+        return mean["w"], st.err["w"]
+
+    return reduce_once
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 simulated devices")
+def test_compressed_psum_mean_over_n_shards():
+    """One round == the exact n-shard mean to int8 precision, for every
+    shard count the 8-device mesh can carve."""
+    for n in (2, 4, 8):
+        mesh = jax.make_mesh((n,), ("data",))
+        grads = jax.random.normal(jax.random.PRNGKey(n), (n, 1, 64)) * 0.1
+        out, _ = _reduce_once_fn(mesh)(grads, jnp.zeros((n, 1, 64)))
+        exact = grads.mean(0)
+        rel = float(jnp.abs(out - exact).max() / jnp.abs(exact).max())
+        assert rel < 0.05, (n, rel)  # int8: ~1/127 relative per round
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 simulated devices")
+def test_compressed_psum_error_feedback_bound():
+    """The residual never exceeds one quantization step per shard, and the
+    ACCUMULATED mean over rounds stays unbiased — the Karimireddy-style
+    guarantee the module docstring claims."""
+    n = 8
+    mesh = jax.make_mesh((n,), ("data",))
+    reduce_once = _reduce_once_fn(mesh)
+    grads = jax.random.normal(jax.random.PRNGKey(0), (n, 1, 64)) * 0.1
+    exact = grads.mean(0)
+    err = jnp.zeros((n, 1, 64))
+    acc = jnp.zeros((1, 64))
+    for r in range(20):
+        # residual bound: |err'| <= s/2 with s = pmax|x + err| / 127 — the
+        # round's shared scale, computed from the PRE-round carry
+        step = float(jnp.abs(grads + err).max()) / 127.0
+        out, err = reduce_once(grads, err)
+        acc = acc + out
+        assert float(jnp.abs(err).max()) <= 0.5 * step + 1e-7
+    accum_rel = float(jnp.abs(acc - 20 * exact).max() / jnp.abs(20 * exact).max())
+    assert accum_rel < 0.02, accum_rel
 
 
 # ---------------------------------------------------------------------------

@@ -4,8 +4,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -22,7 +20,7 @@ _SCRIPT = textwrap.dedent("""
     p = moe_init(key, cfg)
     x = jax.random.normal(jax.random.fold_in(key, 1), (4, 6, 16)) * 0.5
 
-    with jax.set_mesh(mesh):
+    with mesh:
         x_sh = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
         p_sh = jax.device_put(p, NamedSharding(mesh, P()))
         # expert leaves sharded over model
@@ -57,13 +55,12 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-seed failure: shard_map expert-parallel MoE drifts past the "
-    "2e-4 bound vs the dense per-token reference; tracked since the seed "
-    "commit",
-)
 def test_moe_ep_matches_dense_ref():
+    # fixed with the mesh-aware serving PR: the EP dispatch was written
+    # against a newer jax API surface (jax.set_mesh/jax.shard_map) and the
+    # capacity numbering let non-owned assignment partitions consume send
+    # slots; ported to the `with mesh:` context + masked slot numbering,
+    # the 1-D/2-D EP output now matches the dense reference within 2e-4.
     root = os.path.join(os.path.dirname(__file__), "..")
     r = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,

@@ -272,7 +272,9 @@ def _run_both(fn):
     return fused, composed
 
 
-@pytest.mark.parametrize("window,softcap,int8", [(None, 0.0, False), (5, 4.0, False), (None, 0.0, True)])
+@pytest.mark.parametrize(
+    "window,softcap,int8", [(None, 0.0, False), (5, 4.0, False), (None, 0.0, True)]
+)
 def test_attn_decode_layer_parity(window, softcap, int8, rng, fused_interpret):
     cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=16, softcap=softcap)
     params, cache, bt, key = _layer_case(rng, cfg, B=3, max_blocks=3, block=8, int8=int8)

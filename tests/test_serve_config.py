@@ -141,8 +141,13 @@ def test_legacy_scheduler_positional_n_slots_warns(unpack_backend):
 def test_capabilities_on_fully_paged_tier(unpack_backend):
     eng = _engine("internlm2-1.8b")
     caps = eng.capabilities()
-    assert set(caps) == {"fully_paged", "prefix_cache", "chunked_prefill", "speculative"}
+    assert set(caps) == {
+        "fully_paged", "prefix_cache", "chunked_prefill", "speculative", "ep_moe",
+    }
     for name, cap in caps.items():
+        if name == "ep_moe":  # dense decoder: EP is structurally absent (§12)
+            assert not cap and "no MoE layers" in cap.reason
+            continue
         assert bool(cap), name
         assert cap.reason == ""
 
@@ -163,6 +168,8 @@ def test_quantized_kv_decoders_stay_on_tier(dtype):
     assert eng.kv_quant_bits == {"bf16": 0, "int8_fp": 8, "int4_fp": 4}[dtype]
     caps = eng.capabilities()
     for name, cap in caps.items():
+        if name == "ep_moe":  # dense decoder — not a tier capability
+            continue
         assert bool(cap), (name, cap.reason)
         assert "re-rounds" not in cap.reason
     assert bool(caps["fully_paged"]) == fully_paged_tier(eng)
@@ -184,6 +191,13 @@ def test_capabilities_report_reasons_off_tier(arch, fragment, unpack_backend):
     assert bool(caps["fully_paged"]) == fully_paged_tier(eng)
     assert bool(caps["prefix_cache"]) == prefix_cache_eligible(eng)
     assert bool(caps["speculative"]) == speculative_eligible(eng)
+    # off-mesh, nothing routes expert-parallel — MoE engines cite the mesh
+    # or the dispatch impl, dense ones the absence of experts (§12)
+    assert not caps["ep_moe"]
+    expect = "no mesh" if eng.cfg.moe and eng.cfg.moe_impl == "ep" else (
+        "dispatch" if eng.cfg.moe else "no MoE layers"
+    )
+    assert expect in caps["ep_moe"].reason
 
 
 def test_mla_blocks_prefix_and_chunked_but_not_speculative(unpack_backend):
