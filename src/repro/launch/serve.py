@@ -28,6 +28,12 @@ knobs flow through ONE ``serve.ServeConfig`` (DESIGN.md §10) —
 ``--prefill-chunk`` caps admission-prefill stalls by chunking long
 prompts across steps, and ``warn_inert_flags`` reads
 ``engine.capabilities()`` to flag structurally inert features.
+
+Telemetry (DESIGN.md §13): the stats report is the scheduler's metrics-
+registry snapshot; ``--metrics-json PATH`` writes it as JSON,
+``--trace-out PATH`` turns on step-span tracing and exports a Chrome
+``trace_event`` file for Perfetto, and ``--profile-dir PATH`` wraps the
+first ``--profile-steps`` serve steps in a ``jax.profiler`` capture.
 """
 from __future__ import annotations
 
@@ -50,6 +56,7 @@ from repro.serve import (
     ServeConfig,
     ServeEngine,
     SpeculativeConfig,
+    TelemetryConfig,
     latency_stats,
 )
 
@@ -148,11 +155,23 @@ def make_ragged_workload(cfg, *, n_requests: int, prompt_len: int, steps: int,
     return reqs
 
 
-def run_continuous(eng: ServeEngine, reqs, config: ServeConfig, *, label: str) -> None:
+def _suffixed(path: str, tag: str) -> str:
+    """``out.json`` + ``packed`` -> ``out.packed.json`` — the second engine's
+    artifacts must not overwrite the float run's."""
+    if not path:
+        return ""
+    root, dot, ext = path.rpartition(".")
+    return f"{root}.{tag}.{ext}" if dot else f"{path}.{tag}"
+
+
+def run_continuous(eng: ServeEngine, reqs, config: ServeConfig, *, label: str,
+                   metrics_json: str = "", trace_out: str = "") -> None:
     useful = sum(r.max_new_tokens for r in reqs)
     # warm the traces with the SAME sampling config (greedy and sampled
-    # decode/admit steps are different traces — scheduler_fns memo key)
-    eng.serve(reqs[:1], config)
+    # decode/admit steps are different traces — scheduler_fns memo key) but
+    # default telemetry, so warmup neither burns the --profile-dir capture
+    # window nor leaves compile-dominated spans in the exported trace
+    eng.serve(reqs[:1], dataclasses.replace(config, telemetry=TelemetryConfig()))
     t0 = time.time()
     comps, sched = eng.serve(reqs, config, return_scheduler=True)
     dt = time.time() - t0
@@ -167,28 +186,16 @@ def run_continuous(eng: ServeEngine, reqs, config: ServeConfig, *, label: str) -
           f"{sched.stats['decode_steps']} ragged decode steps "
           f"(+{sched.stats['idle_steps']} idle) vs {static_steps} static; "
           f"reasons={ {c.finish_reason for c in comps} }")
-    print(f"  paged pool: peak {sched.stats['peak_live_slots']} live slots, "
-          f"peak {sched.pool.peak_live}/{sched.pool.n_blocks} blocks of "
-          f"{sched.pool.block_size}, {sched.stats['preemptions']} preemptions, "
-          f"{sched.stats['admission_traces']} admission traces")
-    if sched.chunk:
-        s = sched.stats
-        print(f"  chunked prefill: {s['chunked_admissions']} admissions chunked "
-              f"(<= {sched.chunk} tokens/chunk), {s['prefill_chunks']} chunks "
-              f"interleaved with decode, {s['prefill_only_steps']} prefill-only steps")
-    if sched.prefix is not None:
-        s = sched.stats
-        print(f"  prefix cache: {s['prefix_hits']} hits / {s['prefix_misses']} misses, "
-              f"{s['prefix_hit_tokens']} cached tokens reused, "
-              f"{s['prefix_cow_copies']} COW copies, "
-              f"{s['prefix_evicted_blocks']} blocks evicted, "
-              f"{sched.pool.total_allocs} blocks allocated")
-    if sched.stats.get("spec_steps"):
-        s = sched.stats
-        print(f"  speculative: {s['spec_steps']} draft/verify rounds, "
-              f"{s['spec_accepted']}/{s['spec_drafted']} drafts accepted, "
-              f"{s['spec_emitted'] / max(1, s['spec_row_rounds']):.2f} tokens "
-              "committed per row-round (vanilla decode = 1.0)")
+    # one report path for every subsystem: the registry snapshot carries the
+    # scheduler/pool/prefix/speculative counters the per-feature print
+    # blocks used to hand-assemble (DESIGN.md §13)
+    for line in sched.registry.render_text():
+        print(f"  {line}")
+    mon = sched.monitor
+    if mon.count:
+        print(f"  step time: ewma {mon.ewma * 1e3:.1f} ms over {mon.count} observed "
+              f"steps, straggler fraction {mon.straggler_fraction():.2%} "
+              f"(steps > {mon.threshold:.1f}x ewma after {mon.warmup}-step warmup)")
     lat = latency_stats(comps)
     if lat:
         q, t, tp = lat["queue_steps"], lat["ttft_steps"], lat["tokens_per_step"]
@@ -199,6 +206,15 @@ def run_continuous(eng: ServeEngine, reqs, config: ServeConfig, *, label: str) -
             a = lat["accepted_per_step"]
             print(f"  accepted tokens/verify-step: p50={a['p50']:.2f} "
                   f"p99={a['p99']:.2f} mean={a['mean']:.2f}")
+    if metrics_json:
+        with open(metrics_json, "w") as f:
+            f.write(sched.registry.to_json(label=label, requests=len(reqs),
+                                           wall_s=round(dt, 4)))
+        print(f"  metrics json -> {metrics_json}")
+    if trace_out and sched.tracer.enabled:
+        sched.tracer.export_chrome(trace_out)
+        print(f"  chrome trace -> {trace_out} ({len(sched.tracer)} events, "
+              f"{sched.tracer.dropped} dropped; load in Perfetto or chrome://tracing)")
 
 
 def main() -> None:
@@ -261,6 +277,23 @@ def main() -> None:
                          "dispatch (needs --mesh with a model axis > 1; "
                          "reduced MoE configs default to 'dispatch'). "
                          "No-op on dense archs")
+    ap.add_argument("--metrics-json", default="",
+                    help="--continuous: write the metrics-registry snapshot "
+                         "(counters/gauges/histograms, DESIGN.md §13) as JSON "
+                         "to this path after serving")
+    ap.add_argument("--trace-out", default="",
+                    help="--continuous: enable step-span tracing and write a "
+                         "Chrome trace_event JSON (Perfetto / chrome://tracing) "
+                         "to this path after serving")
+    ap.add_argument("--trace-capacity", type=int, default=4096,
+                    help="span-ring capacity for --trace-out (oldest records "
+                         "drop first; also bounds the scheduler event logs)")
+    ap.add_argument("--profile-dir", default="",
+                    help="--continuous: capture a jax.profiler trace of the "
+                         "first --profile-steps serve steps into this dir "
+                         "(open with TensorBoard or Perfetto)")
+    ap.add_argument("--profile-steps", type=int, default=8,
+                    help="--profile-dir: serve steps inside the capture window")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -324,10 +357,14 @@ def main() -> None:
             dcfg = core.SymogConfig(n_bits=args.draft_bits, total_steps=1)
             draft = core.pack_tree(params, core.symog_init(params, dcfg), dcfg)
             spec = SpeculativeConfig(draft=draft, k=args.draft_k)
+        tele = TelemetryConfig(trace=bool(args.trace_out),
+                               trace_capacity=args.trace_capacity,
+                               profile_dir=args.profile_dir,
+                               profile_steps=args.profile_steps)
         serve_cfg = ServeConfig(n_slots=args.slots, temperature=args.temperature,
                                 top_k=args.top_k, seed=args.seed,
                                 prefix_cache=args.prefix_cache, speculative=spec,
-                                prefill_chunk=args.prefill_chunk)
+                                prefill_chunk=args.prefill_chunk, telemetry=tele)
         warn_inert_flags(eng, serve_cfg)
         kv_pool_report(eng, serve_cfg)
         extras = {k: v for k, v in batch.items() if k != "tokens"} or None
@@ -335,7 +372,8 @@ def main() -> None:
                                     prompt_len=args.prompt_len, steps=args.steps,
                                     seed=args.seed, batch_extras=extras,
                                     system_len=args.system_prompt_len)
-        run_continuous(eng, reqs, serve_cfg, label="float")
+        run_continuous(eng, reqs, serve_cfg, label="float",
+                       metrics_json=args.metrics_json, trace_out=args.trace_out)
         if args.quantized or args.packed:
             scfg = core.SymogConfig(n_bits=args.n_bits, total_steps=1)
             sst = core.symog_init(params, scfg)
@@ -348,7 +386,9 @@ def main() -> None:
                 qeng = ServeEngine(cfg, core.quantize_tree(params, sst, scfg),
                                    max_len=max_len, compute_dtype=dtype, mesh=mesh)
                 label = f"quantized {args.n_bits}-bit"
-            run_continuous(qeng, reqs, serve_cfg, label=label)
+            run_continuous(qeng, reqs, serve_cfg, label=label,
+                           metrics_json=_suffixed(args.metrics_json, label.split()[0]),
+                           trace_out=_suffixed(args.trace_out, label.split()[0]))
         return
 
     t0 = time.time()

@@ -1,6 +1,6 @@
 from repro.serve.async_engine import AsyncServeEngine
 from repro.serve.blockpool import BlockPool
-from repro.serve.config import Capability, ServeConfig, capabilities
+from repro.serve.config import Capability, ServeConfig, TelemetryConfig, capabilities
 from repro.serve.engine import ServeEngine, greedy_generate
 from repro.serve.prefixcache import PrefixCache
 from repro.serve.scheduler import (
@@ -29,6 +29,7 @@ __all__ = [
     "ServeEngine",
     "SpeculativeConfig",
     "SpeculativeScheduler",
+    "TelemetryConfig",
     "capabilities",
     "greedy_generate",
     "latency_stats",

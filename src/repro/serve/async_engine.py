@@ -98,6 +98,8 @@ class AsyncServeEngine:
         if self._task is not None:
             await self._task
             self._task = None
+        if self.scheduler._profile is not None:
+            self.scheduler._profile.stop()  # idempotent; an armed window must not leak
 
     async def _drive(self) -> None:
         while not self._closed:
@@ -190,3 +192,25 @@ class AsyncServeEngine:
         """Await every submitted request; completions in submission order."""
         futs = [self._futures[i] for i in sorted(self._futures)]
         return list(await asyncio.gather(*futs)) if futs else []
+
+    # ------------------------------------------------------------------
+    # observability (DESIGN.md §13)
+    # ------------------------------------------------------------------
+    @property
+    def metrics(self):
+        """The scheduler's ``MetricsRegistry`` — snapshot(), to_prometheus()
+        and to_json() are safe to call while serving (point-in-time reads of
+        host-side numbers; a torn read across one step is the worst case)."""
+        return self.scheduler.registry
+
+    def timeline(self, idx: int) -> List:
+        """Request ``idx``'s lifecycle timeline so far — the live
+        (event, step) records for an in-flight request, or the sealed
+        ``Completion.timeline`` once it finished.  Taken under the scheduler
+        lock, so it never shows a half-committed step."""
+        with self._lock:
+            tl = self.scheduler._timelines.get(idx)
+            if tl is not None:
+                return list(tl)
+            comp = self.scheduler._completions.get(idx)
+            return list(comp.timeline) if comp is not None else []

@@ -58,6 +58,19 @@ class BlockPool:
         """Blocks parked in the cached-free tier: zero owners, contents indexed."""
         return sum(1 for bid in self._cached if self._refs[bid] == 0)
 
+    def occupancy(self) -> dict:
+        """Point-in-time occupancy snapshot for telemetry (DESIGN.md §13):
+        free/live/cached-free partition (sums to ``n_blocks``), plus the
+        cumulative peak and allocation counters."""
+        return {
+            "n_blocks": self.n_blocks,
+            "free": self.n_free,
+            "live": self.n_live,
+            "cached_free": self.n_cached_free,
+            "peak_live": self.peak_live,
+            "total_allocs": self.total_allocs,
+        }
+
     def refcount(self, bid: int) -> int:
         return self._refs[bid]
 

@@ -24,6 +24,49 @@ from typing import Any, Callable, Dict, Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Observability knobs for one scheduler (DESIGN.md §13).
+
+    Metrics (the registry behind ``Scheduler.stats`` plus gauges and
+    latency histograms) are ALWAYS on — they are host-side integer
+    arithmetic inside an accelerator-bound loop, held ≤ 5 % overhead by
+    the gated ``serve_telemetry_overhead`` bench.  The knobs here gate
+    the optional layers:
+
+    trace           — record step spans and instants into the ring
+                      tracer (off: the scheduler holds ``NULL_TRACER``);
+    trace_capacity  — ring capacity shared by the tracer AND the
+                      scheduler's ``events`` / ``admit_times`` logs:
+                      all three keep the most recent ``trace_capacity``
+                      records and silently drop the oldest beyond that,
+                      bounding memory on long-running serves;
+    profile_dir     — non-empty arms a ``jax.profiler`` capture window
+                      (TensorBoard trace) over the first
+                      ``profile_steps`` serve steps;
+    profile_steps   — capture-window length in serve steps;
+    straggler_warn  — warn once (one line on stderr) when the step-time
+                      monitor's straggler fraction exceeds this after
+                      warmup; 0 disables the warning (the gauges stay).
+    """
+
+    trace: bool = False
+    trace_capacity: int = 4096
+    profile_dir: str = ""
+    profile_steps: int = 8
+    straggler_warn: float = 0.25
+
+    def __post_init__(self):
+        if self.trace_capacity < 1:
+            raise ValueError(f"trace_capacity must be >= 1, got {self.trace_capacity}")
+        if self.profile_steps < 1:
+            raise ValueError(f"profile_steps must be >= 1, got {self.profile_steps}")
+        if not 0.0 <= self.straggler_warn <= 1.0:
+            raise ValueError(
+                f"straggler_warn is a fraction in [0, 1] (0 = off), got {self.straggler_warn}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Every serving knob in one validated object.
 
@@ -51,7 +94,10 @@ class ServeConfig:
                      ``Scheduler.submit``); replays after preemption are
                      deduplicated, so every token streams exactly once;
     time_admissions — record per-admission wall times
-                     (``Scheduler.admit_times``).
+                     (``Scheduler.admit_times``);
+    telemetry      — observability knobs (``TelemetryConfig``): span
+                     tracing, ring capacities, profiler window,
+                     straggler warning (DESIGN.md §13).
     """
 
     n_slots: int = 0
@@ -65,8 +111,13 @@ class ServeConfig:
     prefill_chunk: int = 0
     on_token: Optional[Callable[[int, int], None]] = None
     time_admissions: bool = False
+    telemetry: TelemetryConfig = TelemetryConfig()
 
     def __post_init__(self):
+        if not isinstance(self.telemetry, TelemetryConfig):
+            raise ValueError(
+                f"telemetry must be a TelemetryConfig, got {type(self.telemetry).__name__}"
+            )
         if self.n_slots < 0:
             raise ValueError(f"n_slots must be >= 0 (0 = auto), got {self.n_slots}")
         if self.temperature < 0:

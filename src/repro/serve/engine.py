@@ -195,7 +195,22 @@ class SchedulerFns:
         self._admits: Dict[Any, Any] = {}
         self._admits_prefix: Dict[Any, Any] = {}
         self.admit_compiles = 0
+        # tail/chunk traces alone (admit_compiles still counts BOTH kinds,
+        # its historical contract); the telemetry chunk-trace counter reads
+        # this so chunked-prefill recompiles are attributable separately
+        self.prefix_compiles = 0
         self.cow_copy = jax.jit(self._build_cow(), donate_argnums=(0,))
+
+    def decode_cache_size(self) -> int:
+        """Compiled-signature count of the shared decode trace (jit cache
+        size) — the scheduler's ``decode_trace_compiles`` telemetry reads
+        the delta against its construction-time baseline.  0 when the jax
+        version doesn't expose the probe (the counter then just stays flat,
+        which the steady-state regression test treats as vacuous pass)."""
+        try:
+            return int(self.decode_step._cache_size())
+        except Exception:
+            return 0
 
     def admit_step(self, bucket: int, block_size: int):
         """The admission trace for one (bucket, block geometry) pair."""
@@ -216,6 +231,7 @@ class SchedulerFns:
                 self._build_admit_prefix(*key), donate_argnums=(4,)
             )
             self.admit_compiles += 1
+            self.prefix_compiles += 1
         return self._admits_prefix[key]
 
     def _build_cow(self):

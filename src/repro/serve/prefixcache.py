@@ -76,20 +76,25 @@ def _common_prefix(a, b) -> int:
 class PrefixCache:
     """Radix index over one scheduler's ``BlockPool`` (module docstring)."""
 
-    def __init__(self, pool: BlockPool, block_size: int, fingerprint: str):
+    def __init__(self, pool: BlockPool, block_size: int, fingerprint: str, registry=None):
         self.pool = pool
         self.block_size = int(block_size)
         self.fingerprint = str(fingerprint)
         self._root = _Node(key=(), bid=-1, parent=None)
         self._nodes: Dict[int, _Node] = {}  # bid -> node
         self._tick = 0
-        self.stats = {
-            "hits": 0,
-            "misses": 0,
-            "hit_tokens": 0,
-            "inserted_blocks": 0,
-            "evicted_blocks": 0,
-        }
+        # with a registry (the scheduler passes its own, DESIGN.md §13) the
+        # stats dict becomes a view over prefix_* counters, so cache health
+        # lands in the same snapshot/exposition as the serve metrics; the
+        # dict shape is identical either way
+        if registry is not None:
+            from repro.obs import StatsView
+
+            self.stats = StatsView(registry, "prefix_")
+        else:
+            self.stats = {}
+        for key in ("hits", "misses", "hit_tokens", "inserted_blocks", "evicted_blocks"):
+            self.stats[key] = 0
 
     # ------------------------------------------------------------------
     # lookup

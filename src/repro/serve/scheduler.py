@@ -98,6 +98,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import sys
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -109,7 +110,10 @@ import jax.numpy as jnp
 
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.distributed.fault import StepTimeMonitor
 from repro.models.lm import PAGED_CACHE_LEAVES, scan_groups
+from repro.obs import NULL_TRACER, MetricsRegistry, RingLog, StatsView, StepTracer, log_buckets
+from repro.obs.profiling import make_profile_window
 from repro.serve.blockpool import BlockPool
 from repro.serve.config import ServeConfig
 from repro.serve.prefixcache import PrefixCache
@@ -141,6 +145,11 @@ class Completion:
     # for one-shot admission; later for chunked prefills; -1 if never sampled)
     spec_steps: int = 0  # speculative draft/verify rounds this request rode
     spec_tokens: int = 0  # tokens committed by those rounds (accepted + bonus)
+    # lifecycle timeline (DESIGN.md §13): ordered (event, step) records —
+    # submit/admit/chunk/token/preempt/finish/cancel.  'token' entries mark
+    # DELIVERY: a preemption replay re-delivers nothing, so their count is
+    # exactly len(tokens) whatever the slot history was
+    timeline: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -308,6 +317,16 @@ class Scheduler:
         # a per-scheduler jit cache would recompile on every serve() call)
         self._fns = engine.scheduler_fns(greedy=self.temperature <= 0.0, top_k=self.top_k)
         self._compiles0 = self._fns.admit_compiles
+        # telemetry core (DESIGN.md §13): the registry is always on; span
+        # tracing and the profiler window are opt-in knobs.  Created FIRST so
+        # every subsystem built below (prefix cache, pool gauges, stats view)
+        # can report into the same registry.
+        tele = config.telemetry
+        self.registry = MetricsRegistry()
+        self.tracer = StepTracer(tele.trace_capacity) if tele.trace else NULL_TRACER
+        self._profile = make_profile_window(tele.profile_dir, tele.profile_steps)
+        self.monitor = StepTimeMonitor()
+        self._straggler_warned = False
 
         self.block_size = blk = int(config.block_size)
         self.max_blocks = -(-engine.max_len // blk)
@@ -338,7 +357,9 @@ class Scheduler:
         # the cache is structurally inert.
         self.prefix: Optional[PrefixCache] = None
         if config.prefix_cache and not self._offset and caps["prefix_cache"]:
-            self.prefix = PrefixCache(self.pool, blk, engine.params_fingerprint())
+            self.prefix = PrefixCache(
+                self.pool, blk, engine.params_fingerprint(), registry=self.registry
+            )
             self.pool.set_reclaimer(self.prefix.reclaim)
         # chunked prefill (DESIGN.md §10) rides the §7 tail-prefill trace, so
         # it shares the tier test; inert elsewhere like the prefix cache
@@ -348,7 +369,11 @@ class Scheduler:
             else 0
         )
         self._time_admissions = bool(config.time_admissions)
-        self.admit_times: List[Tuple[int, float, int]] = []  # (req, seconds, hit_tokens)
+        # events / admit_times / the span tracer share trace_capacity and
+        # its oldest-first drop rule (see RingLog)
+        self.admit_times: List[Tuple[int, float, int]] = RingLog(
+            tele.trace_capacity
+        )  # (req, seconds, hit_tokens)
 
         self.caches = self._init_caches()
         # slot-table state lives ON DEVICE: the per-step loop feeds the
@@ -369,28 +394,84 @@ class Scheduler:
         self._streamed: Dict[int, int] = {}  # req idx -> tokens already streamed
         self.step_count = 0
         self._buckets_used: set = set()
-        self.stats = {
-            "decode_steps": 0,
-            "idle_steps": 0,
-            "prefill_only_steps": 0,
-            "prefills": 0,
-            "prefill_chunks": 0,
-            "chunked_admissions": 0,
-            "admissions": 0,
-            "evictions": 0,
-            "preemptions": 0,
-            "cancellations": 0,
-            "tokens_emitted": 0,
-            "admission_traces": 0,
-            "admission_trace_compiles": 0,
-            "peak_live_slots": 0,
-            "prefix_hits": 0,
-            "prefix_misses": 0,
-            "prefix_hit_tokens": 0,
-            "prefix_cow_copies": 0,
-            "prefix_evicted_blocks": 0,
-        }
-        self.events: List[Tuple[int, str, int, int]] = []  # (step, kind, req, slot)
+        # stats is a THIN VIEW over registry counters (StatsView): the dict
+        # shape every existing test/bench/launcher reads is unchanged, but
+        # serve_<key> counters now live in the registry alongside the gauges
+        # and histograms below — one snapshot answers everything
+        self.stats = StatsView(self.registry, "serve_")
+        for key in (
+            "decode_steps",
+            "idle_steps",
+            "prefill_only_steps",
+            "prefills",
+            "prefill_chunks",
+            "chunked_admissions",
+            "admissions",
+            "evictions",
+            "preemptions",
+            "cancellations",
+            "tokens_emitted",
+            "admission_traces",
+            "admission_trace_compiles",
+            "chunk_trace_compiles",
+            "decode_trace_compiles",
+            "peak_live_slots",
+            "prefix_hits",
+            "prefix_misses",
+            "prefix_hit_tokens",
+            "prefix_cow_copies",
+            "prefix_evicted_blocks",
+        ):
+            self.stats[key] = 0
+        self._decode_cache0 = self._fns.decode_cache_size()
+        self._prefix_compiles0 = self._fns.prefix_compiles
+        reg = self.registry
+        self._h_queue = reg.histogram(
+            "serve_queue_wait_steps",
+            "steps a finished request waited for a slot (restart wait included)",
+            log_buckets(1, 4096),
+        )
+        self._h_ttft = reg.histogram(
+            "serve_ttft_steps",
+            "arrival to first sampled token, in decode steps",
+            log_buckets(1, 4096),
+        )
+        self._h_itl = reg.histogram(
+            "serve_itl_seconds",
+            "wall time per committed token (per-row view of decode-step time)",
+            log_buckets(1e-5, 32.0, 4.0),
+        )
+        self._h_accept = reg.histogram(
+            "serve_accepted_per_step",
+            "tokens committed per (row, speculative round); vanilla decode is 1",
+            log_buckets(1, 16),
+        )
+        self._g_live = reg.gauge("serve_live_slots", "occupied decode slots")
+        self._g_queue = reg.gauge("serve_queue_depth", "requests waiting for admission")
+        self._g_pool_live = reg.gauge("serve_pool_live_blocks", "pool blocks held by live requests")
+        self._g_pool_free = reg.gauge("serve_pool_free_blocks", "immediately allocatable blocks")
+        self._g_pool_cached = reg.gauge(
+            "serve_pool_cached_free_blocks", "cached-free tier (prefix blocks reclaimable by LRU)"
+        )
+        self._g_ewma = reg.gauge("serve_step_time_ewma_seconds", "EWMA decode-step wall time")
+        self._g_straggler = reg.gauge(
+            "serve_straggler_fraction", "fraction of decode steps flagged slow by the monitor"
+        )
+        self._timelines: Dict[int, List[Tuple[str, int]]] = {}
+        self.events: List[Tuple[int, str, int, int]] = RingLog(
+            tele.trace_capacity
+        )  # (step, kind, req, slot); oldest dropped past trace_capacity
+        reg.gauge("serve_pool_bytes", "resident KV pool bytes (all devices)").set(
+            self.cache_bytes()
+        )
+        from repro.serve.sharding import pool_bytes_per_device
+
+        _, per_dev = pool_bytes_per_device(self.eng, blk, self.n_blocks)
+        reg.gauge(
+            "serve_pool_bytes_per_device",
+            "per-device resident paged-pool bytes (head-sharded data leaves divided; §12)",
+        ).set(per_dev)
+        self._sync_gauges()
 
     # ------------------------------------------------------------------
     # cache pool
@@ -506,6 +587,7 @@ class Scheduler:
             self._on_token[idx] = cb
         if on_finish is not None:
             self._on_finish[idx] = on_finish
+        self._timelines[idx] = [("submit", self.step_count)]
         self._queue.append((idx, prompt, budget, req))
         return idx
 
@@ -519,6 +601,10 @@ class Scheduler:
         for i, item in enumerate(self._queue):
             if item[0] == idx:
                 del self._queue[i]
+                tl = self._timelines.get(idx)
+                if tl is not None:
+                    tl.append(("cancel", self.step_count))
+                self.tracer.instant("cancel", req=idx)
                 self._seal(
                     Completion(
                         index=idx,
@@ -538,6 +624,10 @@ class Scheduler:
             if state is not None and state.index == idx:
                 self._emit_tokens(state)
                 self._release(slot)
+                tl = self._timelines.get(idx)
+                if tl is not None:
+                    tl.append(("cancel", self.step_count))
+                self.tracer.instant("cancel", req=idx, slot=slot)
                 self._seal(
                     Completion(
                         index=idx,
@@ -557,25 +647,31 @@ class Scheduler:
         return False
 
     def _seal(self, comp: Completion) -> None:
-        """Record a completion and fire its on_finish callback."""
+        """Record a completion, attach its lifecycle timeline, and fire its
+        on_finish callback."""
+        comp.timeline = self._timelines.pop(comp.index, [])
         self._completions[comp.index] = comp
         cb = self._on_finish.get(comp.index)
         if cb is not None:
             cb(comp)
 
     def _emit_tokens(self, state: _Slot) -> None:
-        """Stream any not-yet-streamed committed tokens of this request.
-        Dedup is by COUNT against the request's lifetime stream: preemption
-        replays are token-exact, so a replayed prefix is exactly what was
-        already delivered."""
-        cb = self._on_token.get(state.index)
-        if cb is None:
-            return
+        """Stream any not-yet-streamed committed tokens of this request and
+        record one 'token' timeline entry per delivery.  Dedup is by COUNT
+        against the request's lifetime stream: preemption replays are
+        token-exact, so a replayed prefix is exactly what was already
+        delivered — streamed once, one timeline entry."""
         n = self._streamed.get(state.index, 0)
+        if len(state.out) <= n:
+            return
+        cb = self._on_token.get(state.index)
+        tl = self._timelines.get(state.index)
         for t in state.out[n:]:
-            cb(state.index, int(t))
-        if len(state.out) > n:
-            self._streamed[state.index] = len(state.out)
+            if cb is not None:
+                cb(state.index, int(t))
+            if tl is not None:
+                tl.append(("token", self.step_count))
+        self._streamed[state.index] = len(state.out)
 
     def _bucket(self, lp: int) -> int:
         """Power-of-two padded prompt length, capped at the cache room."""
@@ -653,9 +749,11 @@ class Scheduler:
                 )
                 self.pool.free(src)
                 self.stats["prefix_cow_copies"] += 1
+                self.tracer.instant("cow", req=idx, src=src, dst=fresh[0])
             if matched:
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_hit_tokens"] += matched
+                self.tracer.instant("prefix_hit", req=idx, tokens=matched)
             elif self.prefix is not None and not req.extras:
                 self.stats["prefix_misses"] += 1
             self._admit_one(slot, idx, prompt, budget, req, shared + fresh, start=matched)
@@ -694,6 +792,9 @@ class Scheduler:
         self._slots[slot] = state
         self._n_live += 1
         self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"], self._n_live)
+        tl = self._timelines.get(idx)
+        if tl is not None:
+            tl.append(("admit", self.step_count))
         return state
 
     def _admit_one(
@@ -723,6 +824,8 @@ class Scheduler:
             self.events.append((self.step_count, "admit", idx, slot))
             return
         t0 = time.perf_counter() if self._time_admissions else 0.0
+        span = self.tracer.span("admit", step=self.step_count, req=idx, slot=slot, prompt=lp)
+        span.__enter__()
         row = np.zeros(self.max_blocks, np.int32)
         row[: len(blocks)] = np.asarray(blocks, np.int32) + 1  # physical ids
         self._block_tables = self._block_tables.at[slot].set(jnp.asarray(row))
@@ -766,13 +869,15 @@ class Scheduler:
                 self._temp,
             )
             self._buckets_used.add((bucket, self.block_size))
+        span.__exit__(None, None, None)
         self.stats["prefills"] += 1
         # admission_traces: distinct bucketed trace shapes THIS run admitted
         # through (each compiled at most once, engine-memoized across runs);
         # admission_trace_compiles: traces actually built fresh for this run
-        # (0 on a warm engine)
+        # (0 on a warm engine); chunk_trace_compiles the tail/chunk subset
         self.stats["admission_traces"] = len(self._buckets_used)
         self.stats["admission_trace_compiles"] = self._fns.admit_compiles - self._compiles0
+        self.stats["chunk_trace_compiles"] = self._fns.prefix_compiles - self._prefix_compiles0
         if self.prefix is not None and not req.extras:
             # index every prompt block (shared levels dedupe onto existing
             # nodes) while the blocks are still pinned by this table
@@ -800,23 +905,30 @@ class Scheduler:
         padded = np.zeros(bucket, np.int32)
         padded[:tail] = state.prompt[state.done : state.done + tail]
         admit = self._fns.admit_prefix_step(bucket, self.block_size)
-        first_t, self.caches = self.eng._with_backend(
-            admit,
-            self.eng.params,
-            {"tokens": jnp.asarray(padded[None])},
-            jnp.int32(tail),
-            jnp.int32(state.done),
-            self.caches,
-            jnp.asarray(state.row),  # device row stays zeroed until final
-            jnp.int32(_sample_seed(state.index, 0)),
-            self._base_key,
-            self._temp,
-        )
+        with self.tracer.span(
+            "chunk", step=self.step_count, req=state.index, slot=slot, done=state.done, tail=tail
+        ):
+            first_t, self.caches = self.eng._with_backend(
+                admit,
+                self.eng.params,
+                {"tokens": jnp.asarray(padded[None])},
+                jnp.int32(tail),
+                jnp.int32(state.done),
+                self.caches,
+                jnp.asarray(state.row),  # device row stays zeroed until final
+                jnp.int32(_sample_seed(state.index, 0)),
+                self._base_key,
+                self._temp,
+            )
         self._buckets_used.add(("prefix", bucket, self.block_size))
         state.done += tail
+        tl = self._timelines.get(state.index)
+        if tl is not None:
+            tl.append(("chunk", self.step_count))
         self.stats["prefill_chunks"] += 1
         self.stats["admission_traces"] = len(self._buckets_used)
         self.stats["admission_trace_compiles"] = self._fns.admit_compiles - self._compiles0
+        self.stats["chunk_trace_compiles"] = self._fns.prefix_compiles - self._prefix_compiles0
         if self._time_admissions:
             first_t.block_until_ready()
             state.admit_wall += time.perf_counter() - t0
@@ -893,6 +1005,13 @@ class Scheduler:
 
     def _finish(self, slot: int, reason: str) -> None:
         state = self._release(slot)
+        self._h_queue.observe(max(0, state.admitted_step - state.req.arrival))
+        if state.first_token_step >= 0:
+            self._h_ttft.observe(state.first_token_step - state.req.arrival + 1)
+        self.tracer.instant("evict", req=state.index, slot=slot, reason=reason)
+        tl = self._timelines.get(state.index)
+        if tl is not None:
+            tl.append(("finish", self.step_count))
         self._seal(
             Completion(
                 index=state.index,
@@ -918,6 +1037,10 @@ class Scheduler:
         self._queue.appendleft((state.index, state.prompt, state.budget, state.req))
         self.events.append((self.step_count, "preempt", state.index, slot))
         self.stats["preemptions"] += 1
+        self.tracer.instant("preempt", req=state.index, slot=slot)
+        tl = self._timelines.get(state.index)
+        if tl is not None:
+            tl.append(("preempt", self.step_count))
 
     def _grow_tables(self, horizon: int = 0) -> None:
         """Allocate blocks for every live row through position
@@ -963,6 +1086,38 @@ class Scheduler:
         """Live slots past their prefill (the decode dispatch's real rows)."""
         return sum(1 for st in self._slots if st is not None and not st.prefilling)
 
+    def _sync_gauges(self) -> None:
+        """Refresh the point-in-time occupancy gauges (host ints, per step)."""
+        self._g_live.set(self._n_live)
+        self._g_queue.set(len(self._queue))
+        self._g_pool_live.set(self.pool.n_live)
+        self._g_pool_free.set(self.pool.n_free)
+        self._g_pool_cached.set(self.pool.n_cached_free)
+
+    def _observe_step_time(self, dt: float) -> None:
+        """Feed one decode-step wall time to the straggler monitor, mirror
+        its EWMA/straggler-fraction into gauges, and warn ONCE when the
+        flagged fraction stays above ``telemetry.straggler_warn`` past
+        warmup (one line; the gauges keep tracking either way)."""
+        self.monitor.observe(dt)
+        self._g_ewma.set(self.monitor.ewma or 0.0)
+        frac = self.monitor.straggler_fraction()
+        self._g_straggler.set(frac)
+        warn = self.config.telemetry.straggler_warn
+        if (
+            warn
+            and not self._straggler_warned
+            and self.monitor.count > 2 * self.monitor.warmup
+            and frac > warn
+        ):
+            self._straggler_warned = True
+            print(
+                f"[serve] sustained stragglers: {frac:.0%} of {self.monitor.count} decode "
+                f"steps ran > {self.monitor.threshold:g}x the EWMA step time "
+                f"({self.monitor.ewma:.4g}s)",
+                file=sys.stderr,
+            )
+
     def step(self) -> bool:
         """Grow live requests' tables, admit what still fits, advance one
         prefill chunk per prefilling slot, run one ragged decode step over
@@ -971,17 +1126,21 @@ class Scheduler:
         request could be preempted by an older slot's boundary crossing in
         the same step, wasting its whole admission prefill.  Returns False
         once the queue is drained and every slot is idle."""
+        if self._profile is not None:
+            self._profile.on_step()
         self._grow_tables()
         self._admit()
         if self.prefix is not None:
             self.stats["prefix_evicted_blocks"] = self.prefix.stats["evicted_blocks"]
         if self._n_live == 0:
             if not self._queue:
+                self._sync_gauges()
                 return False
             # all live work done but arrivals are still in the future (or
             # the pool can't fit the next prompt yet): tick time forward
             self.step_count += 1
             self.stats["idle_steps"] += 1
+            self._sync_gauges()
             return True
 
         self._advance_prefills()
@@ -990,23 +1149,31 @@ class Scheduler:
             # the chunk pass above was this step's work; time still advances
             self.step_count += 1
             self.stats["prefill_only_steps"] += 1
+            self._sync_gauges()
             return bool(self._n_live or self._queue)
 
-        self._tokens, self._pos, self.caches = self.eng._with_backend(
-            self._fns.decode_step,
-            self.eng.params,
-            self.caches,
-            self._tokens,
-            self._pos,
-            self._active,
-            self._seed0,
-            self._block_tables,
-            self._base_key,
-            self._temp,
-        )
-        nxt = np.asarray(self._tokens)  # the loop's one host sync
+        t0 = time.perf_counter()
+        with self.tracer.span(
+            "decode", step=self.step_count, n_decode=self._n_decoding(), n_live=self._n_live
+        ):
+            self._tokens, self._pos, self.caches = self.eng._with_backend(
+                self._fns.decode_step,
+                self.eng.params,
+                self.caches,
+                self._tokens,
+                self._pos,
+                self._active,
+                self._seed0,
+                self._block_tables,
+                self._base_key,
+                self._temp,
+            )
+            nxt = np.asarray(self._tokens)  # the loop's one host sync
+        dt = time.perf_counter() - t0
         self.step_count += 1
         self.stats["decode_steps"] += 1
+        self.stats["decode_trace_compiles"] = self._fns.decode_cache_size() - self._decode_cache0
+        self._observe_step_time(dt)
 
         for s, state in enumerate(self._slots):
             if state is None or state.prefilling:
@@ -1015,17 +1182,23 @@ class Scheduler:
             tok = int(nxt[s])
             state.out.append(tok)
             self.stats["tokens_emitted"] += 1
+            self._h_itl.observe(dt)
             self._emit_tokens(state)
             if tok == state.eos_id:
                 self._finish(s, "eos")
             elif len(state.out) >= state.budget:
                 self._finish(s, "length")
+        self._sync_gauges()
         return bool(self._n_live or self._queue)
 
     def run(self) -> List[Completion]:
         """Drain the queue; completions are returned in submission order."""
-        while self.step():
-            pass
+        try:
+            while self.step():
+                pass
+        finally:
+            if self._profile is not None:
+                self._profile.stop()
         return [self._completions[i] for i in sorted(self._completions)]
 
 

@@ -60,6 +60,7 @@ and structurally inert — every step is a vanilla decode step
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -292,6 +293,7 @@ class SpeculativeScheduler(Scheduler):
                 "spec_drafted": 0,
                 "spec_accepted": 0,
                 "spec_emitted": 0,
+                "verify_trace_compiles": 0,  # depth-k verify traces built this run
             }
         )
         self.spec_fns: Optional[SpeculativeFns] = None
@@ -316,6 +318,7 @@ class SpeculativeScheduler(Scheduler):
             )
         self.draft_eng = draft
         self.spec_fns = engine.speculative_fns(greedy=self.temperature <= 0.0, top_k=self.top_k)
+        self._verify_compiles0 = self.spec_fns.verify_compiles
         self.draft_caches = self._init_caches()  # same geometry: cfg and dtypes match
 
     # ------------------------------------------------------------------
@@ -380,6 +383,8 @@ class SpeculativeScheduler(Scheduler):
     def step(self) -> bool:
         if self.spec_fns is None:
             return super().step()
+        if self._profile is not None:
+            self._profile.on_step()
         # growth runs twice: existing rows reserve their draft windows
         # before admission spends blocks (the §6 step-order rule), and a
         # second pass covers freshly admitted rows' windows — under
@@ -390,17 +395,23 @@ class SpeculativeScheduler(Scheduler):
         self._grow_tables(horizon=depth)
         if self._n_live == 0:
             if not self._queue:
+                self._sync_gauges()
                 return False
             self.step_count += 1
             self.stats["idle_steps"] += 1
+            self._sync_gauges()
             return True
         self._spec_round(depth)
+        self._sync_gauges()
         return bool(self._n_live or self._queue)
 
     def _spec_round(self, k: int) -> None:
         fns, eng = self.spec_fns, self.eng
         greedy = self.temperature <= 0.0
         draft_key = jax.random.fold_in(self._base_key, _DRAFT_TAG)
+        t0 = time.perf_counter()
+        span = self.tracer.span("verify", step=self.step_count, k=k, n_live=self._n_live)
+        span.__enter__()
         # draft phase: k+1 single-token self-decode steps on the draft pool
         # (chained on device, no host sync).  The (k+1)-th step only writes
         # d_k's draft KV so a fully-accepted round leaves no hole for the
@@ -446,10 +457,14 @@ class SpeculativeScheduler(Scheduler):
         )
         out_np = np.asarray(out_t)  # the round's one host sync
         m_np = np.asarray(m_t)
+        span.__exit__(None, None, None)
+        dt = time.perf_counter() - t0
         self.step_count += 1
         self.stats["decode_steps"] += 1
         self.stats["spec_steps"] += 1
         self.stats["spec_drafted"] += k * self._n_live
+        self.stats["verify_trace_compiles"] = fns.verify_compiles - self._verify_compiles0
+        self._observe_step_time(dt)
 
         for s in range(self.n_slots):
             state = self._slots[s]
@@ -467,6 +482,10 @@ class SpeculativeScheduler(Scheduler):
             state.pos += ncommit
             self._emit_tokens(state)
             self.stats["tokens_emitted"] += ncommit
+            self._h_accept.observe(ncommit)
+            per_tok = dt / max(1, ncommit)  # this row's per-token wall time view
+            for _ in range(ncommit):
+                self._h_itl.observe(per_tok)
             self.stats["spec_accepted"] += min(accepted, ncommit)
             self.stats["spec_emitted"] += ncommit
             self.stats["spec_row_rounds"] += 1
